@@ -1,0 +1,58 @@
+"""Table 2 / Fig. 14 / Fig. 15 analogue — structural cost comparison.
+
+No silicon here, so the paper's area/power numbers map to the costs a
+compiler system can count (DESIGN.md §2):
+
+  * routing-resource analogue: crossbar needs O(n^2) switch points;
+    EARTH's layered shift network needs n*log2(n) 2:1 selects,
+  * bytes-moved analogue: one-hot-matmul "crossbar" data reorganization
+    moves n^2 matrix bytes; the shift network moves n*log2(n),
+  * scratch analogue: segment buffer 2x8xMLEN vs 0 (RCVRF in place),
+and cross-checks wall time of both reorganization strategies under XLA.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_jit
+from repro.core import scg, shiftnet
+
+
+def crossbar_gather(window, onehot):
+    """Arbitrary byte remap as a one-hot matmul — the 'crossbar'."""
+    return onehot @ window
+
+
+def run() -> None:
+    for n in (128, 256, 512, 1024):
+        layers = max(1, math.ceil(math.log2(n)))
+        emit(f"hwcost/switches_n{n}", 0.0,
+             f"crossbar={n*n} shiftnet={n*layers} "
+             f"ratio={n*n/(n*layers):.1f}x")
+
+    # bytes moved + wall time for an actual strided reorganization
+    for n, stride in ((512, 4), (1024, 8)):
+        vl = n // stride
+        window = jnp.arange(n, dtype=jnp.float32)
+        shift, valid = scg.gather_counts(n, stride, 0, vl)
+        onehot = jnp.zeros((vl, n), jnp.float32).at[
+            jnp.arange(vl), jnp.arange(vl) * stride].set(1.0)
+        t_net = time_jit(
+            lambda w: shiftnet.gather_network(w, shift, valid).payload,
+            window)
+        t_xbar = time_jit(crossbar_gather, window, onehot)
+        layers = math.ceil(math.log2(n))
+        emit(f"hwcost/reorg_n{n}_s{stride}", t_net,
+             f"crossbar_us={t_xbar:.1f} "
+             f"bytes_net={4*n*layers} bytes_xbar={4*n*vl} "
+             f"flops_xbar={2*n*vl}")
+
+    emit("hwcost/segment_scratch", 0.0,
+         "earth_bytes=0 saturn_dual_buffer_bytes=" + str(2 * 8 * 512))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""Fig. 13 analogue — segment (AoS<->SoA) handling, buffer-free vs buffer.
+
+EARTH claims parity in performance with a segment buffer while removing the
+2 x 8 x MLEN buffer. We compare, per FIELDS in 2..8:
+
+  * EARTH path: in-place field-wise shift-network deinterleave,
+  * buffer path: materialized (FIELDS, m) transpose scratch then row reads
+    (the Saturn segment-buffer dataflow),
+and report wall time + scratch bytes (the Fig. 14 area claim analogue).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_jit
+from repro.kernels import ops
+
+MLEN = 128
+
+
+def buffer_path(aos, fields):
+    m = aos.shape[-1] // fields
+    buf = aos.reshape(aos.shape[:-1] + (m, fields))      # segment buffer
+    buf = jnp.swapaxes(buf, -1, -2)                      # bulk transpose
+    return [buf[..., f, :] for f in range(fields)]
+
+
+def run() -> None:
+    rows = 64
+    for fields in (2, 3, 4, 5, 6, 7, 8):
+        m = MLEN
+        aos = jnp.arange(rows * fields * m,
+                         dtype=jnp.float32).reshape(rows, fields * m)
+        t_earth = time_jit(lambda a: ops.deinterleave(a, fields), aos)
+        t_buf = time_jit(lambda a: buffer_path(a, fields), aos)
+        scratch_buffer = 2 * 8 * MLEN * 4  # dual 8xMLEN f32 buffers (paper)
+        emit(f"segment/f{fields}", t_earth,
+             f"buffer_us={t_buf:.1f} ratio={t_buf/max(t_earth,1e-9):.2f}x "
+             f"scratch_bytes_earth=0 scratch_bytes_buffer={scratch_buffer}")
+        # round-trip (segment store) parity check
+        parts = ops.deinterleave(aos, fields)
+        back = ops.interleave(parts)
+        assert bool(jnp.all(back == aos))
+
+
+if __name__ == "__main__":
+    run()

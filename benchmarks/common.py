@@ -1,0 +1,24 @@
+"""Shared benchmark helpers: timing and CSV emission."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_jit(fn, *args, iters: int = 20, warmup: int = 3) -> float:
+    """Median wall time (us) of a jitted call on this host."""
+    f = jax.jit(fn)
+    for _ in range(warmup):
+        jax.block_until_ready(f(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(f(*args))
+        times.append((time.perf_counter() - t0) * 1e6)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(name: str, us: float, derived: str) -> None:
+    print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,48 @@
+"""Render the §Roofline table for EXPERIMENTS.md from dry-run artifacts."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ARTIFACT_DIR = "experiments/artifacts"
+
+
+def load_all(art_dir: str = ARTIFACT_DIR) -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def fmt_row(r: dict) -> str:
+    ro = r.get("roofline", {})
+    mem = r["bytes_per_device"]["peak_est"] / 2**30
+    return ("| {arch} | {shape} | {mesh} | {mem:.1f} | {fits} | "
+            "{c:.3f} | {m:.3f} | {l:.3f} | {dom} | {mf:.2e} | {ur:.2f} |"
+            .format(arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+                    mem=mem, fits="y" if r["fits_hbm"] else "N",
+                    c=ro.get("compute_s", float("nan")),
+                    m=ro.get("memory_s", float("nan")),
+                    l=ro.get("collective_s", float("nan")),
+                    dom=ro.get("dominant", "-"),
+                    mf=ro.get("model_flops", float("nan")),
+                    ur=ro.get("useful_ratio", float("nan"))))
+
+
+HEADER = ("| arch | shape | mesh | peak GiB/dev | fits | compute s | "
+          "memory s | collective s | dominant | MODEL_FLOPS | useful |\n"
+          "|---|---|---|---|---|---|---|---|---|---|---|")
+
+
+def run() -> None:
+    rows = load_all()
+    print(HEADER)
+    for r in rows:
+        print(fmt_row(r))
+    print(f"# {len(rows)} cells")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,35 @@
+"""Benchmark harness — one suite per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. The roofline table (from dry-run
+artifacts, if present) is appended at the end.
+
+  Fig. 11 -> bench_diverse      Fig. 12 -> bench_strided
+  Fig. 13 -> bench_segment      Table 2 / Fig. 14/15 -> bench_hw_cost
+  (framework) MoE dispatch -> bench_moe
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def main() -> None:
+    from benchmarks import (bench_diverse, bench_hw_cost, bench_moe,
+                            bench_segment, bench_strided, roofline_table)
+    print("name,us_per_call,derived")
+    for mod in (bench_diverse, bench_strided, bench_segment, bench_hw_cost,
+                bench_moe):
+        mod.run()
+    print()
+    print("# Roofline table (from experiments/artifacts, if populated):")
+    try:
+        roofline_table.run()
+    except Exception as e:  # noqa: BLE001
+        print(f"# (no artifacts: {e})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""repro — EARTH-JAX: TPU-native vector memory access framework.
+
+A production-grade JAX training/inference framework whose data-movement
+substrate implements the EARTH paper (shift-network gather/scatter, LSDO
+strided coalescing, RCVRF skewed layouts) adapted from a RISC-V VLSU to the
+TPU memory hierarchy. See DESIGN.md.
+"""
+__version__ = "1.0.0"

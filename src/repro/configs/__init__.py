@@ -1,0 +1,3 @@
+"""Arch registry: configs for the 10 assigned architectures + shape cells."""
+from repro.configs.base import (ARCH_IDS, SHAPES, ArchConfig, ShapeCell,  # noqa: F401
+                                cells_for, get_arch, shape_by_name)

@@ -1,0 +1,155 @@
+"""Config substrate: shape cells, arch registry, and input spec builders.
+
+Every assigned architecture ships as ``configs/<id>.py`` exposing:
+  * ``config()``       — the exact published geometry (dry-run only;
+                          full params are never materialized on CPU),
+  * ``smoke_config()`` — a reduced same-family config for CPU smoke tests.
+
+Shape cells follow the assignment: train_4k / prefill_32k / decode_32k /
+long_500k; ``long_500k`` only runs for sub-quadratic archs (see
+``runs_long_context`` and DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                  # "train" | "prefill" | "decode"
+
+
+SHAPES: tuple[ShapeCell, ...] = (
+    ShapeCell("train_4k", 4096, 256, "train"),
+    ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    ShapeCell("decode_32k", 32768, 128, "decode"),
+    ShapeCell("long_500k", 524288, 1, "decode"),
+)
+
+
+def shape_by_name(name: str) -> ShapeCell:
+    for s in SHAPES:
+        if s.name == name:
+            return s
+    raise KeyError(name)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    model: ModelConfig
+    smoke: ModelConfig
+    runs_long_context: bool       # sub-quadratic family?
+    family: str                   # dense|moe|hybrid|ssm|audio|vlm
+    notes: str = ""
+
+
+ARCH_IDS = (
+    "granite-34b", "gemma3-12b", "qwen3-0.6b", "starcoder2-3b",
+    "jamba-1.5-large-398b", "whisper-tiny", "llava-next-mistral-7b",
+    "phi3.5-moe-42b-a6.6b", "qwen3-moe-30b-a3b", "xlstm-125m",
+)
+
+_MODULES = {
+    "granite-34b": "granite_34b",
+    "gemma3-12b": "gemma3_12b",
+    "qwen3-0.6b": "qwen3_0_6b",
+    "starcoder2-3b": "starcoder2_3b",
+    "jamba-1.5-large-398b": "jamba_1_5_large",
+    "whisper-tiny": "whisper_tiny",
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+    "phi3.5-moe-42b-a6.6b": "phi3_5_moe",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b",
+    "xlstm-125m": "xlstm_125m",
+}
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.arch()
+
+
+def cells_for(name: str) -> list[ShapeCell]:
+    a = get_arch(name)
+    out = []
+    for s in SHAPES:
+        if s.name == "long_500k" and not a.runs_long_context:
+            continue
+        out.append(s)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Input builders. ``specs=True`` returns ShapeDtypeStructs (dry-run, no
+# allocation); otherwise concrete arrays (smoke tests).
+# ---------------------------------------------------------------------------
+
+def _maybe_struct(shape, dtype, specs: bool, key=None, vocab: int = 0):
+    if specs:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    if key is None:
+        key = jax.random.key(0)
+    if jnp.issubdtype(dtype, jnp.integer):
+        return jax.random.randint(key, shape, 0, max(vocab, 2), dtype)
+    return jax.random.normal(key, shape, dtype)
+
+
+def train_batch(cfg: ModelConfig, seq: int, batch: int, *,
+                specs: bool = True, key=None) -> dict[str, Any]:
+    key = jax.random.key(0) if key is None else key
+    ks = jax.random.split(key, 4)
+    b = {
+        "tokens": _maybe_struct((batch, seq), jnp.int32, specs, ks[0],
+                                cfg.vocab),
+        "labels": _maybe_struct((batch, seq), jnp.int32, specs, ks[1],
+                                cfg.vocab),
+        "loss_weight": _maybe_struct((batch, seq), jnp.float32, specs, ks[2]),
+    }
+    if cfg.vlm_patches:
+        n = min(cfg.vlm_patches, seq)
+        b["patch_embeds"] = _maybe_struct((batch, n, cfg.d_model),
+                                          cfg.cdtype, specs, ks[3])
+    if cfg.encoder is not None:
+        b["audio_frames"] = _maybe_struct(
+            (batch, cfg.encoder.context, cfg.d_model), cfg.cdtype, specs,
+            ks[3])
+    return b
+
+
+def prefill_batch(cfg: ModelConfig, seq: int, batch: int, *,
+                  specs: bool = True, key=None) -> dict[str, Any]:
+    b = train_batch(cfg, seq, batch, specs=specs, key=key)
+    b.pop("labels", None)
+    b.pop("loss_weight", None)
+    return b
+
+
+def decode_inputs(cfg: ModelConfig, seq: int, batch: int, *,
+                  specs: bool = True, cache_dtype=jnp.bfloat16, key=None):
+    """(cache, token) for a one-token serve_step with a seq-length cache."""
+    from repro.models import decode as dec
+    from repro.models import encdec
+    init = (encdec.init_cache if cfg.encoder is not None
+            else dec.init_cache)
+    if specs:
+        # never allocate the (possibly huge) cache on host: eval_shape only
+        cache = jax.eval_shape(lambda: init(cfg, batch, seq, cache_dtype))
+        token = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    else:
+        cache = init(cfg, batch, seq, cache_dtype)
+        cache["len"] = jnp.asarray(seq // 2, jnp.int32)
+        token = jax.random.randint(
+            jax.random.key(1) if key is None else key, (batch,), 0,
+            cfg.vocab, jnp.int32)
+    return cache, token

@@ -1,0 +1,4 @@
+"""EARTH core: shift networks, shift-count generation, LSDO coalescing,
+and the row/column-accessible register-file layout — the paper's
+contribution as composable JAX modules."""
+from repro.core import drom, lsdo, rcvrf, scg, shiftnet  # noqa: F401

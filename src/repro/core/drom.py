@@ -1,0 +1,72 @@
+"""DROM — the unified Data ReOrganization Module API (EARTH §4.3).
+
+High-level, batched entry points used by the rest of the framework.  Each
+op dispatches to either the pure-JAX reference (XLA path — also what the
+512-device dry-run lowers) or the Pallas TPU kernels (validated in
+interpret mode on CPU, compiled for real TPUs).
+
+Semantics are defined by kernels/ref.py; this module only routes.
+"""
+from __future__ import annotations
+
+from typing import Literal, Sequence
+
+import jax
+
+Impl = Literal["ref", "pallas"]
+_DEFAULT: Impl = "ref"
+
+
+def default_impl() -> Impl:
+    try:
+        platform = jax.devices()[0].platform
+    except Exception:  # pragma: no cover
+        platform = "cpu"
+    return "pallas" if platform == "tpu" else _DEFAULT
+
+
+def gather_strided(window: jax.Array, stride: int, offset: int, vl: int,
+                   *, impl: Impl | None = None) -> jax.Array:
+    """Dense (..., vl) from strided positions of a coalesced (..., n) window."""
+    from repro.kernels import ops
+    return ops.gather_strided(window, stride, offset, vl,
+                              impl=impl or default_impl())
+
+
+def scatter_strided(window: jax.Array, values: jax.Array, stride: int,
+                    offset: int, *, impl: Impl | None = None) -> jax.Array:
+    """Place (..., vl) dense values at strided positions of (..., n) window."""
+    from repro.kernels import ops
+    return ops.scatter_strided(window, values, stride, offset,
+                               impl=impl or default_impl())
+
+
+def deinterleave(aos: jax.Array, fields: int, *,
+                 impl: Impl | None = None) -> list[jax.Array]:
+    """AoS (..., fields*m) -> [ (..., m) ] * fields   (segment load)."""
+    from repro.kernels import ops
+    return ops.deinterleave(aos, fields, impl=impl or default_impl())
+
+
+def interleave(soa: Sequence[jax.Array], *, impl: Impl | None = None) -> jax.Array:
+    """[ (..., m) ] * fields -> AoS (..., fields*m)   (segment store)."""
+    from repro.kernels import ops
+    return ops.interleave(list(soa), impl=impl or default_impl())
+
+
+def compact_rows(rows: jax.Array, mask: jax.Array, *,
+                 impl: Impl | None = None) -> tuple[jax.Array, jax.Array]:
+    """Pack masked (n, d) rows to the front, order preserved.
+
+    Returns (packed_rows, packed_valid). The EARTH gather network with
+    prefix-sum SCG — the MoE dispatch primitive."""
+    from repro.kernels import ops
+    return ops.compact_rows(rows, mask, impl=impl or default_impl())
+
+
+def expand_rows(packed: jax.Array, mask: jax.Array, *,
+                impl: Impl | None = None) -> jax.Array:
+    """Inverse of compact_rows: scatter packed rows back to mask positions
+    (zeros elsewhere)."""
+    from repro.kernels import ops
+    return ops.expand_rows(packed, mask, impl=impl or default_impl())

@@ -1,0 +1,129 @@
+"""LSDO — Load/Store Data Organization (EARTH §4.4, §5.1).
+
+The Load/Store Address Sequencer (LAS/SAS) splits a strided vector access
+into the *minimum* number of aligned-MLEN transactions: all elements falling
+into the same aligned region are coalesced into one memory request (the
+paper's headline win: 32 one-byte requests -> 1 cache-line request).
+
+TPU adaptation: an "aligned MLEN region" is a contiguous tile of the source
+buffer (one HBM->VMEM block transfer); the per-transaction reorganization is
+the GSN/SSN shift network.  The planner below is static Python (strides and
+vector lengths are compile-time at our call sites), producing a plan the JAX
+apply functions consume — mirroring how LAS produces LIFQ entries consumed by
+the datapath.
+
+Negative strides are handled by the Reverser (EARTH §3.2.2): plan on the
+reversed element order, then reverse the assembled output.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import scg, shiftnet
+
+
+@dataclasses.dataclass(frozen=True)
+class Transaction:
+    """One coalesced memory request (a LIFQ/SIFQ entry)."""
+    region: int        # aligned region index (region_start = region * mlen)
+    first_elem: int    # index of the first vector element served
+    count: int         # number of vector elements served by this request
+    offset: int        # in-region offset of the first element
+
+
+@dataclasses.dataclass(frozen=True)
+class AccessPlan:
+    base: int
+    stride: int        # in elements; may be negative (Reverser engaged)
+    vl: int
+    mlen: int          # elements per aligned region / transaction
+    reversed: bool
+    transactions: tuple[Transaction, ...]
+
+    @property
+    def num_transactions(self) -> int:
+        return len(self.transactions)
+
+    @property
+    def element_wise_transactions(self) -> int:
+        """What Saturn-style element-wise access would issue."""
+        return self.vl
+
+    @property
+    def coalescing_factor(self) -> float:
+        return self.vl / max(1, len(self.transactions))
+
+
+def plan_strided(base: int, stride: int, vl: int, mlen: int) -> AccessPlan:
+    """LAS/SAS split: group elements by aligned region (order-preserving)."""
+    if vl <= 0:
+        return AccessPlan(base, stride, vl, mlen, False, ())
+    rev = stride < 0
+    b, s = (base + (vl - 1) * stride, -stride) if rev else (base, stride)
+    s = max(s, 1) if stride == 0 else s  # stride 0 == broadcast: one region
+    txs: list[Transaction] = []
+    cur_region, first, count, off = None, 0, 0, 0
+    for i in range(vl):
+        addr = b + i * s
+        region, in_off = addr // mlen, addr % mlen
+        if region != cur_region:
+            if count:
+                txs.append(Transaction(cur_region, first, count, off))
+            cur_region, first, count, off = region, i, 1, in_off
+        else:
+            count += 1
+    txs.append(Transaction(cur_region, first, count, off))
+    return AccessPlan(base, stride, vl, mlen, rev, tuple(txs))
+
+
+def load_strided(buffer: jax.Array, plan: AccessPlan) -> jax.Array:
+    """Gather ``vl`` strided elements via coalesced regions + GSN.
+
+    buffer: flat (N,) array. Returns (vl,) dense elements.
+    """
+    s = abs(plan.stride) if plan.stride != 0 else 1
+    pieces = []
+    for tx in plan.transactions:
+        region = jax.lax.dynamic_slice(buffer, (tx.region * plan.mlen,),
+                                       (plan.mlen,))
+        shift, valid = scg.gather_counts(plan.mlen, s, tx.offset, tx.count)
+        routed = shiftnet.gather_network(region, shift, valid)
+        pieces.append(jax.lax.slice(routed.payload, (0,), (tx.count,)))
+    out = jnp.concatenate(pieces) if len(pieces) > 1 else pieces[0]
+    if plan.reversed:
+        out = out[::-1]
+    return out
+
+
+def store_strided(buffer: jax.Array, values: jax.Array, plan: AccessPlan) -> jax.Array:
+    """Scatter ``vl`` dense elements to strided positions via SSN + coalesced
+    region writes. Returns the updated buffer (functional)."""
+    s = abs(plan.stride) if plan.stride != 0 else 1
+    vals = values[::-1] if plan.reversed else values
+    for tx in plan.transactions:
+        piece = jax.lax.dynamic_slice(vals, (tx.first_elem,), (tx.count,))
+        piece = jnp.pad(piece, (0, plan.mlen - tx.count))
+        shift, valid = scg.scatter_counts(plan.mlen, s, tx.offset, tx.count)
+        routed = shiftnet.scatter_network(piece, shift, valid)
+        start = tx.region * plan.mlen
+        old = jax.lax.dynamic_slice(buffer, (start,), (plan.mlen,))
+        merged = jnp.where(routed.valid, routed.payload, old)
+        buffer = jax.lax.dynamic_update_slice(buffer, merged, (start,))
+    return buffer
+
+
+def plan_segment_unit(base: int, fields: int, vl: int, mlen: int) -> list[AccessPlan]:
+    """Field-wise segment unit-stride access (EARTH §5.2): FIELDS strided
+    plans, one per field, each with stride=FIELDS, offset advanced by EEWB."""
+    return [plan_strided(base + f, fields, vl, mlen) for f in range(fields)]
+
+
+def transactions_saved(plans: Sequence[AccessPlan]) -> tuple[int, int]:
+    """(coalesced, element_wise) request counts — the Fig. 12 x-axis quantity."""
+    co = sum(p.num_transactions for p in plans)
+    ew = sum(p.element_wise_transactions for p in plans)
+    return co, ew

@@ -1,0 +1,147 @@
+"""RCVRF — Row/Column-accessible Vector Register File (EARTH §4.5).
+
+The paper skews register blocks diagonally across banks::
+
+    (VREG_i, Block_j)  ->  Bank_k, Row_r
+    k = (i + j) mod nBanks
+    r = (floor(i / nBanks) * VLEN/ELEN + i mod nBanks) mod nRows
+
+so both a whole register (row access) and "block j of registers
+V_b..V_{b+7}" (column access) touch all banks exactly once — conflict-free
+parallel access without a segment buffer.
+
+TPU adaptation: banks become lane groups of a VMEM tile.  A "bank conflict"
+on TPU is a gather across lanes; the skew turns column access into a row
+access plus a *rotate* (static per row / cheap dynamic lane rotate), which is
+exactly the Block Circular Shifter of Fig. 5 (c1).  The same trick is used by
+the Pallas segment kernel to transpose AoS beats in place.
+
+This module keeps the mapping math and a functional reference VRF; it is the
+oracle for kernels/segment.py and the basis of the Fig. 13/14 analogues.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import scg, shiftnet
+
+
+@dataclasses.dataclass(frozen=True)
+class VRFSpec:
+    vlen: int = 256          # bits per architectural register
+    elen: int = 64           # bits per block
+    n_regs: int = 32
+    n_banks: int = 8
+    elem_bits: int = 8       # granularity we route at (one "element")
+
+    @property
+    def blocks_per_reg(self) -> int:
+        return self.vlen // self.elen
+
+    @property
+    def n_rows(self) -> int:
+        return self.vlen * self.n_regs // (self.elen * self.n_banks)
+
+    @property
+    def elems_per_block(self) -> int:
+        return self.elen // self.elem_bits
+
+
+def bank_of(spec: VRFSpec, reg: int, block: int) -> int:
+    return (reg + block) % spec.n_banks
+
+
+def row_of(spec: VRFSpec, reg: int, block: int) -> int:
+    del block  # row depends only on the register (paper §4.5.1)
+    return ((reg // spec.n_banks) * spec.blocks_per_reg
+            + reg % spec.n_banks) % spec.n_rows
+
+
+def locate(spec: VRFSpec, reg: int, block: int) -> tuple[int, int]:
+    return bank_of(spec, reg, block), row_of(spec, reg, block)
+
+
+def empty_vrf(spec: VRFSpec, dtype=jnp.uint8) -> jax.Array:
+    """Physical storage: (n_rows, n_banks, elems_per_block)."""
+    return jnp.zeros((spec.n_rows, spec.n_banks, spec.elems_per_block), dtype)
+
+
+# ---------------------------------------------------------------------------
+# Row access (single architectural register) — Block Shifter only.
+# ---------------------------------------------------------------------------
+
+def write_row(spec: VRFSpec, vrf: jax.Array, reg: int, data: jax.Array) -> jax.Array:
+    """Write one architectural register. data: (blocks_per_reg * elems_per_block,)."""
+    blocks = data.reshape(spec.blocks_per_reg, spec.elems_per_block)
+    # Block Circular Shifter: rotate so block j lands in bank (reg+j)%nB.
+    row = row_of(spec, reg, 0)
+    banked = jnp.zeros((spec.n_banks, spec.elems_per_block), blocks.dtype)
+    banked = banked.at[jnp.arange(spec.blocks_per_reg)].set(blocks)
+    banked = jnp.roll(banked, shift=reg % spec.n_banks, axis=0)
+    if spec.blocks_per_reg == spec.n_banks:
+        return vrf.at[row].set(banked)
+    # partial-row registers: only touch this register's banks
+    mask = jnp.zeros((spec.n_banks, 1), bool)
+    mask = mask.at[jnp.arange(spec.blocks_per_reg)].set(True)
+    mask = jnp.roll(mask, shift=reg % spec.n_banks, axis=0)
+    return vrf.at[row].set(jnp.where(mask, banked, vrf[row]))
+
+
+def read_row(spec: VRFSpec, vrf: jax.Array, reg: int) -> jax.Array:
+    row = row_of(spec, reg, 0)
+    banked = jnp.roll(vrf[row], shift=-(reg % spec.n_banks), axis=0)
+    return banked[: spec.blocks_per_reg].reshape(-1)
+
+
+# ---------------------------------------------------------------------------
+# Column access (same block of consecutive registers) — Block Shifter + DROM.
+# Used by segment ops: one memory beat per segment touches all banks once.
+# ---------------------------------------------------------------------------
+
+def read_column(spec: VRFSpec, vrf: jax.Array, base_reg: int, block: int,
+                byte: int, count: int) -> jax.Array:
+    """Collect element ``byte`` of block ``block`` from registers
+    base_reg .. base_reg+count-1 (count <= n_banks).
+
+    Reads every bank once (conflict-free), rotates (Block Shifter), then a
+    GSN pass with stride = elems_per_block consolidates the target bytes —
+    EARTH §4.5.2's "const stride value of EMUL x ELEN/8".
+    """
+    rows = jnp.array([row_of(spec, base_reg + i, 0) for i in range(count)])
+    banks = jnp.array([bank_of(spec, base_reg + i, block) for i in range(count)])
+    beats = vrf[rows, banks]                     # (count, elems_per_block)
+    flat = beats.reshape(-1)
+    # gather element ``byte`` of each beat: stride=elems_per_block, offset=byte
+    # (the paper's "const stride value of EMUL x ELEN/8", element granularity)
+    shift, valid = scg.gather_counts(flat.shape[0], spec.elems_per_block,
+                                     byte, count)
+    routed = shiftnet.gather_network(flat, shift, valid)
+    return jax.lax.slice(routed.payload, (0,), (count,))
+
+
+def write_column(spec: VRFSpec, vrf: jax.Array, base_reg: int, block: int,
+                 byte: int, values: jax.Array) -> jax.Array:
+    """Scatter values[i] into element ``byte`` of block ``block`` of register
+    base_reg+i — one conflict-free parallel bank write (segment load beat)."""
+    count = values.shape[0]
+    n = spec.n_banks * spec.elems_per_block
+    vals = jnp.pad(values, (0, n - count))
+    shift, valid = scg.scatter_counts(n, spec.elems_per_block, byte, count)
+    routed = shiftnet.scatter_network(vals, shift, valid)
+    spread = routed.payload.reshape(spec.n_banks, spec.elems_per_block)
+    vmask = routed.valid.reshape(spec.n_banks, spec.elems_per_block)
+    rows = jnp.array([row_of(spec, base_reg + i, 0) for i in range(count)])
+    banks = jnp.array([bank_of(spec, base_reg + i, block) for i in range(count)])
+    idx = jnp.arange(count)
+    return vrf.at[rows, banks].set(
+        jnp.where(vmask[idx], spread[idx], vrf[rows, banks]))
+
+
+def column_banks_distinct(spec: VRFSpec, base_reg: int, block: int,
+                          count: int) -> bool:
+    """Conflict-freeness invariant: a column access touches distinct banks."""
+    banks = [bank_of(spec, base_reg + i, block) for i in range(count)]
+    return len(set(banks)) == len(banks)

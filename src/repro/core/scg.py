@@ -1,0 +1,99 @@
+"""Shift Count Generation (EARTH §4.2), element-granularity TPU adaptation.
+
+The paper computes ``shiftCnt_i = (stride - EEWB) * floor(i/EEWB) + offset``
+at byte granularity.  We reorganize *elements in lanes* (EEWB == 1 element),
+so the closed forms below are the same formula with EEWB folded into the
+dtype.
+
+Two views of a strided access over a coalesced window of n elements:
+
+* gather (strided LOAD): input position ``p`` holds output element
+  ``(p - offset) / stride`` when it divides exactly; its GSN shift count is
+  ``p - dest(p)``.
+* scatter (strided STORE): dense input element ``i`` must land at
+  ``offset + i*stride``; its SSN shift count is ``offset + i*(stride-1)``.
+
+All functions are jit-traceable in ``stride``/``offset`` (jnp arithmetic);
+``n``/``vl`` are static shapes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gather_counts(n: int, stride, offset, vl) -> tuple[jax.Array, jax.Array]:
+    """(shiftcnt, valid) over input window positions 0..n-1 for a strided load.
+
+    valid[p] marks positions that hold one of the ``vl`` strided elements.
+    """
+    p = jnp.arange(n, dtype=jnp.int32)
+    stride = jnp.asarray(stride, jnp.int32)
+    offset = jnp.asarray(offset, jnp.int32)
+    rel = p - offset
+    dest = rel // jnp.maximum(stride, 1)
+    valid = (rel >= 0) & (rel % jnp.maximum(stride, 1) == 0) & (dest < vl)
+    shift = jnp.where(valid, p - dest, 0)
+    return shift, valid
+
+
+def scatter_counts(n: int, stride, offset, vl) -> tuple[jax.Array, jax.Array]:
+    """(shiftcnt, valid) over dense input positions 0..n-1 for a strided store."""
+    i = jnp.arange(n, dtype=jnp.int32)
+    stride = jnp.asarray(stride, jnp.int32)
+    offset = jnp.asarray(offset, jnp.int32)
+    valid = i < vl
+    shift = jnp.where(valid, offset + i * (stride - 1), 0)
+    return shift, valid
+
+
+def segment_gather_counts(n: int, fields, field, vl) -> tuple[jax.Array, jax.Array]:
+    """Field-wise segment load (EARTH §5.2): field ``field`` of an AoS window
+    is a strided gather with stride=FIELDS, offset=field."""
+    return gather_counts(n, fields, field, vl)
+
+
+def segment_scatter_counts(n: int, fields, field, vl) -> tuple[jax.Array, jax.Array]:
+    return scatter_counts(n, fields, field, vl)
+
+
+def column_access_counts(n: int, emul_elen_elems, vl) -> tuple[jax.Array, jax.Array]:
+    """RCVRF column access (EARTH §4.5.2): after the block rotate, collecting
+    element j of registers V0..V7 is a constant-stride gather with
+    stride = EMUL*ELEN expressed in elements."""
+    return gather_counts(n, emul_elen_elems, 0, vl)
+
+
+def compaction_counts(mask: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """SCG for mask compaction (the routing analogue used by MoE dispatch).
+
+    Selected positions move to ``rank(p) = #selected before p`` — an
+    order-preserving, separation-non-increasing mapping, hence GSN-safe.
+    """
+    mask = mask.astype(bool)
+    rank = jnp.cumsum(mask.astype(jnp.int32)) - 1
+    pos = jnp.arange(mask.shape[0], dtype=jnp.int32)
+    shift = jnp.where(mask, pos - rank, 0)
+    return shift, mask
+
+
+def expansion_counts(mask: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """SCG for the inverse (scatter packed rows back to masked positions).
+
+    Packed element k must land at the k-th set position of ``mask``; its SSN
+    shift count is ``target(k) - k`` (order-preserving, separation-non-
+    decreasing, hence SSN-safe).
+    """
+    mask = mask.astype(bool)
+    n = mask.shape[0]
+    total = jnp.sum(mask.astype(jnp.int32))
+    # target[k] = index of k-th set bit: scatter ranks then do a masked argmax
+    pos = jnp.arange(n, dtype=jnp.int32)
+    rank = jnp.cumsum(mask.astype(jnp.int32)) - 1
+    # one-hot-free: for each k, target = sum over p of p * [rank==k and mask]
+    # computed with a segment trick: place p at slot rank(p).
+    targets = jnp.zeros((n,), jnp.int32).at[jnp.where(mask, rank, n)].set(
+        jnp.where(mask, pos, 0), mode="drop")
+    valid = pos < total
+    shift = jnp.where(valid, targets - pos, 0)
+    return shift, valid

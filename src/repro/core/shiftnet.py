@@ -1,0 +1,159 @@
+"""EARTH shift networks (GSN / SSN) as pure-JAX algorithms.
+
+The paper's DROM routes elements through ``log2(n)`` layers, each performing a
+power-of-two shift when the corresponding bit of a per-element *shift count*
+is set (EARTH §4.1).  For mappings that are order-preserving and
+separation-monotone the routing is conflict-free (EARTH §4.1.4), i.e. at no
+layer do two elements land in the same slot.
+
+TPU adaptation: a layer is a *static* lane shift by ``2**l`` (compile-time
+constant — cheap VREG data movement on TPU) plus a ``jnp.where`` select with a
+dynamic mask.  ``log2(n)`` such passes replace an arbitrary gather, exactly as
+EARTH's layered network replaces a byte crossbar.
+
+Conventions
+-----------
+* GSN ("gather"): elements move toward LOWER indices; bits are consumed
+  LSB -> MSB (paper Fig. 6, top-down).
+* SSN ("scatter"): elements move toward HIGHER indices; bits are consumed
+  MSB -> LSB (the mirrored network, bottom-up).
+* ``shiftcnt`` is carried alongside the payload so each layer can test its
+  bit after previous moves.
+* All shifts are non-circular (EARTH's diagonal links do not wrap).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _num_layers(n: int) -> int:
+    """Layers needed so any shift in [0, n-1] is representable."""
+    if n <= 1:
+        return 0
+    return max(1, math.ceil(math.log2(n)))
+
+
+def shift_static(x: jax.Array, k: int, axis: int, *, fill=0) -> jax.Array:
+    """Non-circular static shift: result[i] = x[i + k] (k may be negative).
+
+    Vacated slots are filled with ``fill``.  ``k`` is a Python int so the op
+    lowers to slice+pad (static lane movement on TPU, no gather).
+    """
+    if k == 0:
+        return x
+    n = x.shape[axis]
+    if abs(k) >= n:
+        return jnp.full_like(x, fill)
+    pad = [(0, 0)] * x.ndim
+    idx = [slice(None)] * x.ndim
+    if k > 0:  # pull from higher indices; pad at the high end
+        idx[axis] = slice(k, None)
+        pad[axis] = (0, k)
+    else:  # pull from lower indices; pad at the low end
+        idx[axis] = slice(0, n + k)
+        pad[axis] = (-k, 0)
+    return jnp.pad(x[tuple(idx)], pad, constant_values=fill)
+
+
+class RouteResult(NamedTuple):
+    payload: jax.Array
+    valid: jax.Array
+    conflict: jax.Array  # scalar bool: any slot collision or element loss
+
+
+def _route(
+    payload: jax.Array,
+    shiftcnt: jax.Array,
+    valid: jax.Array,
+    *,
+    axis: int,
+    toward_zero: bool,
+    lsb_first: bool,
+) -> RouteResult:
+    """Shared GSN/SSN layer loop.
+
+    payload : (..., n, ...) data to route along ``axis``.
+    shiftcnt: int32, broadcastable to payload along ``axis`` (commonly shaped
+              like payload or with trailing singleton dims for row payloads).
+    valid   : bool, same broadcast rule.
+    """
+    n = payload.shape[axis]
+    layers = _num_layers(n)
+    order = range(layers) if lsb_first else range(layers - 1, -1, -1)
+    direction = 1 if toward_zero else -1  # arg to shift_static
+
+    shiftcnt = shiftcnt.astype(jnp.int32)
+    valid = valid.astype(bool)
+    conflict = jnp.zeros((), dtype=bool)
+    n_valid0 = jnp.sum(valid.astype(jnp.int32))
+
+    for l in order:
+        k = 1 << l
+        bit = (shiftcnt >> l) & 1
+        stay = valid & (bit == 0)
+        cand_payload = shift_static(payload, direction * k, axis)
+        cand_shift = shift_static(shiftcnt, direction * k, axis)
+        cand_valid = (
+            shift_static(valid, direction * k, axis, fill=False)
+            & (((cand_shift >> l) & 1) == 1)
+        )
+        conflict = conflict | jnp.any(cand_valid & stay)
+        payload = jnp.where(cand_valid, cand_payload, payload)
+        shiftcnt = jnp.where(cand_valid, cand_shift, shiftcnt)
+        valid = cand_valid | stay
+
+    # Element loss (shifted off the edge) also shows up as a count drop.
+    conflict = conflict | (jnp.sum(valid.astype(jnp.int32)) != n_valid0)
+    return RouteResult(payload, valid, conflict)
+
+
+def gather_network(payload, shiftcnt, valid, *, axis: int = -1) -> RouteResult:
+    """GSN: move valid elements toward lower indices by ``shiftcnt`` slots.
+
+    Conflict-free iff the induced mapping is order-preserving and
+    separation-non-increasing (EARTH §4.1.4).
+    """
+    return _route(payload, shiftcnt, valid, axis=axis, toward_zero=True,
+                  lsb_first=True)
+
+
+def scatter_network(payload, shiftcnt, valid, *, axis: int = -1) -> RouteResult:
+    """SSN: move valid elements toward higher indices by ``shiftcnt`` slots.
+
+    Conflict-free iff order-preserving and separation-non-decreasing.
+    Bits are consumed MSB->LSB (mirrored network) — LSB-first would collide,
+    e.g. {0,1} -> {1,3}.
+    """
+    return _route(payload, shiftcnt, valid, axis=axis, toward_zero=False,
+                  lsb_first=False)
+
+
+# ---------------------------------------------------------------------------
+# Row routing: payload rows of shape (n, d) move as units along axis 0.
+# Used by MoE token compaction (each row = a token embedding).
+# ---------------------------------------------------------------------------
+
+def gather_rows(rows: jax.Array, shiftcnt: jax.Array, valid: jax.Array) -> RouteResult:
+    """Route (n, d) rows toward index 0; shiftcnt/valid are (n,)."""
+    sc = shiftcnt.reshape(shiftcnt.shape + (1,) * (rows.ndim - 1))
+    vd = valid.reshape(valid.shape + (1,) * (rows.ndim - 1))
+    out = _route(rows, jnp.broadcast_to(sc, rows.shape),
+                 jnp.broadcast_to(vd, rows.shape),
+                 axis=0, toward_zero=True, lsb_first=True)
+    return RouteResult(out.payload, out.valid[..., 0] if out.valid.ndim > 1
+                       else out.valid, out.conflict)
+
+
+def scatter_rows(rows: jax.Array, shiftcnt: jax.Array, valid: jax.Array) -> RouteResult:
+    """Route (n, d) rows toward higher indices; shiftcnt/valid are (n,)."""
+    sc = shiftcnt.reshape(shiftcnt.shape + (1,) * (rows.ndim - 1))
+    vd = valid.reshape(valid.shape + (1,) * (rows.ndim - 1))
+    out = _route(rows, jnp.broadcast_to(sc, rows.shape),
+                 jnp.broadcast_to(vd, rows.shape),
+                 axis=0, toward_zero=False, lsb_first=False)
+    return RouteResult(out.payload, out.valid[..., 0] if out.valid.ndim > 1
+                       else out.valid, out.conflict)

@@ -1,0 +1,4 @@
+"""Data pipeline: AoS record format (EARTH segment ops) + deterministic
+host-sharded synthetic loader."""
+from repro.data.aos import pack_records, unpack_records  # noqa: F401
+from repro.data.pipeline import DataConfig, SyntheticAoSPipeline  # noqa: F401

@@ -1,0 +1,37 @@
+"""AoS training-record format — EARTH segment access in the input path.
+
+A record packs FIELDS=4 int32 fields per token position, interleaved
+(Array-of-Structures):  [token, label, weight_q, doc_id] x S.
+One record is therefore a single contiguous (4*S,) buffer: writing it is one
+sequential transaction (the coalescing win), and unpacking to SoA batch
+arrays is a FIELD=4 segment load (core/drom.deinterleave).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import drom
+
+FIELDS = 4
+WEIGHT_SCALE = 1024  # loss weights quantized to int32 / WEIGHT_SCALE
+
+
+def pack_records(tokens: jax.Array, labels: jax.Array, weights: jax.Array,
+                 doc_ids: jax.Array, *, impl: str = "ref") -> jax.Array:
+    """(B,S) x4 -> (B, 4S) interleaved AoS buffer (segment store)."""
+    wq = jnp.round(weights * WEIGHT_SCALE).astype(jnp.int32)
+    return drom.interleave(
+        [tokens.astype(jnp.int32), labels.astype(jnp.int32), wq,
+         doc_ids.astype(jnp.int32)], impl=impl)
+
+
+def unpack_records(aos: jax.Array, *, impl: str = "ref") -> dict:
+    """(B, 4S) AoS -> SoA batch dict (segment load)."""
+    tokens, labels, wq, doc_ids = drom.deinterleave(aos, FIELDS, impl=impl)
+    return {
+        "tokens": tokens,
+        "labels": labels,
+        "loss_weight": wq.astype(jnp.float32) / WEIGHT_SCALE,
+        "doc_id": doc_ids,
+    }

@@ -1,0 +1,5 @@
+"""Fault tolerance: atomic async checkpointing, elastic rescale,
+straggler mitigation."""
+from repro.ft.checkpoint import CheckpointManager  # noqa: F401
+from repro.ft.elastic import restore_elastic  # noqa: F401
+from repro.ft.straggler import StragglerConfig, StragglerPolicy  # noqa: F401

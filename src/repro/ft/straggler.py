@@ -1,0 +1,83 @@
+"""Deadline-based straggler mitigation (coordinator-side logic).
+
+At fleet scale the slowest host sets the step time (synchronous SPMD). The
+policy here implements the standard mitigation: track per-host step
+durations, declare hosts exceeding ``factor x`` the rolling median as
+stragglers, and exclude them for a cooldown window — on a real fleet the
+exclusion maps to (a) skipping their gradient contribution (scaling the DP
+denominator) or (b) triggering elastic restart without them (ft/elastic).
+
+Pure Python with an injectable clock so the logic is unit-testable without
+hardware; tests/test_ft.py simulates straggling hosts and asserts
+detection, cooldown, and recovery.
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+from collections import defaultdict, deque
+
+
+@dataclasses.dataclass(frozen=True)
+class StragglerConfig:
+    window: int = 16           # rolling history per host
+    factor: float = 2.0        # slow if > factor * median
+    cooldown_steps: int = 8    # exclusion length
+    min_history: int = 4       # steps before judging
+    max_excluded_frac: float = 0.25
+
+
+class StragglerPolicy:
+    def __init__(self, n_hosts: int, cfg: StragglerConfig = StragglerConfig()):
+        self.n_hosts = n_hosts
+        self.cfg = cfg
+        self._hist: dict[int, deque] = defaultdict(
+            lambda: deque(maxlen=cfg.window))
+        self._excluded_until: dict[int, int] = {}
+        self._step = 0
+
+    def record_step(self, durations: dict[int, float]) -> None:
+        """durations: host -> seconds for this step (missing = no report,
+        treated as infinitely slow)."""
+        self._step += 1
+        for h in range(self.n_hosts):
+            if h in durations:
+                self._hist[h].append(durations[h])
+            else:
+                self._hist[h].append(float("inf"))
+        self._update_exclusions()
+
+    def _update_exclusions(self) -> None:
+        cfg = self.cfg
+        meds = []
+        for h in range(self.n_hosts):
+            if len(self._hist[h]) >= cfg.min_history:
+                finite = [d for d in self._hist[h] if d != float("inf")]
+                if finite:
+                    meds.append(statistics.median(finite))
+        if not meds:
+            return
+        global_med = statistics.median(meds)
+        budget = int(self.n_hosts * cfg.max_excluded_frac)
+        current = {h for h, until in self._excluded_until.items()
+                   if until > self._step}
+        for h in range(self.n_hosts):
+            if len(self._hist[h]) < cfg.min_history or h in current:
+                continue
+            recent = list(self._hist[h])[-cfg.min_history:]
+            slow = all(d > cfg.factor * global_med for d in recent)
+            if slow and len(current) < budget:
+                self._excluded_until[h] = self._step + cfg.cooldown_steps
+                current.add(h)
+
+    def excluded(self) -> set[int]:
+        return {h for h, until in self._excluded_until.items()
+                if until > self._step}
+
+    def active_hosts(self) -> list[int]:
+        ex = self.excluded()
+        return [h for h in range(self.n_hosts) if h not in ex]
+
+    def gradient_scale(self) -> float:
+        """Rescale factor for the DP mean when hosts are excluded."""
+        return self.n_hosts / max(1, len(self.active_hosts()))

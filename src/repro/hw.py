@@ -1,0 +1,40 @@
+"""Hardware constants for the roofline target: TPU v5e (per chip).
+
+The container is CPU-only; these constants describe the TARGET used for the
+roofline terms in EXPERIMENTS.md (see the assignment: 197 TFLOP/s bf16,
+819 GB/s HBM, ~50 GB/s per ICI link).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipSpec:
+    name: str
+    peak_bf16_flops: float      # FLOP/s
+    hbm_bandwidth: float        # bytes/s
+    ici_link_bandwidth: float   # bytes/s per link (one direction)
+    ici_links: int              # links per chip (2D torus on v5e)
+    hbm_bytes: int              # HBM capacity per chip
+    vmem_bytes: int             # VMEM per core
+
+
+TPU_V5E = ChipSpec(
+    name="tpu_v5e",
+    peak_bf16_flops=197e12,
+    hbm_bandwidth=819e9,
+    ici_link_bandwidth=50e9,
+    ici_links=4,
+    hbm_bytes=16 * 2**30,
+    vmem_bytes=128 * 2**20,
+)
+
+# The roofline formulas in the assignment divide collective bytes by
+# (chips x link_bw); we follow that convention (single-link, conservative).
+DEFAULT_CHIP = TPU_V5E
+
+# MXU-friendly tiling constants (bf16): last dim multiples of 128 lanes,
+# second-minor multiples of 8 sublanes (16 for bf16 packing).
+LANES = 128
+SUBLANES = 8

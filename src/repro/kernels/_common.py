@@ -1,0 +1,62 @@
+"""Shared plumbing for the EARTH Pallas kernels.
+
+Kernels are written for TPU (pl.pallas_call + BlockSpec VMEM tiling) and
+validated on CPU with ``interpret=True`` — the kernel bodies use only
+static-shape slice/pad/where ops, which lower to cheap VREG data movement on
+real TPUs (see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row-tile height for 2-D kernels: one sublane group.
+ROW_TILE = 8
+
+
+@functools.cache
+def interpret_mode() -> bool:
+    """True when no TPU is present (CI / this container)."""
+    try:
+        return jax.devices()[0].platform != "tpu"
+    except Exception:  # pragma: no cover
+        return True
+
+
+def flatten_rows(x: jax.Array) -> tuple[jax.Array, tuple[int, ...]]:
+    """(..., n) -> (R, n) plus the leading shape for unflattening."""
+    lead = x.shape[:-1]
+    r = 1
+    for d in lead:
+        r *= d
+    return x.reshape(r, x.shape[-1]), lead
+
+
+def pad_rows(x: jax.Array, tile: int = ROW_TILE) -> tuple[jax.Array, int]:
+    """Pad axis 0 to a multiple of ``tile``; returns (padded, original_rows)."""
+    r = x.shape[0]
+    pad = (-r) % tile
+    if pad:
+        x = jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1))
+    return x, r
+
+
+def row_grid(rows: int, tile: int = ROW_TILE) -> int:
+    assert rows % tile == 0
+    return rows // tile
+
+
+def call(kernel, *, out_shape, grid, in_specs, out_specs, **kwargs):
+    """pallas_call with the platform-appropriate interpret flag."""
+    return pl.pallas_call(
+        kernel,
+        out_shape=out_shape,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        interpret=interpret_mode(),
+        **kwargs,
+    )

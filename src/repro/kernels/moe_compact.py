@@ -1,0 +1,82 @@
+"""MoE token compaction via the EARTH gather network (row routing).
+
+Packing the tokens routed to an expert to the front of a tile is an
+order-preserving, separation-non-increasing mapping — exactly the GSN-safe
+class.  Shift counts are a prefix sum of the routing mask (the "SCG" of
+dispatch), computed once outside; the kernel then routes (n, d) token rows
+with log2(n) static sublane shifts per d-tile, replacing a gather/sort.
+
+The inverse (expansion) scatters expert outputs back to token slots (SSN).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import scg, shiftnet
+from repro.kernels import _common
+
+COL_TILE = 128
+
+
+def _compact_kernel(shift_ref, valid_ref, rows_ref, o_ref):
+    rows = rows_ref[...]                  # (n, dt)
+    shift = shift_ref[...]                # (n, 1)
+    valid = valid_ref[...] != 0           # (n, 1)
+    res = shiftnet._route(rows, jnp.broadcast_to(shift, rows.shape),
+                          jnp.broadcast_to(valid, rows.shape),
+                          axis=0, toward_zero=True, lsb_first=True)
+    o_ref[...] = jnp.where(res.valid, res.payload, jnp.zeros_like(res.payload))
+
+
+def compact_rows(rows: jax.Array, mask: jax.Array
+                 ) -> tuple[jax.Array, jax.Array]:
+    """Pack masked (n, d) rows to the front (stable). Returns (packed, valid)."""
+    n, d = rows.shape
+    shift, valid = scg.compaction_counts(mask)
+    dpad = (-d) % COL_TILE
+    rp = jnp.pad(rows, ((0, 0), (0, dpad))) if dpad else rows
+    dt = min(COL_TILE, rp.shape[1])
+    out = _common.call(
+        _compact_kernel,
+        out_shape=jax.ShapeDtypeStruct(rp.shape, rows.dtype),
+        grid=(rp.shape[1] // dt,),
+        in_specs=[pl.BlockSpec((n, 1), lambda j: (0, 0)),
+                  pl.BlockSpec((n, 1), lambda j: (0, 0)),
+                  pl.BlockSpec((n, dt), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((n, dt), lambda j: (0, j)),
+    )(shift.reshape(n, 1), valid.reshape(n, 1).astype(jnp.int32), rp)
+    packed_valid = jnp.arange(n) < jnp.sum(mask.astype(jnp.int32))
+    return out[:, :d], packed_valid
+
+
+def _expand_kernel(shift_ref, valid_ref, rows_ref, o_ref):
+    rows = rows_ref[...]
+    shift = shift_ref[...]
+    valid = valid_ref[...] != 0
+    res = shiftnet._route(rows, jnp.broadcast_to(shift, rows.shape),
+                          jnp.broadcast_to(valid, rows.shape),
+                          axis=0, toward_zero=False, lsb_first=False)
+    o_ref[...] = jnp.where(res.valid, res.payload, jnp.zeros_like(res.payload))
+
+
+def expand_rows(packed: jax.Array, mask: jax.Array) -> jax.Array:
+    """Scatter packed rows back to the set positions of mask (zeros elsewhere)."""
+    n, d = packed.shape
+    shift, valid = scg.expansion_counts(mask)
+    dpad = (-d) % COL_TILE
+    pp = jnp.pad(packed, ((0, 0), (0, dpad))) if dpad else packed
+    dt = min(COL_TILE, pp.shape[1])
+    out = _common.call(
+        _expand_kernel,
+        out_shape=jax.ShapeDtypeStruct(pp.shape, packed.dtype),
+        grid=(pp.shape[1] // dt,),
+        in_specs=[pl.BlockSpec((n, 1), lambda j: (0, 0)),
+                  pl.BlockSpec((n, 1), lambda j: (0, 0)),
+                  pl.BlockSpec((n, dt), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((n, dt), lambda j: (0, j)),
+    )(shift.reshape(n, 1), valid.reshape(n, 1).astype(jnp.int32), pp)
+    return out[:, :d]

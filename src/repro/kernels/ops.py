@@ -1,0 +1,89 @@
+"""Public wrappers for the EARTH kernels with impl dispatch.
+
+impl="ref"    -> pure-jnp oracle (XLA path; used by the dry-run lowering)
+impl="pallas" -> Pallas TPU kernel (interpret mode off-TPU)
+
+Strides / offsets / field counts are static Python ints (they parameterize
+shift tables and block shapes); callers jit around these wrappers.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+
+from repro.kernels import ref as _ref
+
+
+def _pick(impl: str, ref_fn, pallas_fn):
+    if impl == "pallas":
+        return pallas_fn
+    if impl == "ref":
+        return ref_fn
+    raise ValueError(f"unknown impl {impl!r} (want 'ref' or 'pallas')")
+
+
+def gather_strided(window: jax.Array, stride: int, offset: int, vl: int,
+                   *, impl: str = "ref") -> jax.Array:
+    from repro.kernels import strided as _strided
+    fn = _pick(impl, _ref.gather_strided, _strided.gather_strided)
+    return fn(window, stride, offset, vl)
+
+
+def scatter_strided(window: jax.Array, values: jax.Array, stride: int,
+                    offset: int, *, impl: str = "ref") -> jax.Array:
+    from repro.kernels import strided as _strided
+    fn = _pick(impl, _ref.scatter_strided, _strided.scatter_strided)
+    return fn(window, values, stride, offset)
+
+
+def deinterleave(aos: jax.Array, fields: int, *, impl: str = "ref"
+                 ) -> list[jax.Array]:
+    from repro.kernels import segment as _segment
+    fn = _pick(impl, _ref.deinterleave, _segment.deinterleave)
+    return fn(aos, fields)
+
+
+def interleave(soa: Sequence[jax.Array], *, impl: str = "ref") -> jax.Array:
+    from repro.kernels import segment as _segment
+    fn = _pick(impl, _ref.interleave, _segment.interleave)
+    return fn(list(soa))
+
+
+def compact_rows(rows: jax.Array, mask: jax.Array, *, impl: str = "ref"
+                 ) -> tuple[jax.Array, jax.Array]:
+    from repro.kernels import moe_compact as _mc
+    fn = _pick(impl, _ref.compact_rows, _mc.compact_rows)
+    return fn(rows, mask)
+
+
+def expand_rows(packed: jax.Array, mask: jax.Array, *, impl: str = "ref"
+                ) -> jax.Array:
+    from repro.kernels import moe_compact as _mc
+    fn = _pick(impl, _ref.expand_rows, _mc.expand_rows)
+    return fn(packed, mask)
+
+
+def shift_gather(x: jax.Array, shift: jax.Array, valid: jax.Array,
+                 *, impl: str = "pallas") -> jax.Array:
+    """Raw DROM gather (no closed-form SCG) — pallas-only primitive."""
+    from repro.kernels import shift_gather as _sg
+    from repro.core import shiftnet
+    if impl == "pallas":
+        return _sg.shift_gather(x, shift, valid)
+    res = shiftnet.gather_network(x, shift, valid, axis=-1)
+    import jax.numpy as jnp
+    return jnp.where(res.valid, res.payload, jnp.zeros_like(res.payload))
+
+
+def shift_scatter(x: jax.Array, shift: jax.Array, valid: jax.Array,
+                  *, impl: str = "pallas") -> tuple[jax.Array, jax.Array]:
+    """Raw DROM scatter — returns (payload, occupancy mask)."""
+    from repro.kernels import shift_scatter as _ss
+    from repro.core import shiftnet
+    if impl == "pallas":
+        return _ss.shift_scatter(x, shift, valid)
+    res = shiftnet.scatter_network(x, shift, valid, axis=-1)
+    import jax.numpy as jnp
+    return (jnp.where(res.valid, res.payload, jnp.zeros_like(res.payload)),
+            jnp.broadcast_to(res.valid, x.shape))

@@ -1,0 +1,97 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These define the semantics; kernels must match them bit-exactly (allclose for
+floating point).  They are also the XLA fallback path lowered by the
+512-device dry-run (kernels are per-device local ops there).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Strided access (LSDO semantics)
+# ---------------------------------------------------------------------------
+
+def gather_strided(window: jax.Array, stride: int, offset: int, vl: int) -> jax.Array:
+    """(..., n) -> (..., vl): out[..., i] = window[..., offset + i*stride]."""
+    n = window.shape[-1]
+    start = [0] * (window.ndim - 1) + [offset]
+    limit = list(window.shape[:-1]) + [offset + (vl - 1) * stride + 1]
+    strides = [1] * (window.ndim - 1) + [stride]
+    assert limit[-1] <= n, f"strided read past window: {limit[-1]} > {n}"
+    return jax.lax.slice(window, start, limit, strides)
+
+
+def scatter_strided(window: jax.Array, values: jax.Array, stride: int,
+                    offset: int) -> jax.Array:
+    """Inverse of gather_strided: place values at strided positions."""
+    vl = values.shape[-1]
+    assert offset + (vl - 1) * stride + 1 <= window.shape[-1]
+    idx = (Ellipsis, slice(offset, offset + (vl - 1) * stride + 1, stride))
+    return window.at[idx].set(values)
+
+
+# ---------------------------------------------------------------------------
+# Segment access (RCVRF semantics): AoS <-> SoA
+# ---------------------------------------------------------------------------
+
+def deinterleave(aos: jax.Array, fields: int) -> list[jax.Array]:
+    """(..., fields*m) AoS -> fields tensors (..., m)."""
+    assert aos.shape[-1] % fields == 0
+    m = aos.shape[-1] // fields
+    r = aos.reshape(aos.shape[:-1] + (m, fields))
+    return [r[..., f] for f in range(fields)]
+
+
+def interleave(soa: list[jax.Array]) -> jax.Array:
+    """fields tensors (..., m) -> (..., fields*m) AoS."""
+    stacked = jnp.stack(soa, axis=-1)  # (..., m, fields)
+    return stacked.reshape(stacked.shape[:-2] + (-1,))
+
+
+# ---------------------------------------------------------------------------
+# Row compaction / expansion (MoE dispatch semantics)
+# ---------------------------------------------------------------------------
+
+def compact_rows(rows: jax.Array, mask: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Pack rows where mask is set to the front (stable); zero-fill the rest.
+
+    rows: (n, d...); mask: (n,) bool. Returns (packed, packed_valid)."""
+    n = rows.shape[0]
+    mask = mask.astype(bool)
+    order = jnp.argsort(~mask, stable=True)
+    packed = rows[order]
+    total = jnp.sum(mask.astype(jnp.int32))
+    packed_valid = jnp.arange(n) < total
+    zeros = jnp.zeros_like(packed)
+    keep = packed_valid.reshape((n,) + (1,) * (rows.ndim - 1))
+    return jnp.where(keep, packed, zeros), packed_valid
+
+
+def expand_rows(packed: jax.Array, mask: jax.Array) -> jax.Array:
+    """Inverse of compact_rows: packed[k] -> position of k-th set bit."""
+    n = packed.shape[0]
+    mask = mask.astype(bool)
+    rank = jnp.cumsum(mask.astype(jnp.int32)) - 1
+    src = jnp.where(mask, rank, n)  # n = out-of-bounds -> dropped
+    out = jnp.zeros_like(packed)
+    return out.at[jnp.arange(n)].set(
+        jnp.where(mask.reshape((n,) + (1,) * (packed.ndim - 1)),
+                  packed.at[src, ...].get(mode="fill", fill_value=0),
+                  jnp.zeros_like(packed)))
+
+
+# ---------------------------------------------------------------------------
+# Interleaved KV cache (segment FIELD=2 over the feature dim)
+# ---------------------------------------------------------------------------
+
+def kv_interleave(k: jax.Array, v: jax.Array) -> jax.Array:
+    """(..., d), (..., d) -> (..., 2d) with [k0, v0, k1, v1, ...] layout."""
+    return interleave([k, v])
+
+
+def kv_split(kv: jax.Array) -> tuple[jax.Array, jax.Array]:
+    k, v = deinterleave(kv, 2)
+    return k, v

@@ -1,0 +1,86 @@
+"""Segment (AoS <-> SoA) Pallas kernels — the RCVRF path, buffer-free.
+
+A segment load with FIELDS=f is f field-wise strided gathers (stride=f,
+offset=field) over the same VMEM-resident AoS beat; a segment store is the
+mirrored scatter.  No scratch "segment buffer" is allocated: each field's
+routed lanes are written straight to its output block, matching EARTH's
+immediate-writeback timeline (Fig. 4c).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import scg, shiftnet
+from repro.kernels import _common
+
+
+def _deint_kernel(aos_ref, *o_refs, fields: int):
+    aos = aos_ref[...]                    # (rt, f*m)
+    n = aos.shape[-1]
+    m = n // fields
+    for f in range(fields):
+        shift, valid = scg.gather_counts(n, fields, f, m)
+        res = shiftnet.gather_network(aos, shift[None, :], valid[None, :],
+                                      axis=-1)
+        o_refs[f][...] = jax.lax.slice(res.payload, (0, 0), (aos.shape[0], m))
+
+
+def deinterleave(aos: jax.Array, fields: int) -> list[jax.Array]:
+    """(..., fields*m) -> fields x (..., m)   (segment load)."""
+    n = aos.shape[-1]
+    assert n % fields == 0
+    m = n // fields
+    flat, lead = _common.flatten_rows(aos)
+    flat, r0 = _common.pad_rows(flat)
+    rt = _common.ROW_TILE
+    outs = _common.call(
+        functools.partial(_deint_kernel, fields=fields),
+        out_shape=tuple(jax.ShapeDtypeStruct((flat.shape[0], m), aos.dtype)
+                        for _ in range(fields)),
+        grid=(_common.row_grid(flat.shape[0]),),
+        in_specs=[pl.BlockSpec((rt, n), lambda i: (i, 0))],
+        out_specs=tuple(pl.BlockSpec((rt, m), lambda i: (i, 0))
+                        for _ in range(fields)),
+    )(flat)
+    return [o[:r0].reshape(lead + (m,)) for o in outs]
+
+
+def _int_kernel(*refs, fields: int):
+    f_refs, o_ref = refs[:-1], refs[-1]
+    rt, m = f_refs[0].shape
+    n = m * fields
+    acc = jnp.zeros((rt, n), f_refs[0].dtype)
+    for f in range(fields):
+        padded = jnp.pad(f_refs[f][...], ((0, 0), (0, n - m)))
+        shift, valid = scg.scatter_counts(n, fields, f, m)
+        res = shiftnet.scatter_network(padded, shift[None, :], valid[None, :],
+                                       axis=-1)
+        acc = jnp.where(res.valid, res.payload, acc)
+    o_ref[...] = acc
+
+
+def interleave(soa: list[jax.Array]) -> jax.Array:
+    """fields x (..., m) -> (..., fields*m)   (segment store)."""
+    fields = len(soa)
+    m = soa[0].shape[-1]
+    n = m * fields
+    flats = []
+    r0 = lead = None
+    for t in soa:
+        f, lead = _common.flatten_rows(t)
+        f, r0 = _common.pad_rows(f)
+        flats.append(f)
+    rt = _common.ROW_TILE
+    out = _common.call(
+        functools.partial(_int_kernel, fields=fields),
+        out_shape=jax.ShapeDtypeStruct((flats[0].shape[0], n), soa[0].dtype),
+        grid=(_common.row_grid(flats[0].shape[0]),),
+        in_specs=[pl.BlockSpec((rt, m), lambda i: (i, 0))
+                  for _ in range(fields)],
+        out_specs=pl.BlockSpec((rt, n), lambda i: (i, 0)),
+    )(*flats)
+    return out[:r0].reshape(lead + (n,))

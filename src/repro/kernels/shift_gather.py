@@ -1,0 +1,52 @@
+"""GSN as a Pallas TPU kernel: route lanes toward lower indices.
+
+This is the raw DROM gather entry point: callers provide per-lane shift
+counts and a validity mask (the SCG output); the kernel runs the log-depth
+layer loop on a VMEM-resident tile.  Each layer is a STATIC lane shift
+(compile-time ``2**l``) + select — the TPU-native form of EARTH's
+straight/diagonal link layers.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import shiftnet
+from repro.kernels import _common
+
+
+def _kernel(shift_ref, valid_ref, x_ref, o_ref):
+    x = x_ref[...]                       # (rt, n) VMEM tile
+    shift = shift_ref[...]               # (1, n) int32, shared across rows
+    valid = valid_ref[...] != 0          # (1, n)
+    res = shiftnet.gather_network(x, shift, valid, axis=-1)
+    o_ref[...] = jnp.where(res.valid, res.payload, jnp.zeros_like(res.payload))
+
+
+def shift_gather(x: jax.Array, shift: jax.Array, valid: jax.Array) -> jax.Array:
+    """Route (..., n) lanes down by ``shift`` where ``valid``; zero elsewhere.
+
+    shift, valid: (n,) — one routing program shared by all rows (matching
+    DROM: one SCG feeds the whole beat).
+    """
+    n = x.shape[-1]
+    flat, lead = _common.flatten_rows(x)
+    flat, r0 = _common.pad_rows(flat)
+    rt = _common.ROW_TILE
+    grid = (_common.row_grid(flat.shape[0]),)
+    out = _common.call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct(flat.shape, x.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((rt, n), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((rt, n), lambda i: (i, 0)),
+    )(shift.reshape(1, n).astype(jnp.int32),
+      valid.reshape(1, n).astype(jnp.int32), flat)
+    return out[:r0].reshape(lead + (n,))

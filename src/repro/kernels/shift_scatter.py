@@ -1,0 +1,52 @@
+"""SSN as a Pallas TPU kernel: route lanes toward higher indices.
+
+Mirror of shift_gather (bits consumed MSB->LSB, diagonal links point up).
+Returns both routed payload and routed validity so callers can merge into an
+existing buffer (the store path of LSDO).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import shiftnet
+from repro.kernels import _common
+
+
+def _kernel(shift_ref, valid_ref, x_ref, o_ref, ov_ref):
+    x = x_ref[...]
+    shift = shift_ref[...]
+    valid = valid_ref[...] != 0
+    res = shiftnet.scatter_network(x, shift, valid, axis=-1)
+    o_ref[...] = jnp.where(res.valid, res.payload, jnp.zeros_like(res.payload))
+    ov_ref[...] = jnp.broadcast_to(res.valid, x.shape).astype(jnp.int32)
+
+
+def shift_scatter(x: jax.Array, shift: jax.Array, valid: jax.Array
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Route (..., n) lanes up by ``shift`` where ``valid``.
+
+    Returns (payload, valid_mask) with zeros / False in unoccupied lanes.
+    """
+    n = x.shape[-1]
+    flat, lead = _common.flatten_rows(x)
+    flat, r0 = _common.pad_rows(flat)
+    rt = _common.ROW_TILE
+    grid = (_common.row_grid(flat.shape[0]),)
+    out, outv = _common.call(
+        _kernel,
+        out_shape=(jax.ShapeDtypeStruct(flat.shape, x.dtype),
+                   jax.ShapeDtypeStruct(flat.shape, jnp.int32)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((rt, n), lambda i: (i, 0)),
+        ],
+        out_specs=(pl.BlockSpec((rt, n), lambda i: (i, 0)),
+                   pl.BlockSpec((rt, n), lambda i: (i, 0))),
+    )(shift.reshape(1, n).astype(jnp.int32),
+      valid.reshape(1, n).astype(jnp.int32), flat)
+    return (out[:r0].reshape(lead + (n,)),
+            (outv[:r0] != 0).reshape(lead + (n,)))

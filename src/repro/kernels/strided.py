@@ -1,0 +1,79 @@
+"""LSDO strided load/store as Pallas TPU kernels.
+
+The BlockSpec load of the contiguous window IS the coalesced transaction
+(one HBM->VMEM block move per aligned region, replacing ``vl`` element-wise
+requests); the in-kernel shift network is the DROM reorganization.  Shift
+counts use the EARTH §4.2 closed form, computed with static stride/offset so
+the layer masks are constants folded by Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import scg, shiftnet
+from repro.kernels import _common
+
+
+def _gather_kernel(x_ref, o_ref, *, stride: int, offset: int, vl: int):
+    x = x_ref[...]                        # (rt, n) coalesced window tile
+    n = x.shape[-1]
+    shift, valid = scg.gather_counts(n, stride, offset, vl)
+    res = shiftnet.gather_network(x, shift[None, :], valid[None, :], axis=-1)
+    o_ref[...] = jax.lax.slice(res.payload, (0, 0), (x.shape[0], vl))
+
+
+def gather_strided(window: jax.Array, stride: int, offset: int, vl: int
+                   ) -> jax.Array:
+    """(..., n) -> (..., vl): out[..., i] = window[..., offset + i*stride]."""
+    n = window.shape[-1]
+    assert offset + (vl - 1) * stride < n
+    flat, lead = _common.flatten_rows(window)
+    flat, r0 = _common.pad_rows(flat)
+    rt = _common.ROW_TILE
+    out = _common.call(
+        functools.partial(_gather_kernel, stride=stride, offset=offset, vl=vl),
+        out_shape=jax.ShapeDtypeStruct((flat.shape[0], vl), window.dtype),
+        grid=(_common.row_grid(flat.shape[0]),),
+        in_specs=[pl.BlockSpec((rt, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((rt, vl), lambda i: (i, 0)),
+    )(flat)
+    return out[:r0].reshape(lead + (vl,))
+
+
+def _scatter_kernel(vals_ref, win_ref, o_ref, *, stride: int, offset: int):
+    vals = vals_ref[...]                  # (rt, vl)
+    win = win_ref[...]                    # (rt, n)
+    n = win.shape[-1]
+    vl = vals.shape[-1]
+    padded = jnp.pad(vals, ((0, 0), (0, n - vl)))
+    shift, valid = scg.scatter_counts(n, stride, offset, vl)
+    res = shiftnet.scatter_network(padded, shift[None, :], valid[None, :],
+                                   axis=-1)
+    o_ref[...] = jnp.where(res.valid, res.payload, win)
+
+
+def scatter_strided(window: jax.Array, values: jax.Array, stride: int,
+                    offset: int) -> jax.Array:
+    """Merge dense values into strided positions of window (read-modify-write,
+    the SIFQ store path)."""
+    n = window.shape[-1]
+    vl = values.shape[-1]
+    assert offset + (vl - 1) * stride < n
+    fw, lead = _common.flatten_rows(window)
+    fv, _ = _common.flatten_rows(values)
+    fw, r0 = _common.pad_rows(fw)
+    fv, _ = _common.pad_rows(fv)
+    rt = _common.ROW_TILE
+    out = _common.call(
+        functools.partial(_scatter_kernel, stride=stride, offset=offset),
+        out_shape=jax.ShapeDtypeStruct(fw.shape, window.dtype),
+        grid=(_common.row_grid(fw.shape[0]),),
+        in_specs=[pl.BlockSpec((rt, vl), lambda i: (i, 0)),
+                  pl.BlockSpec((rt, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((rt, n), lambda i: (i, 0)),
+    )(fv, fw)
+    return out[:r0].reshape(lead + (n,))

@@ -1,0 +1,283 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver:
+  1. builds the production mesh ((16,16) single-pod / (2,16,16) multi-pod),
+  2. lowers the REAL step function (train_step / prefill / serve_step) with
+     full in/out shardings on ShapeDtypeStructs (no allocation),
+  3. compiles it — sharding mismatches, unsupported collectives, or
+     compile-time OOM are failures,
+  4. records memory_analysis / cost_analysis / per-op collective bytes,
+  5. lowers 1- and 2-superblock UNROLLED probes to correct for scan bodies
+     being counted once by cost_analysis (see roofline/analysis.py),
+  6. emits a JSON artifact consumed by benchmarks/roofline_table.py and
+     EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-34b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out experiments/...]
+"""
+import argparse  # noqa: E402
+import dataclasses
+import gc
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, cells_for, get_arch, shape_by_name
+from repro.configs.base import decode_inputs, prefill_batch, train_batch
+from repro.launch.mesh import make_ctx, make_production_mesh
+from repro.roofline.analysis import (CostBundle, bundle_from_compiled,
+                                     model_flops, roofline)
+from repro.serve.engine import ServeConfig, jit_decode_step, jit_prefill
+from repro.train.step import TrainConfig, full_state_shardings, jit_train_step
+
+ARTIFACT_DIR = "experiments/artifacts"
+
+# Converged adaptive-microbatch values (from escalation runs) — a hint
+# cache, not a config: removing an entry re-enables escalation.
+MB_HINTS = {
+    "granite-34b": 2,
+    "gemma3-12b": 4,
+    "qwen3-0.6b": 1,
+    "starcoder2-3b": 1,
+    "jamba-1.5-large-398b": 8,
+    "whisper-tiny": 2,
+    "llava-next-mistral-7b": 1,
+    "phi3.5-moe-42b-a6.6b": 2,
+    "qwen3-moe-30b-a3b": 4,
+    "xlstm-125m": 1,
+}
+
+
+def _bf16_params_struct(cfg):
+    from repro.models.transformer import init_params
+    shapes = jax.eval_shape(lambda: init_params(cfg, jax.random.key(0)))
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, jnp.bfloat16 if jnp.issubdtype(s.dtype, jnp.floating)
+            else s.dtype), shapes)
+
+
+def _lower_cell(cfg, shape, ctx, *, tcfg=None):
+    """Returns (lowered, lower_seconds) for one step function."""
+    t0 = time.time()
+    if shape.kind == "train":
+        tcfg = tcfg or TrainConfig()
+        from repro.train.step import init_full_state
+        state = jax.eval_shape(
+            lambda: init_full_state(cfg, tcfg, jax.random.key(0)))
+        batch = train_batch(cfg, shape.seq_len, shape.global_batch,
+                            specs=True)
+        jitted = jit_train_step(cfg, tcfg, ctx, state, batch)
+        lowered = jitted.lower(state, batch)
+    elif shape.kind == "prefill":
+        params = _bf16_params_struct(cfg)
+        batch = prefill_batch(cfg, shape.seq_len, shape.global_batch,
+                              specs=True)
+        jitted = jit_prefill(cfg, ctx, params, batch,
+                             param_ctx=_serve_param_ctx(cfg, ctx))
+        lowered = jitted.lower(params, batch)
+    else:  # decode
+        params = _bf16_params_struct(cfg)
+        cache, token = decode_inputs(cfg, shape.seq_len, shape.global_batch,
+                                     specs=True)
+        scfg = ServeConfig(max_len=shape.seq_len,
+                           long_context=shape.name == "long_500k")
+        jitted = jit_decode_step(cfg, ctx, scfg, params, cache,
+                                 param_ctx=_serve_param_ctx(cfg, ctx))
+        lowered = jitted.lower(params, cache, token)
+    return lowered, time.time() - t0
+
+
+def _serve_param_ctx(cfg, ctx):
+    """2D (data x model) weight sharding for models whose bf16 weights
+    exceed ~4 GiB/device under TP-only (e.g. Jamba-398B)."""
+    if ctx.mesh is None:
+        return None
+    bf16_bytes = 2 * _total_params(cfg)
+    if bf16_bytes / max(ctx.model_size, 1) <= 4 * 2**30:
+        return None
+    from repro.launch.mesh import make_ctx
+    return make_ctx(ctx.mesh, fsdp=True)
+
+
+def _total_params(cfg) -> int:
+    import math
+    from repro.models.transformer import init_params
+    shapes = jax.eval_shape(lambda: init_params(cfg, jax.random.key(0)))
+    return sum(math.prod(s.shape) if s.shape else 1
+               for s in jax.tree.leaves(shapes))
+
+
+def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
+             cfg_override=None, tcfg=None, probes: bool = True,
+             ctx_override=None) -> dict:
+    arch = get_arch(arch_name)
+    cfg = cfg_override or arch.model
+    shape = shape_by_name(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = 512 if multi_pod else 256
+    # FSDP for training when the fp32 master copy would not fit TP-only
+    # (> 8B params on a 16-way model axis ~ >2 GiB/device just for params)
+    fsdp = shape.kind == "train" and _total_params(cfg) > 8e9
+    ctx = ctx_override or make_ctx(
+        mesh, long_context=shape.name == "long_500k", fsdp=fsdp)
+
+    result = {"arch": arch_name, "shape": shape_name,
+              "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
+              "status": "ok"}
+    # adaptive microbatching: escalate until the train step fits HBM
+    # (exactly what the production launcher does on real fleets).
+    # MB_HINTS record the converged values to skip re-escalation.
+    if shape.kind == "train" and tcfg is None:
+        hint = MB_HINTS.get(arch_name)
+        mb_plan = [hint] if hint else [1, 2, 4, 8]
+    else:
+        mb_plan = [None]
+    compiled = lowered = mem = None
+    for mb in mb_plan:
+        if mb is not None:
+            tcfg = TrainConfig(microbatches=mb)
+        lowered, t_lower = _lower_cell(cfg, shape, ctx, tcfg=tcfg)
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        mem = compiled.memory_analysis()
+        total = (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                 + mem.output_size_in_bytes)
+        if total < 15.5 * 2**30 or mb == mb_plan[-1]:
+            result["microbatches"] = mb or (tcfg.microbatches if tcfg else 1)
+            break
+        del compiled, lowered
+        gc.collect()
+    full = bundle_from_compiled(compiled)
+    result.update({
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "bytes_per_device": {
+            "arguments": mem.argument_size_in_bytes,
+            "output": mem.output_size_in_bytes,
+            "temp": mem.temp_size_in_bytes,
+            "peak_est": mem.argument_size_in_bytes + max(
+                mem.output_size_in_bytes, 0) + mem.temp_size_in_bytes,
+        },
+        "fits_hbm": (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                     + mem.output_size_in_bytes) < 16 * 2**30,
+        "raw": {"flops_per_dev": full.flops,
+                "bytes_per_dev": full.bytes_accessed,
+                "coll_bytes_per_dev": full.coll_bytes,
+                "coll_breakdown": full.coll_breakdown},
+    })
+    del compiled, lowered
+    gc.collect()
+
+    if probes:
+        # ---- scan-body correction probes (unrolled 1 and 2 superblocks) ---
+        sb = cfg.sb_len
+        enc_n = cfg.encoder.n_layers if cfg.encoder is not None else 0
+        c1 = dataclasses.replace(cfg, n_layers=sb, scan_layers=False)
+        c2 = dataclasses.replace(cfg, n_layers=2 * sb, scan_layers=False)
+        bundles = []
+        for ck in (c1, c2):
+            lw, _ = _lower_cell(ck, shape, ctx, tcfg=tcfg)
+            cp = lw.compile()
+            bundles.append(bundle_from_compiled(cp))
+            del cp, lw
+            gc.collect()
+        body = bundles[1] - bundles[0]
+        fixed = bundles[0] - body
+        ns = cfg.n_superblocks
+        corrected = fixed.scaled_add(body, ns)
+        # the microbatch accumulation loop is ALSO a scan counted once by
+        # cost_analysis: scale by mb (slightly over-counts the optimizer
+        # epilogue, which is negligible next to the model body)
+        mb = result.get("microbatches", 1) or 1
+        if shape.kind == "train" and mb > 1:
+            zero = CostBundle(0.0, 0.0, 0.0, {})
+            corrected = zero.scaled_add(corrected, mb)
+        result["corrected"] = {
+            "flops_per_dev": corrected.flops,
+            "bytes_per_dev": corrected.bytes_accessed,
+            "coll_bytes_per_dev": corrected.coll_bytes,
+            "coll_breakdown": corrected.coll_breakdown,
+            "method": f"fixed + {ns} * body (unrolled 1/2-superblock probes)",
+        }
+        tokens = shape.global_batch * (shape.seq_len
+                                       if shape.kind != "decode" else 1)
+        mf = model_flops(cfg, tokens=tokens,
+                         kind="train" if shape.kind == "train" else "serve")
+        terms = roofline(corrected, chips=chips, model_flops=mf)
+        result["roofline"] = terms.as_dict()
+    return result
+
+
+def save_artifact(result: dict, out_dir: str = ARTIFACT_DIR) -> str:
+    os.makedirs(out_dir, exist_ok=True)
+    name = (f"{result['arch']}__{result['shape']}__"
+            f"{result['mesh'].replace('x', '_')}.json")
+    path = os.path.join(out_dir, name)
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+    return path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--no-probes", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--out", default=ARTIFACT_DIR)
+    args = ap.parse_args()
+
+    cells: list[tuple[str, str, bool]] = []
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    if args.all:
+        for mp in meshes:           # single-pod pass first (roofline table)
+            for a in ARCH_IDS:
+                for s in cells_for(a):
+                    cells.append((a, s.name, mp))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        for mp in meshes:
+            cells.append((args.arch, args.shape, mp))
+    if args.skip_existing:
+        def done(a, s, mp):
+            name = (f"{a}__{s}__{'2_16_16' if mp else '16_16'}.json")
+            return os.path.exists(os.path.join(args.out, name))
+        cells = [c for c in cells if not done(*c)]
+
+    failures = 0
+    for a, s, mp in cells:
+        tag = f"{a} x {s} x {'2x16x16' if mp else '16x16'}"
+        t0 = time.time()
+        try:
+            # roofline probes on the single-pod mesh only (the assignment's
+            # roofline table is single-pod; multi-pod proves the pod axis)
+            res = run_cell(a, s, multi_pod=mp,
+                           probes=not args.no_probes and not mp)
+            path = save_artifact(res, args.out)
+            r = res.get("roofline", {})
+            print(f"[ok]   {tag}: peak/dev="
+                  f"{res['bytes_per_device']['peak_est']/2**30:.2f}GiB "
+                  f"fits={res['fits_hbm']} dominant={r.get('dominant', '-')} "
+                  f"({time.time()-t0:.0f}s) -> {path}", flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"[FAIL] {tag}: {type(e).__name__}: {e}", flush=True)
+            traceback.print_exc()
+        gc.collect()
+    print(f"done: {len(cells) - failures}/{len(cells)} cells ok", flush=True)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Model zoo: composable transformer (dense/GQA/SWA/MoE), Mamba hybrid,
+xLSTM, whisper enc-dec, VLM backbone — pure JAX, scan-over-layers."""
+from repro.models.transformer import ModelConfig, init_params, forward, loss_fn  # noqa: F401

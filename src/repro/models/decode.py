@@ -1,0 +1,153 @@
+"""Single-token decode over the interleaved KV cache (serve_step body).
+
+Cache layout (EARTH): each attention layer stores K and V interleaved along
+features — appending a token is ONE dynamic_update_slice per layer (the
+coalesced segment transaction), splitting at attention time is a FIELD=2
+segment load. Sliding-window layers keep a ring buffer of exactly W beats
+(RoPE is applied pre-cache, so scores are storage-order independent).
+
+SSM / xLSTM blocks carry O(1) recurrent state — no KV growth, which is why
+those archs run the long_500k cell.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import drom
+from repro.models import attention, layers
+from repro.models.ssm import init_mamba_cache, mamba_decode_step
+from repro.models.transformer import ModelConfig, _ffn_apply
+from repro.models.xlstm import (init_mlstm_state, init_slstm_state,
+                                mlstm_decode_step, slstm_decode_step)
+
+
+def cache_len_for_pos(cfg: ModelConfig, i: int, max_len: int) -> int:
+    w = cfg.window_pattern[i]
+    return min(w, max_len) if w is not None else max_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> dict:
+    """Empty cache pytree; leaves stacked over superblocks (scan-ready)."""
+    ns = cfg.n_superblocks
+    blocks: dict[str, Any] = {}
+    for i, kind in enumerate(cfg.block_pattern):
+        if kind == "attn":
+            sc = cache_len_for_pos(cfg, i, max_len)
+            blocks[f"pos{i}"] = jnp.zeros(
+                (ns, batch, sc, cfg.n_kv_heads, 2 * cfg.hd), dtype)
+        elif kind == "mamba":
+            c = init_mamba_cache(batch, cfg.mamba, dtype)
+            blocks[f"pos{i}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (ns,) + a.shape), c)
+        elif kind == "mlstm":
+            s = init_mlstm_state(batch, cfg.xlstm)
+            blocks[f"pos{i}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (ns,) + a.shape), s)
+        elif kind == "slstm":
+            s = init_slstm_state(batch, cfg.xlstm)
+            blocks[f"pos{i}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (ns,) + a.shape), s)
+    return {"len": jnp.zeros((), jnp.int32), "blocks": blocks}
+
+
+def cache_from_prefill(cfg: ModelConfig, cache_states, seq_len: int,
+                       max_len: int, dtype) -> dict:
+    """Embed prefill-produced states into a max_len cache."""
+    blocks = {}
+    for i, kind in enumerate(cfg.block_pattern):
+        st = cache_states[f"pos{i}"]
+        if kind == "attn":
+            sc = cache_len_for_pos(cfg, i, max_len)
+            kv = st.astype(dtype)                      # (NS,B,S or W,K,2D)
+            if kv.shape[2] < sc:
+                kv = jnp.pad(kv, ((0, 0), (0, 0), (0, sc - kv.shape[2]),
+                                  (0, 0), (0, 0)))
+            elif kv.shape[2] > sc:
+                kv = kv[:, :, :sc]
+            blocks[f"pos{i}"] = kv
+        else:
+            blocks[f"pos{i}"] = st
+    return {"len": jnp.asarray(seq_len, jnp.int32), "blocks": blocks}
+
+
+def decode_step(params, cache: dict, token: jax.Array, cfg: ModelConfig,
+                ctx) -> tuple[jax.Array, dict]:
+    """token: (B,) int32. Returns (logits (B, V), updated cache)."""
+    from repro.models.transformer import cast_params
+    params = cast_params(params, cfg)
+    if cfg.encoder is not None:
+        from repro.models import encdec
+        return encdec.decode_step(params, cache, token, cfg, ctx)
+    B = token.shape[0]
+    pos = cache["len"]
+    x = layers.embed(token, params["embed"]).astype(cfg.cdtype)
+
+    def sb_step(x, inp):
+        sb_p, sb_c = inp
+        new_c = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            p = sb_p[f"pos{i}"]
+            if kind == "attn":
+                h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+                positions = jnp.broadcast_to(pos, (B, 1))
+                q, _, _, kv = attention.qkv_project(
+                    p["attn"], h[:, None], cfg.n_heads, cfg.n_kv_heads,
+                    cfg.hd, positions, cfg.rope_theta, impl=cfg.kernel_impl)
+                kvc = sb_c[f"pos{i}"]                      # (B, Sc, K, 2D)
+                sc = kvc.shape[1]
+                slot = jax.lax.rem(pos, sc)
+                kvc = jax.lax.dynamic_update_slice_in_dim(
+                    kvc, kv.astype(kvc.dtype), slot, axis=1)
+                k_all, v_all = drom.deinterleave(kvc, 2, impl="ref")
+                eff_len = jnp.minimum(pos + 1, sc)
+                out = attention.decode_attention(
+                    q[:, 0], k_all, v_all, eff_len, window=None)
+                x = x + (out.reshape(B, cfg.n_heads * cfg.hd)
+                         @ p["attn"]["wo"]).astype(x.dtype)
+                new_c[f"pos{i}"] = kvc
+            elif kind == "mamba":
+                h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+                pm = dict(p["mamba"])
+                pm["in_proj"] = pm["in_proj"].reshape(cfg.d_model,
+                                                      2 * cfg.mamba.ed)
+                y, st = mamba_decode_step(pm, h, sb_c[f"pos{i}"], cfg.mamba)
+                x = x + y
+                new_c[f"pos{i}"] = st
+            elif kind == "mlstm":
+                h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+                px = dict(p["xl"])
+                px["up"] = px["up"].reshape(cfg.d_model,
+                                            2 * cfg.xlstm.m_inner)
+                y, st = mlstm_decode_step(px, h, sb_c[f"pos{i}"], cfg.xlstm)
+                x = x + y
+                new_c[f"pos{i}"] = st
+            elif kind == "slstm":
+                h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+                y, st = slstm_decode_step(p["slstm"], h, sb_c[f"pos{i}"],
+                                          cfg.xlstm)
+                x = x + y
+                new_c[f"pos{i}"] = st
+            if cfg.pos_has_ffn(i):
+                x2, _ = _ffn_apply(p, x[:, None], cfg, ctx, i)
+                x = x2[:, 0]
+        return x, new_c
+
+    if cfg.scan_layers:
+        x, new_blocks = jax.lax.scan(sb_step, x,
+                                     (params["blocks"], cache["blocks"]))
+    else:
+        outs = []
+        for sbi in range(cfg.n_superblocks):
+            sb = jax.tree.map(lambda a: a[sbi], params["blocks"])
+            cb = jax.tree.map(lambda a: a[sbi], cache["blocks"])
+            x, nb = sb_step(x, (sb, cb))
+            outs.append(nb)
+        new_blocks = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = layers.unembed(x, head.astype(cfg.cdtype))
+    return logits, {"len": pos + 1, "blocks": new_blocks}

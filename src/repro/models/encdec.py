@@ -1,0 +1,231 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs`` feeds
+precomputed frame embeddings (B, F, d_model). The encoder is a bidirectional
+transformer (sinusoidal positions); the decoder adds causal self-attention
+with interleaved KV cache + cross-attention over cached encoder K/V.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import drom
+from repro.models import attention, layers
+
+
+def _sinusoid(positions: jax.Array, d: int) -> jax.Array:
+    half = d // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32)
+                    * (jnp.log(10000.0) / max(half - 1, 1)))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def init_encoder(key, cfg) -> dict:
+    """Stacked encoder blocks (self-attn + MLP)."""
+    n = cfg.encoder.n_layers
+    ks = jax.random.split(key, n)
+
+    def one(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "ln1": jnp.ones((cfg.d_model,), cfg.pdtype),
+            "attn": attention.init_attention(k1, cfg.d_model, cfg.n_heads,
+                                             cfg.n_kv_heads, cfg.hd,
+                                             qk_norm=False, dtype=cfg.pdtype),
+            "ln2": jnp.ones((cfg.d_model,), cfg.pdtype),
+            "mlp": layers.init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.pdtype),
+        }
+
+    blocks = [one(k) for k in ks]
+    return {"blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *blocks),
+            "final_norm": jnp.ones((cfg.d_model,), cfg.pdtype)}
+
+
+def init_cross_stack(key, cfg) -> dict:
+    """Per-decoder-layer cross-attention params, stacked like blocks."""
+    ns = cfg.n_superblocks
+    ks = jax.random.split(key, ns)
+
+    def one(k):
+        return {"ln": jnp.ones((cfg.d_model,), cfg.pdtype),
+                "xattn": attention.init_cross_attention(
+                    k, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+                    cfg.pdtype)}
+
+    xs = [one(k) for k in ks]
+    return jax.tree.map(lambda *a: jnp.stack(a), *xs)
+
+
+def encode(params, frames: jax.Array, cfg, ctx) -> jax.Array:
+    """frames: (B, F, d) stub embeddings -> encoder output (B, F, d)."""
+    B, F, _ = frames.shape
+    x = frames.astype(cfg.cdtype) + _sinusoid(
+        jnp.arange(F), cfg.d_model).astype(cfg.cdtype)
+
+    def body(x, blk):
+        h = layers.rms_norm(x, blk["ln1"], cfg.norm_eps)
+        q = (h @ blk["attn"]["wq"]).reshape(B, F, cfg.n_heads, cfg.hd)
+        kv = (h @ blk["attn"]["wkv"]).reshape(B, F, cfg.n_kv_heads,
+                                              2 * cfg.hd)
+        k, v = drom.deinterleave(kv, 2, impl=cfg.kernel_impl)
+        out = attention.flash_attention(q, k, v, causal=False, window=None,
+                                        q_chunk=min(512, F),
+                                        kv_chunk=min(512, F), ctx=ctx)
+        x = x + out.reshape(B, F, -1) @ blk["attn"]["wo"]
+        h2 = layers.rms_norm(x, blk["ln2"], cfg.norm_eps)
+        return x + layers.mlp_ffn(blk["mlp"], h2), None
+
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["encoder"]["blocks"])
+    else:
+        for li in range(cfg.encoder.n_layers):
+            blk = jax.tree.map(lambda a: a[li], params["encoder"]["blocks"])
+            x, _ = body(x, blk)
+    return layers.rms_norm(x, params["encoder"]["final_norm"], cfg.norm_eps)
+
+
+def _decoder_self_and_cross(sb_p, cross_p, x, cfg, ctx, positions, enc_kv,
+                            mode):
+    """One decoder superblock position (self-attn + cross + mlp)."""
+    from repro.models.transformer import _ffn_apply
+    p = sb_p["pos0"]
+    B, S = x.shape[:2]
+    h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+    q, k, v, kv = attention.qkv_project(p["attn"], h, cfg.n_heads,
+                                        cfg.n_kv_heads, cfg.hd, positions,
+                                        cfg.rope_theta, impl=cfg.kernel_impl)
+    out = attention.flash_attention(q, k, v, causal=True, window=None,
+                                    q_chunk=min(512, S), kv_chunk=min(512, S),
+                                    ctx=ctx)
+    x = x + out.reshape(B, S, -1) @ p["attn"]["wo"]
+    # cross attention over encoder K/V
+    ck, cv = enc_kv
+    hx = layers.rms_norm(x, cross_p["ln"], cfg.norm_eps)
+    x = x + attention.cross_attention(cross_p["xattn"], hx, ck, cv,
+                                      cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+                                      ctx=ctx)
+    x, _ = _ffn_apply(p, x, cfg, ctx, 0)
+    return x, (kv if mode == "prefill" else None)
+
+
+def forward(params, batch, cfg, ctx, *, mode: str = "train"):
+    """batch: tokens (B,S) + audio_frames (B,F,d). Returns (logits, aux, cache)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    enc_out = encode(params, batch["audio_frames"], cfg, ctx)
+    x = layers.embed(tokens, params["embed"]).astype(cfg.cdtype)
+    x = x + _sinusoid(jnp.arange(S), cfg.d_model).astype(cfg.cdtype)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def body(carry, inp):
+        x = carry
+        sb_p, cross_p = inp
+        ck, cv = attention.encoder_kv(cross_p["xattn"], enc_out,
+                                      cfg.n_kv_heads, cfg.hd,
+                                      impl=cfg.kernel_impl)
+        x, kv = _decoder_self_and_cross(sb_p, cross_p, x, cfg, ctx,
+                                        positions, (ck, cv), mode)
+        return x, (kv if mode == "prefill" else 0)
+
+    fn = jax.checkpoint(body) if cfg.remat != "none" else body
+    if cfg.scan_layers:
+        x, kvs = jax.lax.scan(fn, x, (params["blocks"], params["cross"]))
+    else:
+        kv_list = []
+        for li in range(cfg.n_superblocks):
+            inp = jax.tree.map(lambda a: a[li],
+                               (params["blocks"], params["cross"]))
+            x, kv = fn(x, inp)
+            kv_list.append(kv)
+        kvs = (jax.tree.map(lambda *xs: jnp.stack(xs), *kv_list)
+               if mode == "prefill" else jnp.stack(kv_list))
+    if mode == "prefill":
+        x = x[:, -1:]  # serving prefill only needs next-token logits
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    cache_states = {"pos0": kvs, "enc_out": enc_out} if mode == "prefill" \
+        else {}
+    if mode == "hidden":
+        return x, aux, cache_states
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = layers.unembed(x, head.astype(cfg.cdtype))
+    return logits, aux, cache_states
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype) -> dict:
+    ns = cfg.n_superblocks
+    F = cfg.encoder.context
+    return {
+        "len": jnp.zeros((), jnp.int32),
+        "blocks": {"pos0": jnp.zeros(
+            (ns, batch, max_len, cfg.n_kv_heads, 2 * cfg.hd), dtype)},
+        "enc_kv": jnp.zeros((ns, batch, F, cfg.n_kv_heads, 2 * cfg.hd),
+                            dtype),
+    }
+
+
+def precompute_enc_kv(params, frames, cfg, ctx) -> jax.Array:
+    """(NS, B, F, K, 2D) interleaved encoder K/V for decode."""
+    enc_out = encode(params, frames, cfg, ctx)
+
+    def one(cross_p):
+        kv = (enc_out @ cross_p["xattn"]["wkv"]).reshape(
+            enc_out.shape[0], enc_out.shape[1], cfg.n_kv_heads, 2 * cfg.hd)
+        return kv
+
+    return jax.vmap(one)(params["cross"])
+
+
+def decode_step(params, cache, token, cfg, ctx):
+    from repro.models.transformer import cast_params
+    params = cast_params(params, cfg)
+    B = token.shape[0]
+    pos = cache["len"]
+    x = layers.embed(token, params["embed"]).astype(cfg.cdtype)
+    x = x + _sinusoid(pos[None], cfg.d_model).astype(cfg.cdtype)[0]
+
+    def sb_step(x, inp):
+        sb_p, cross_p, kvc, enc_kv = inp
+        p = sb_p["pos0"]
+        h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+        positions = jnp.broadcast_to(pos, (B, 1))
+        q, _, _, kv = attention.qkv_project(p["attn"], h[:, None],
+                                            cfg.n_heads, cfg.n_kv_heads,
+                                            cfg.hd, positions, cfg.rope_theta,
+                                            impl=cfg.kernel_impl)
+        sc = kvc.shape[1]
+        kvc = jax.lax.dynamic_update_slice_in_dim(
+            kvc, kv.astype(kvc.dtype), jax.lax.rem(pos, sc), axis=1)
+        k_all, v_all = drom.deinterleave(kvc, 2, impl="ref")
+        out = attention.decode_attention(q[:, 0], k_all, v_all,
+                                         jnp.minimum(pos + 1, sc))
+        x = x + (out.reshape(B, -1) @ p["attn"]["wo"]).astype(x.dtype)
+        # cross attention against cached encoder K/V
+        ek, ev = drom.deinterleave(enc_kv, 2, impl="ref")
+        hx = layers.rms_norm(x, cross_p["ln"], cfg.norm_eps)
+        qx = (hx @ cross_p["xattn"]["wq"]).reshape(B, cfg.n_heads, cfg.hd)
+        xo = attention.decode_attention(qx, ek, ev, ek.shape[1])
+        x = x + (xo.reshape(B, -1) @ cross_p["xattn"]["wo"]).astype(x.dtype)
+        from repro.models.transformer import _ffn_apply
+        x2, _ = _ffn_apply(p, x[:, None], cfg, ctx, 0)
+        return x2[:, 0], kvc
+
+    xs_all = (params["blocks"], params["cross"], cache["blocks"]["pos0"],
+              cache["enc_kv"])
+    if cfg.scan_layers:
+        x, new_kv = jax.lax.scan(sb_step, x, xs_all)
+    else:
+        kv_list = []
+        for li in range(cfg.n_superblocks):
+            x, kvc = sb_step(x, jax.tree.map(lambda a: a[li], xs_all))
+            kv_list.append(kvc)
+        new_kv = jnp.stack(kv_list)
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = layers.unembed(x, head.astype(cfg.cdtype))
+    return logits, {"len": pos + 1, "blocks": {"pos0": new_kv},
+                    "enc_kv": cache["enc_kv"]}

@@ -1,0 +1,167 @@
+"""Mamba (selective SSM) block — the state-space half of Jamba.
+
+Training/prefill run a chunked recurrent scan: lax.scan over time inside a
+jax.checkpoint'd chunk, outer scan over chunks. Memory is O(state) at chunk
+boundaries + O(chunk x state / remat) — the only formulation that fits at
+Jamba scale (ed=16384, N=16) without the paper's CUDA kernel; the ed axis is
+sharded over the model axis by the distribution layer.
+
+Decode carries (conv_state, h) in the cache: O(1) per token — why Jamba runs
+the long_500k cell that full-attention archs skip.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class MambaSpec(NamedTuple):
+    d_model: int
+    expand: int = 2
+    state_dim: int = 16
+    conv_width: int = 4
+    dt_rank: int = 0  # 0 -> d_model // 16
+
+    @property
+    def ed(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def rank(self) -> int:
+        return self.dt_rank or max(1, self.d_model // 16)
+
+
+def init_mamba(key, spec: MambaSpec, dtype) -> dict:
+    ks = jax.random.split(key, 7)
+    d, ed, N, r = spec.d_model, spec.ed, spec.state_dim, spec.rank
+    s = d ** -0.5
+    return {
+        "in_proj": jax.random.normal(ks[0], (d, 2 * ed), dtype) * s,
+        "conv_w": jax.random.normal(ks[1], (spec.conv_width, ed), dtype) * 0.1,
+        "conv_b": jnp.zeros((ed,), dtype),
+        "x_proj": jax.random.normal(ks[2], (ed, r + 2 * N), dtype) * ed ** -0.5,
+        "dt_proj": jax.random.normal(ks[3], (r, ed), dtype) * r ** -0.5,
+        "dt_bias": jnp.log(jnp.expm1(  # softplus^-1 of U(1e-3, 1e-1)
+            jax.random.uniform(ks[4], (ed,), jnp.float32, 1e-3, 1e-1))
+        ).astype(dtype),
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, N + 1, dtype=jnp.float32), (ed, N))).astype(dtype),
+        "D": jnp.ones((ed,), dtype),
+        "out_proj": jax.random.normal(ks[5], (ed, d), dtype) * ed ** -0.5,
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv via static shifts. x: (B,S,ed); w: (W,ed)."""
+    W = w.shape[0]
+    out = jnp.zeros_like(x)
+    for i in range(W):  # tap i sees x shifted back by (W-1-i)
+        lag = W - 1 - i
+        shifted = jnp.pad(x, ((0, 0), (lag, 0), (0, 0)))[:, :x.shape[1]]
+        out = out + shifted * w[i]
+    return out + b
+
+
+def _ssm_inputs(params, x: jax.Array, spec: MambaSpec):
+    """Common projections. x: (B,S,ed) post-conv. Returns dt,(B,S,ed) B,C (B,S,N)."""
+    N, r = spec.state_dim, spec.rank
+    proj = x @ params["x_proj"]
+    dt_in, Bmat, Cmat = jnp.split(proj, [r, r + N], axis=-1)
+    dt = jax.nn.softplus(dt_in @ params["dt_proj"]
+                         + params["dt_bias"].astype(jnp.float32))
+    return dt, Bmat, Cmat
+
+
+def selective_scan(dt, Bm, Cm, x, A, D, h0, *, chunk: int = 128):
+    """h_t = exp(dt*A) h_{t-1} + dt*B_t x_t ; y_t = C_t.h_t + D x_t.
+
+    dt, x: (B,S,ed); Bm, Cm: (B,S,N); A: (ed,N); h0: (B,ed,N) fp32.
+    Returns (y (B,S,ed), h_final). Chunked + remat (see module docstring).
+    """
+    Bsz, S, ed = x.shape
+    chunk = min(chunk, S)
+    main = (S // chunk) * chunk
+    nc = main // chunk
+
+    def step(h, inp):
+        dt_t, B_t, C_t, x_t = inp             # (B,ed),(B,N),(B,N),(B,ed)
+        da = jnp.exp(dt_t[..., None] * A)     # (B,ed,N)
+        h = da * h + (dt_t * x_t)[..., None] * B_t[:, None, :]
+        y = jnp.einsum("ben,bn->be", h, C_t)
+        return h, y
+
+    @jax.checkpoint
+    def chunk_fn(h, inputs):
+        return jax.lax.scan(step, h, inputs)
+
+    def outer(h, cidx):
+        sl = lambda a: jax.lax.dynamic_slice_in_dim(a, cidx * chunk, chunk, 1)
+        inputs = tuple(jnp.moveaxis(sl(a), 1, 0)
+                       for a in (dt, Bm, Cm, x))  # time-major (chunk,B,...)
+        h, ys = chunk_fn(h, inputs)
+        return h, jnp.moveaxis(ys, 0, 1)
+
+    h, ys = jax.lax.scan(outer, h0.astype(jnp.float32), jnp.arange(nc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, main, ed)
+    if main < S:  # exact ragged tail (one extra short chunk)
+        tail = tuple(jnp.moveaxis(a[:, main:], 1, 0)
+                     for a in (dt, Bm, Cm, x))
+        h, yt = chunk_fn(h, tail)
+        y = jnp.concatenate([y, jnp.moveaxis(yt, 0, 1)], axis=1)
+    return (y + x * D).astype(x.dtype), h
+
+
+def mamba_forward(params, x: jax.Array, spec: MambaSpec, *,
+                  chunk: int = 128) -> tuple[jax.Array, "MambaCache"]:
+    """Full block forward (train/prefill). x: (B,S,d) -> ((B,S,d), cache).
+
+    The returned cache (final conv window + SSM state) is free in training —
+    XLA dead-code-eliminates it when unused."""
+    xz = x @ params["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(_causal_conv(xin, params["conv_w"], params["conv_b"]))
+    dt, Bm, Cm = _ssm_inputs(params, xc, spec)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    h0 = jnp.zeros((x.shape[0], spec.ed, spec.state_dim), jnp.float32)
+    y, hf = selective_scan(dt.astype(jnp.float32), Bm.astype(jnp.float32),
+                           Cm.astype(jnp.float32), xc.astype(jnp.float32),
+                           A, params["D"].astype(jnp.float32), h0, chunk=chunk)
+    out = (y.astype(x.dtype) * jax.nn.silu(z)) @ params["out_proj"]
+    W = spec.conv_width
+    S = x.shape[1]
+    conv = xin[:, -(W - 1):] if S >= W - 1 else jnp.pad(
+        xin, ((0, 0), (W - 1 - S, 0), (0, 0)))
+    return out, MambaCache(conv=conv, h=hf)
+
+
+class MambaCache(NamedTuple):
+    conv: jax.Array   # (B, W-1, ed) last inputs
+    h: jax.Array      # (B, ed, N) fp32 SSM state
+
+
+def init_mamba_cache(batch: int, spec: MambaSpec, dtype) -> MambaCache:
+    return MambaCache(
+        conv=jnp.zeros((batch, spec.conv_width - 1, spec.ed), dtype),
+        h=jnp.zeros((batch, spec.ed, spec.state_dim), jnp.float32))
+
+
+def mamba_decode_step(params, x_t: jax.Array, cache: MambaCache,
+                      spec: MambaSpec) -> tuple[jax.Array, MambaCache]:
+    """One-token step. x_t: (B, d). O(1) state update."""
+    xz = x_t @ params["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)          # (B, ed)
+    window = jnp.concatenate([cache.conv, xin[:, None]], axis=1)  # (B,W,ed)
+    xc = jnp.einsum("bwe,we->be", window, params["conv_w"]) + params["conv_b"]
+    xc = jax.nn.silu(xc)
+    dt, Bm, Cm = _ssm_inputs(params, xc[:, None], spec)
+    dt, Bm, Cm = dt[:, 0], Bm[:, 0], Cm[:, 0]
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    da = jnp.exp(dt.astype(jnp.float32)[..., None] * A)
+    h = da * cache.h + (dt * xc).astype(jnp.float32)[..., None] \
+        * Bm.astype(jnp.float32)[:, None, :]
+    y = jnp.einsum("ben,bn->be", h, Cm.astype(jnp.float32))
+    y = (y + xc.astype(jnp.float32) * params["D"]).astype(x_t.dtype)
+    out = (y * jax.nn.silu(z)) @ params["out_proj"]
+    return out, MambaCache(conv=window[:, 1:], h=h)

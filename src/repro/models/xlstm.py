@@ -1,0 +1,237 @@
+"""xLSTM blocks (mLSTM matrix-memory + sLSTM scalar-memory), arXiv:2405.04517.
+
+Both use exponential gating with the max-stabilizer. mLSTM has no hidden-to-
+hidden dependency (the C update is associative-ish), but we keep the exact
+recurrent form with chunked remat scans (same pattern as models/ssm.py);
+sLSTM is inherently serial through h_{t-1} (recurrent R matrix).
+
+Decode carries (C, n, m) / (c, n, m, h) — O(1) per token, which is why the
+xlstm arch runs the long_500k cell.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class XLSTMSpec(NamedTuple):
+    d_model: int
+    n_heads: int
+    m_proj_factor: float = 2.0   # mLSTM up-projection
+    s_ffn_factor: float = 4.0 / 3.0
+
+    @property
+    def m_inner(self) -> int:
+        return int(self.d_model * self.m_proj_factor)
+
+    @property
+    def m_head(self) -> int:
+        return self.m_inner // self.n_heads
+
+    @property
+    def s_head(self) -> int:
+        return self.d_model // self.n_heads
+
+
+def _logsig(x):
+    return -jax.nn.softplus(-x)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, spec: XLSTMSpec, dtype) -> dict:
+    ks = jax.random.split(key, 8)
+    d, ed, H = spec.d_model, spec.m_inner, spec.n_heads
+    s, si = d ** -0.5, ed ** -0.5
+    return {
+        "up": jax.random.normal(ks[0], (d, 2 * ed), dtype) * s,
+        "wq": jax.random.normal(ks[1], (ed, ed), dtype) * si,
+        "wk": jax.random.normal(ks[2], (ed, ed), dtype) * si,
+        "wv": jax.random.normal(ks[3], (ed, ed), dtype) * si,
+        "wi": jax.random.normal(ks[4], (ed, H), dtype) * si,
+        "wf": jax.random.normal(ks[5], (ed, H), dtype) * si,
+        "fb": jnp.full((H,), 3.0, dtype),  # forget bias -> long memory at init
+        "down": jax.random.normal(ks[6], (ed, d), dtype) * si,
+        "ogate": jax.random.normal(ks[7], (d, ed), dtype) * s,
+    }
+
+
+class MLSTMState(NamedTuple):
+    C: jax.Array   # (B, H, dh, dh) fp32
+    n: jax.Array   # (B, H, dh) fp32
+    m: jax.Array   # (B, H) fp32
+
+
+def init_mlstm_state(batch: int, spec: XLSTMSpec) -> MLSTMState:
+    H, dh = spec.n_heads, spec.m_head
+    return MLSTMState(C=jnp.zeros((batch, H, dh, dh), jnp.float32),
+                      n=jnp.zeros((batch, H, dh), jnp.float32),
+                      m=jnp.full((batch, H), -1e30, jnp.float32))
+
+
+def _mlstm_step(state: MLSTMState, qkvif):
+    q, k, v, i, f = qkvif  # (B,H,dh) x3, (B,H) x2, all fp32
+    dh = q.shape[-1]
+    ft = _logsig(f)
+    m_new = jnp.maximum(ft + state.m, i)
+    fg = jnp.exp(ft + state.m - m_new)
+    ig = jnp.exp(i - m_new)
+    C = fg[..., None, None] * state.C + ig[..., None, None] \
+        * (v[..., :, None] * k[..., None, :])
+    n = fg[..., None] * state.n + ig[..., None] * k
+    qs = q * dh ** -0.5
+    num = jnp.einsum("bhij,bhj->bhi", C, qs)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhj,bhj->bh", n, qs)),
+                      jnp.exp(-m_new))
+    h = num / den[..., None]
+    return MLSTMState(C, n, m_new), h
+
+
+def mlstm_forward(params, x: jax.Array, spec: XLSTMSpec, *,
+                  chunk: int = 64) -> jax.Array:
+    """x: (B, S, d) -> (B, S, d)."""
+    B, S, _ = x.shape
+    H, dh = spec.n_heads, spec.m_head
+    xu, z = jnp.split(x @ params["up"], 2, axis=-1)        # (B,S,ed) x2
+    og = jax.nn.sigmoid(x @ params["ogate"])
+    q = (xu @ params["wq"]).reshape(B, S, H, dh).astype(jnp.float32)
+    k = (xu @ params["wk"]).reshape(B, S, H, dh).astype(jnp.float32)
+    v = (xu @ params["wv"]).reshape(B, S, H, dh).astype(jnp.float32)
+    i = (xu @ params["wi"]).astype(jnp.float32)            # (B,S,H)
+    f = (xu @ params["wf"] + params["fb"]).astype(jnp.float32)
+
+    chunk = min(chunk, S)
+    main = (S // chunk) * chunk
+
+    @jax.checkpoint
+    def chunk_fn(state, inputs):
+        return jax.lax.scan(_mlstm_step, state, inputs)
+
+    def outer(state, cidx):
+        sl = lambda a: jnp.moveaxis(
+            jax.lax.dynamic_slice_in_dim(a, cidx * chunk, chunk, 1), 1, 0)
+        state, hs = chunk_fn(state, (sl(q), sl(k), sl(v), sl(i), sl(f)))
+        return state, hs
+
+    state0 = init_mlstm_state(B, spec)
+    state, hs = jax.lax.scan(outer, state0, jnp.arange(main // chunk))
+    hs = hs.reshape(main, B, H, dh)
+    if main < S:  # exact ragged tail
+        tl = lambda a: jnp.moveaxis(a[:, main:], 1, 0)
+        state, ht = chunk_fn(state, (tl(q), tl(k), tl(v), tl(i), tl(f)))
+        hs = jnp.concatenate([hs, ht], axis=0)
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, H * dh)
+    out = (h.astype(x.dtype) * og * jax.nn.silu(z)) @ params["down"]
+    return out, state
+
+
+def mlstm_decode_step(params, x_t: jax.Array, state: MLSTMState,
+                      spec: XLSTMSpec) -> tuple[jax.Array, MLSTMState]:
+    """x_t: (B, d)."""
+    B = x_t.shape[0]
+    H, dh = spec.n_heads, spec.m_head
+    xu, z = jnp.split(x_t @ params["up"], 2, axis=-1)
+    og = jax.nn.sigmoid(x_t @ params["ogate"])
+    q = (xu @ params["wq"]).reshape(B, H, dh).astype(jnp.float32)
+    k = (xu @ params["wk"]).reshape(B, H, dh).astype(jnp.float32)
+    v = (xu @ params["wv"]).reshape(B, H, dh).astype(jnp.float32)
+    i = (xu @ params["wi"]).astype(jnp.float32)
+    f = (xu @ params["wf"] + params["fb"]).astype(jnp.float32)
+    state, h = _mlstm_step(state, (q, k, v, i, f))
+    out = (h.reshape(B, H * dh).astype(x_t.dtype) * og
+           * jax.nn.silu(z)) @ params["down"]
+    return out, state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, spec: XLSTMSpec, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    d, H, dh = spec.d_model, spec.n_heads, spec.s_head
+    f = int(spec.d_model * spec.s_ffn_factor)
+    return {
+        "wx": jax.random.normal(ks[0], (d, 4 * d), dtype) * d ** -0.5,
+        # recurrent R: block-diagonal per head, stored (H, dh, 4*dh)
+        "r": jax.random.normal(ks[1], (H, dh, 4 * dh), dtype) * dh ** -0.5,
+        "fb": jnp.full((d,), 3.0, dtype),
+        "ffn_wi": jax.random.normal(ks[2], (d, 2 * f), dtype) * d ** -0.5,
+        "ffn_wo": jax.random.normal(ks[3], (f, d), dtype) * f ** -0.5,
+    }
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array   # (B, d) fp32
+    n: jax.Array   # (B, d) fp32
+    m: jax.Array   # (B, d) fp32
+    h: jax.Array   # (B, d) fp32
+
+
+def init_slstm_state(batch: int, spec: XLSTMSpec) -> SLSTMState:
+    d = spec.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return SLSTMState(c=z, n=z, m=jnp.full((batch, d), -1e30, jnp.float32),
+                      h=z)
+
+
+def _slstm_step(params, spec: XLSTMSpec, state: SLSTMState, wx_t):
+    """wx_t: (B, 4d) precomputed input projection for step t."""
+    B = wx_t.shape[0]
+    H, dh = spec.n_heads, spec.s_head
+    hr = state.h.reshape(B, H, dh)
+    rec = jnp.einsum("bhi,hij->bhj", hr,
+                     params["r"].astype(jnp.float32)).reshape(B, 4 * H * dh)
+    pre = wx_t + rec
+    zi, ii, fi, oi = jnp.split(pre, 4, axis=-1)
+    fb = params["fb"].astype(jnp.float32)
+    ft = _logsig(fi + fb)
+    m_new = jnp.maximum(ft + state.m, ii)
+    fg = jnp.exp(ft + state.m - m_new)
+    ig = jnp.exp(ii - m_new)
+    c = fg * state.c + ig * jnp.tanh(zi)
+    n = fg * state.n + ig
+    h = jax.nn.sigmoid(oi) * c / jnp.maximum(n, 1e-6)
+    return SLSTMState(c, n, m_new, h), h
+
+
+def slstm_forward(params, x: jax.Array, spec: XLSTMSpec, *,
+                  chunk: int = 64) -> jax.Array:
+    B, S, d = x.shape
+    wx = (x @ params["wx"]).astype(jnp.float32)  # (B,S,4d)
+    chunk = min(chunk, S)
+    main = (S // chunk) * chunk
+
+    @jax.checkpoint
+    def chunk_fn(state, inputs):
+        return jax.lax.scan(lambda s, i: _slstm_step(params, spec, s, i),
+                            state, inputs)
+
+    def outer(state, cidx):
+        inp = jnp.moveaxis(
+            jax.lax.dynamic_slice_in_dim(wx, cidx * chunk, chunk, 1), 1, 0)
+        return chunk_fn(state, inp)
+
+    state, hs = jax.lax.scan(outer, init_slstm_state(B, spec),
+                             jnp.arange(main // chunk))
+    hs = hs.reshape(main, B, d)
+    if main < S:  # exact ragged tail
+        state, ht = chunk_fn(state, jnp.moveaxis(wx[:, main:], 1, 0))
+        hs = jnp.concatenate([hs, ht], axis=0)
+    h = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+    # gated FFN (paper: post-sLSTM up/down with pf 4/3)
+    g, u = jnp.split(h @ params["ffn_wi"], 2, axis=-1)
+    return jax.nn.gelu(g, approximate=True) * u @ params["ffn_wo"], state
+
+
+def slstm_decode_step(params, x_t: jax.Array, state: SLSTMState,
+                      spec: XLSTMSpec) -> tuple[jax.Array, SLSTMState]:
+    wx = (x_t @ params["wx"]).astype(jnp.float32)
+    state, h = _slstm_step(params, spec, state, wx)
+    h = h.astype(x_t.dtype)
+    g, u = jnp.split(h @ params["ffn_wi"], 2, axis=-1)
+    return jax.nn.gelu(g, approximate=True) * u @ params["ffn_wo"], state

@@ -1,0 +1,4 @@
+"""Optimizer substrate: AdamW, schedules, gradient compression."""
+from repro.optim.adamw import (AdamWConfig, apply_updates, init_opt_state,  # noqa: F401
+                               schedule)
+from repro.optim.compression import CompressionConfig, compress_with_feedback  # noqa: F401

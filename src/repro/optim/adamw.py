@@ -1,0 +1,98 @@
+"""AdamW + schedules + global-norm clipping, pure JAX (no optax).
+
+Optimizer state is a pytree mirroring params; ZeRO-1 sharding is applied by
+the train-step builder by giving m/v (and fp32 master params) extra
+data-axis sharding (see train/step.py)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to min_lr_ratio."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 \
+        * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> tuple[Any, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def init_opt_state(params: Any) -> dict:
+    zeros = lambda p: jax.tree.map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), p)
+    return {"m": zeros(params), "v": zeros(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _decay_mask(path: str) -> bool:
+    """No weight decay on norms/biases/1-D scales."""
+    return not any(t in path for t in ("norm", "scale", "bias", "ln", "fb",
+                                       "dt_bias", "D"))
+
+
+def apply_updates(params: Any, grads: Any, opt: dict, cfg: AdamWConfig
+                  ) -> tuple[Any, dict, dict]:
+    """Returns (new_params, new_opt_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = opt["step"] + 1
+    lr = schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    flat_p = jax.tree_util.tree_flatten_with_path(params)[0]
+    paths = ["/".join(getattr(k, "key", str(k)) for k in kp)
+             for kp, _ in flat_p]
+    treedef = jax.tree_util.tree_structure(params)
+    wd_tree = jax.tree_util.tree_unflatten(
+        treedef, [cfg.weight_decay if _decay_mask(p) else 0.0 for p in paths])
+
+    def upd(p, g, m, v, wd):
+        g = g.astype(jnp.float32)
+        p32 = p.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mhat = m / b1c
+        vhat = v / b2c
+        step_dir = mhat / (jnp.sqrt(vhat) + cfg.eps) + wd * p32
+        return (p32 - lr * step_dir).astype(p.dtype), m, v
+
+    new = jax.tree.map(upd, params, grads, opt["m"], opt["v"], wd_tree)
+    new_params = jax.tree.map(lambda t: t[0], new,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], new,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], new,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return (new_params, {"m": new_m, "v": new_v, "step": step},
+            {"grad_norm": gnorm, "lr": lr})

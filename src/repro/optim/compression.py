@@ -1,0 +1,81 @@
+"""Error-feedback gradient compression for data-parallel reduction.
+
+Two compressors (both with per-tensor error feedback, the standard fix that
+keeps compressed SGD convergent):
+
+* int8: symmetric per-tensor quantization (32x -> 8x bytes on the wire,
+  4x reduction of DP all-reduce bytes),
+* topk: keep the largest |g| fraction, zero the rest (sparse push).
+
+On a real fleet these wrap the DP all-reduce inside shard_map (compress ->
+psum -> decompress); here the compressors + EF state are exercised by the
+microbatch-accumulation loop in train/step.py and property-tested
+(EF residual => unbiased over time) in tests/test_optim.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    kind: str = "none"        # none | int8 | topk
+    topk_frac: float = 0.05
+
+
+def init_error_state(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _int8_roundtrip(g: jax.Array) -> jax.Array:
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q.astype(jnp.float32) * scale
+
+
+def _topk_roundtrip(g: jax.Array, frac: float) -> jax.Array:
+    flat = g.reshape(-1)
+    k = max(1, int(flat.shape[0] * frac))
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    return jnp.where(jnp.abs(g) >= thresh, g, 0.0)
+
+
+def compress_with_feedback(grads: Any, err: Any, cfg: CompressionConfig
+                           ) -> tuple[Any, Any, dict]:
+    """Returns (decompressed grads as sent on the wire, new error state,
+    metrics). Identity when kind == 'none'."""
+    if cfg.kind == "none":
+        return grads, err, {"compression_error": jnp.zeros(())}
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        if cfg.kind == "int8":
+            sent = _int8_roundtrip(g32)
+        elif cfg.kind == "topk":
+            sent = _topk_roundtrip(g32, cfg.topk_frac)
+        else:
+            raise ValueError(cfg.kind)
+        return sent, g32 - sent
+
+    pairs = jax.tree.map(one, grads, err)
+    sent = jax.tree.map(lambda t: t[0], pairs,
+                        is_leaf=lambda t: isinstance(t, tuple))
+    new_err = jax.tree.map(lambda t: t[1], pairs,
+                           is_leaf=lambda t: isinstance(t, tuple))
+    err_norm = jnp.sqrt(sum(jnp.sum(jnp.square(x))
+                            for x in jax.tree.leaves(new_err)))
+    return sent, new_err, {"compression_error": err_norm}
+
+
+def wire_bytes_ratio(cfg: CompressionConfig) -> float:
+    """Bytes-on-wire ratio vs fp32 all-reduce (for the roofline collective
+    term when compression is enabled)."""
+    if cfg.kind == "int8":
+        return 0.25
+    if cfg.kind == "topk":
+        return cfg.topk_frac * 2.0  # value + index
+    return 1.0

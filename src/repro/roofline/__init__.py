@@ -1,0 +1,4 @@
+"""Roofline extraction from compiled HLO (TPU v5e target constants)."""
+from repro.roofline.analysis import (CostBundle, RooflineTerms,  # noqa: F401
+                                     bundle_from_compiled, collective_bytes,
+                                     model_flops, roofline)

@@ -1,0 +1,168 @@
+"""Roofline-term extraction from compiled XLA artifacts (TPU v5e target).
+
+Three terms per (arch x shape x mesh), in seconds-per-step per chip:
+
+    compute    = HLO_FLOPs / peak_bf16_flops
+    memory     = HLO_bytes / hbm_bandwidth
+    collective = wire_bytes / ici_link_bandwidth      (assignment formula)
+
+Corrections applied (measured on this repo's JAX/XLA, see DESIGN.md §10):
+
+* ``cost_analysis()`` counts a scanned loop body ONCE, not x trip-count.
+  We therefore lower the model UNROLLED with 1 and 2 superblocks (D1, D2):
+  body = D2 - D1, fixed = D1 - body, total = fixed + NS * body.
+  The same correction applies to collective bytes parsed from HLO.
+* Costs are PER DEVICE (post-SPMD shapes), which is what the per-chip
+  roofline wants.
+* Wire factors: all-reduce counts 2x its bytes (reduce-scatter +
+  all-gather phases); others 1x (asymptotic ring factors).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+from repro import hw
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+_WIRE_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+_SHAPE_RE = re.compile(r"(pred|[sfu](?:8|16|32|64)|bf16)\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Wire bytes per collective op kind, parsed from (per-device) HLO."""
+    out = {k: 0.0 for k in _COLL_OPS}
+    for line in hlo_text.splitlines():
+        for op in _COLL_OPS:
+            marker = f" {op}("
+            if marker in line and "=" in line:
+                # "-start(" variants (async) — count starts, skip "-done"
+                lhs = line.split(marker)[0]
+                shape_part = lhs.split("=", 1)[-1]
+                out[op] += _shape_bytes(shape_part) * _WIRE_FACTOR[op]
+                break
+        else:
+            # async forms: all-reduce-start / all-gather-start etc.
+            for op in _COLL_OPS:
+                if f" {op}-start(" in line and "=" in line:
+                    lhs = line.split(f" {op}-start(")[0]
+                    shape_part = lhs.split("=", 1)[-1]
+                    out[op] += _shape_bytes(shape_part) * _WIRE_FACTOR[op]
+                    break
+    return out
+
+
+@dataclasses.dataclass
+class CostBundle:
+    flops: float            # per device
+    bytes_accessed: float   # per device
+    coll_bytes: float       # per device wire bytes
+    coll_breakdown: dict[str, float]
+
+    def __sub__(self, o: "CostBundle") -> "CostBundle":
+        return CostBundle(
+            self.flops - o.flops, self.bytes_accessed - o.bytes_accessed,
+            self.coll_bytes - o.coll_bytes,
+            {k: self.coll_breakdown.get(k, 0) - o.coll_breakdown.get(k, 0)
+             for k in set(self.coll_breakdown) | set(o.coll_breakdown)})
+
+    def scaled_add(self, o: "CostBundle", k: float) -> "CostBundle":
+        return CostBundle(
+            self.flops + k * o.flops,
+            self.bytes_accessed + k * o.bytes_accessed,
+            self.coll_bytes + k * o.coll_bytes,
+            {key: self.coll_breakdown.get(key, 0)
+             + k * o.coll_breakdown.get(key, 0)
+             for key in set(self.coll_breakdown) | set(o.coll_breakdown)})
+
+
+def bundle_from_compiled(compiled) -> CostBundle:
+    ca = compiled.cost_analysis()
+    if not isinstance(ca, dict):  # older jax returns [dict]
+        ca = ca[0]
+    text = compiled.as_text()
+    colls = collective_bytes(text)
+    return CostBundle(
+        flops=float(ca.get("flops", 0.0)),
+        bytes_accessed=float(ca.get("bytes accessed", 0.0)),
+        coll_bytes=float(sum(colls.values())),
+        coll_breakdown=colls)
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float          # analytic 6ND (train) / 2ND (serve), global
+    hlo_flops_global: float
+    useful_ratio: float         # model_flops / hlo_flops_global
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def roofline(bundle: CostBundle, *, chips: int, model_flops: float,
+             chip: hw.ChipSpec = hw.DEFAULT_CHIP) -> RooflineTerms:
+    compute = bundle.flops / chip.peak_bf16_flops
+    memory = bundle.bytes_accessed / chip.hbm_bandwidth
+    coll = bundle.coll_bytes / chip.ici_link_bandwidth
+    terms = {"compute": compute, "memory": memory, "collective": coll}
+    dominant = max(terms, key=terms.get)
+    hlo_global = bundle.flops * chips
+    return RooflineTerms(
+        compute_s=compute, memory_s=memory, collective_s=coll,
+        dominant=dominant, model_flops=model_flops,
+        hlo_flops_global=hlo_global,
+        useful_ratio=(model_flops / hlo_global) if hlo_global else 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Analytic MODEL_FLOPS (6 N_active D for train, 2 N_active D for serving).
+# ---------------------------------------------------------------------------
+
+def active_param_count(cfg) -> int:
+    """Parameters touched per token: MoE experts counted top_k/E."""
+    import jax
+    from repro.models.transformer import init_params
+    shapes = jax.eval_shape(lambda: init_params(cfg, jax.random.key(0)))
+    total = 0
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    for kp, leaf in flat:
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in kp)
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        if "/moe/w" in path:   # expert weights: only top_k of n_experts run
+            n = n * cfg.moe.top_k // cfg.moe.n_experts
+        if path.startswith("embed") or path.startswith("lm_head"):
+            continue           # lookup + head counted separately if desired
+        total += n
+    return total
+
+
+def model_flops(cfg, *, tokens: int, kind: str) -> float:
+    n = active_param_count(cfg)
+    per_token = 6 * n if kind == "train" else 2 * n
+    return float(per_token) * tokens

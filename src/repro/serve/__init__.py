@@ -1,0 +1,3 @@
+"""Serving: jit'd prefill/decode with sharded interleaved KV caches +
+continuous batching."""
+from repro.serve.engine import BatchedServer, ServeConfig, jit_decode_step  # noqa: F401

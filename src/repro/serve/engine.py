@@ -1,0 +1,187 @@
+"""Serving engine: jit'd prefill / decode steps with cache shardings,
+plus a simple continuous-batching session manager.
+
+Cache sharding policy (see DESIGN.md §6):
+  * decode_32k (B=128): batch over data axes, KV heads over model when
+    divisible, else sequence over model.
+  * long_500k (B=1): batch cannot shard — the KV sequence axis is sharded
+    over (data, model) (sequence parallelism). Distributed softmax over the
+    sharded axis is handled by XLA SPMD (max/sum all-reduces); the
+    shard_map log-sum-exp merge is the §Perf optimization.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.sharding import ShardCtx, tree_param_specs
+from repro.models import decode as dec
+from repro.models import encdec
+from repro.models.transformer import ModelConfig, forward
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_len: int
+    cache_dtype: str = "bfloat16"
+    long_context: bool = False     # sequence-parallel KV sharding
+
+
+def cache_specs(cfg: ModelConfig, ctx: ShardCtx, scfg: ServeConfig,
+                cache_template: Any):
+    """PartitionSpec pytree for the cache."""
+    if ctx.mesh is None:
+        return None
+
+    batch_axes = ctx.data_axes if ctx.data_axes else None
+
+    def _seq_divisible(s: int, axes) -> bool:
+        n = 1
+        for a in (axes if isinstance(axes, tuple) else (axes,)):
+            n *= ctx.mesh.shape[a]
+        return s % n == 0
+
+    def spec_for(path: str, leaf) -> P:
+        if path.endswith("len"):
+            return P()
+        if scfg.long_context and leaf.ndim == 5:
+            # (NS, B, S, K, 2D): B=1 — shard the sequence over every axis
+            axes = ctx.seq_axes or (ctx.data_axes
+                                    + ((ctx.model_axis,)
+                                       if ctx.model_axis else ()))
+            if axes and _seq_divisible(leaf.shape[2], axes):
+                return P(None, None, axes)
+            return P()
+        if leaf.ndim == 5:  # (NS, B, S, K, 2D)
+            k, s = leaf.shape[3], leaf.shape[2]
+            if ctx.model_axis and k % ctx.model_size == 0:
+                return P(None, batch_axes, None, ctx.model_axis)
+            if ctx.model_axis and s % ctx.model_size == 0:
+                return P(None, batch_axes, ctx.model_axis)  # seq-sharded
+            return P(None, batch_axes)
+        return _state_spec(leaf)
+
+    def _state_spec(leaf) -> P:
+        # (NS, B, inner...) recurrent state: batch over data, biggest inner
+        # dim over model if divisible
+        parts = [None, batch_axes] + [None] * (leaf.ndim - 2)
+        if ctx.model_axis:
+            for i in range(2, leaf.ndim):
+                if leaf.shape[i] % ctx.model_size == 0 and \
+                        leaf.shape[i] >= ctx.model_size:
+                    parts[i] = ctx.model_axis
+                    break
+        return P(*parts)
+
+    flat = jax.tree_util.tree_flatten_with_path(cache_template)[0]
+    specs = []
+    for kp, leaf in flat:
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in kp)
+        specs.append(spec_for(path, leaf))
+    treedef = jax.tree_util.tree_structure(cache_template)
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def serve_param_shardings(params_template, cfg: ModelConfig, ctx: ShardCtx):
+    if ctx.mesh is None:
+        return None
+    specs = tree_param_specs(params_template, ctx)
+    return jax.tree.map(lambda s: ctx.sharding(s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def jit_decode_step(cfg: ModelConfig, ctx: ShardCtx, scfg: ServeConfig,
+                    params_template, cache_template, *, param_ctx=None):
+    """serve_step(params, cache, token) -> (logits, cache), fully sharded.
+
+    ``param_ctx``: optional separate ShardCtx for WEIGHT placement — huge
+    models (Jamba-398B) shard weights 2D over (data x model) even though
+    the serving batch only uses the model axis (weights are gathered
+    layer-by-layer under the superblock scan)."""
+    step_fn = (encdec.decode_step if cfg.encoder is not None
+               else dec.decode_step)
+
+    def serve_step(params, cache, token):
+        return step_fn(params, cache, token, cfg, ctx)
+
+    if ctx.mesh is None:
+        return jax.jit(serve_step, donate_argnums=1)
+    psh = serve_param_shardings(params_template, cfg, param_ctx or ctx)
+    cspecs = cache_specs(cfg, ctx, scfg, cache_template)
+    csh = jax.tree.map(lambda s: ctx.sharding(s), cspecs,
+                       is_leaf=lambda x: isinstance(x, P))
+    tsh = ctx.sharding(ctx.batch_spec())
+    osh = (ctx.sharding(ctx.batch_spec(ctx.model_if_divisible(cfg.vocab))),
+           csh)
+    return jax.jit(serve_step, in_shardings=(psh, csh, tsh),
+                   out_shardings=osh, donate_argnums=1)
+
+
+def jit_prefill(cfg: ModelConfig, ctx: ShardCtx, params_template,
+                batch_template, *, param_ctx=None):
+    def prefill(params, batch):
+        logits, _, cache_states = forward(params, batch, cfg, ctx,
+                                          mode="prefill")
+        return logits, cache_states
+
+    if ctx.mesh is None:
+        return jax.jit(prefill)
+    psh = serve_param_shardings(params_template, cfg, param_ctx or ctx)
+    bsh = jax.tree.map(
+        lambda x: ctx.sharding(ctx.batch_spec(*([None] * (x.ndim - 1)))),
+        batch_template)
+    return jax.jit(prefill, in_shardings=(psh, bsh))
+
+
+# ---------------------------------------------------------------------------
+# Minimal continuous-batching session manager (CPU-host logic, exercised by
+# examples/serve_batch.py and tests/test_serve.py).
+# ---------------------------------------------------------------------------
+
+class BatchedServer:
+    """Fixed-slot continuous batching over a single decode step function."""
+
+    def __init__(self, cfg: ModelConfig, params, *, slots: int, max_len: int,
+                 ctx: ShardCtx | None = None, cache_dtype=jnp.float32):
+        self.cfg, self.params = cfg, params
+        self.slots = slots
+        self.max_len = max_len
+        self.ctx = ctx
+        self.cache = dec.init_cache(cfg, slots, max_len, cache_dtype)
+        self.step_fn = jax.jit(
+            lambda p, c, t: dec.decode_step(p, c, t, cfg, None))
+        self.active = [False] * slots
+        self.tokens: list[list[int]] = [[] for _ in range(slots)]
+
+    def add_request(self, prompt_token: int) -> int:
+        for s in range(self.slots):
+            if not self.active[s]:
+                self.active[s] = True
+                self.tokens[s] = [prompt_token]
+                return s
+        raise RuntimeError("no free slot")
+
+    def step(self) -> list[int]:
+        """Advance every active slot one token (greedy)."""
+        cur = jnp.array([self.tokens[s][-1] if self.active[s] else 0
+                         for s in range(self.slots)], jnp.int32)
+        logits, self.cache = self.step_fn(self.params, self.cache, cur)
+        nxt = jnp.argmax(logits.astype(jnp.float32), axis=-1)
+        out = []
+        for s in range(self.slots):
+            t = int(nxt[s])
+            if self.active[s]:
+                self.tokens[s].append(t)
+                out.append(t)
+            else:
+                out.append(-1)
+        return out
+
+    def finish(self, slot: int) -> list[int]:
+        self.active[slot] = False
+        return self.tokens[slot]

@@ -1,0 +1,4 @@
+"""Training loop substrate: TrainState, step factory, microbatching."""
+from repro.train.state import init_train_state, state_shardings  # noqa: F401
+from repro.train.step import (TrainConfig, init_full_state, jit_train_step,  # noqa: F401
+                              make_train_step)

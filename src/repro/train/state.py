@@ -1,0 +1,46 @@
+"""TrainState pytree + sharding spec builders (ZeRO-1 optional)."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.sharding import ShardCtx, add_data_sharding, tree_param_specs
+from repro.optim.adamw import init_opt_state
+
+
+def init_train_state(params: Any) -> dict:
+    return {"params": params, "opt": init_opt_state(params)}
+
+
+def _zero1_spec(spec: P, shape: tuple, ctx: ShardCtx) -> P:
+    """ZeRO-1: optimizer moments additionally sharded over the data axes.
+    Never splits the scan-stack dim of block params (>=3D leaves)."""
+    return add_data_sharding(spec, shape, ctx,
+                             start=1 if len(shape) >= 3 else 0)
+
+
+def train_state_specs(state: dict, ctx: ShardCtx, *, zero1: bool = True):
+    """Pytree of PartitionSpecs for the full TrainState."""
+    pspecs = tree_param_specs(state["params"], ctx)
+    mspecs = jax.tree.map(lambda s: s, pspecs,
+                          is_leaf=lambda x: isinstance(x, P))
+    if zero1:
+        mspecs = jax.tree.map(
+            lambda s, p: _zero1_spec(s, p.shape, ctx), pspecs,
+            state["params"],
+            is_leaf=lambda x: isinstance(x, P))
+    return {
+        "params": pspecs,
+        "opt": {"m": mspecs, "v": mspecs, "step": P()},
+    }
+
+
+def state_shardings(state: dict, ctx: ShardCtx, *, zero1: bool = True):
+    if ctx.mesh is None:
+        return None
+    specs = train_state_specs(state, ctx, zero1=zero1)
+    return jax.tree.map(lambda s: ctx.sharding(s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

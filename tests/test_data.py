@@ -1,0 +1,102 @@
+"""Data pipeline: AoS pack/unpack roundtrip, determinism, host sharding,
+checkpoint/rescale exactness (Hypothesis where it pays)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.data.aos import FIELDS, pack_records, unpack_records
+from repro.data.pipeline import DataConfig, SyntheticAoSPipeline
+
+settings.register_profile("fast3", max_examples=25, deadline=None)
+settings.load_profile("fast3")
+
+
+def test_aos_roundtrip():
+    B, S = 4, 32
+    key = jax.random.key(0)
+    toks = jax.random.randint(key, (B, S), 0, 1000, jnp.int32)
+    labels = jnp.roll(toks, -1, axis=1)
+    w = jnp.ones((B, S), jnp.float32).at[:, -1].set(0.0)
+    docs = jnp.full((B, S), 7, jnp.int32)
+    for impl in ("ref", "pallas"):
+        aos = pack_records(toks, labels, w, docs, impl=impl)
+        assert aos.shape == (B, FIELDS * S)
+        out = unpack_records(aos, impl=impl)
+        np.testing.assert_array_equal(np.asarray(out["tokens"]),
+                                      np.asarray(toks))
+        np.testing.assert_array_equal(np.asarray(out["labels"]),
+                                      np.asarray(labels))
+        np.testing.assert_allclose(np.asarray(out["loss_weight"]),
+                                   np.asarray(w))
+        np.testing.assert_array_equal(np.asarray(out["doc_id"]),
+                                      np.asarray(docs))
+
+
+def test_aos_layout_is_interleaved():
+    """The buffer really is AoS: fields of token j adjacent at 4j..4j+3."""
+    toks = jnp.array([[10, 20]]); labels = jnp.array([[11, 21]])
+    w = jnp.array([[1.0, 1.0]]); docs = jnp.array([[5, 5]])
+    aos = np.asarray(pack_records(toks, labels, w, docs))
+    assert list(aos[0, :4]) == [10, 11, 1024, 5]
+    assert list(aos[0, 4:]) == [20, 21, 1024, 5]
+
+
+def test_determinism_across_instances():
+    cfg = DataConfig(vocab=100, seq_len=16, global_batch=8, seed=3)
+    a = SyntheticAoSPipeline(cfg)
+    b = SyntheticAoSPipeline(cfg)
+    for _ in range(3):
+        np.testing.assert_array_equal(a.next_host_aos(), b.next_host_aos())
+
+
+@given(st.integers(1, 4).map(lambda k: 2 ** k))
+def test_host_sharding_partitions_global_batch(nproc):
+    cfg = DataConfig(vocab=100, seq_len=8, global_batch=16, seed=1)
+    full = SyntheticAoSPipeline(cfg)._global_batch_np(0)
+    shards = []
+    for p in range(nproc):
+        pipe = SyntheticAoSPipeline(cfg, process_index=p,
+                                    process_count=nproc)
+        shards.append(pipe.next_host_aos())
+    np.testing.assert_array_equal(np.concatenate(shards, axis=0), full)
+
+
+def test_checkpoint_restore_resumes_exactly():
+    cfg = DataConfig(vocab=100, seq_len=8, global_batch=4, seed=2)
+    a = SyntheticAoSPipeline(cfg)
+    a.next_host_aos(); a.next_host_aos()
+    saved = a.state_dict()
+    want = a.next_host_aos()
+    b = SyntheticAoSPipeline(cfg)
+    b.load_state_dict(saved)
+    np.testing.assert_array_equal(b.next_host_aos(), want)
+
+
+def test_elastic_rescale_preserves_global_stream():
+    """Restarting with a different host count continues the same global
+    batch sequence."""
+    cfg = DataConfig(vocab=50, seq_len=8, global_batch=8, seed=4)
+    one = SyntheticAoSPipeline(cfg)
+    one.next_host_aos()
+    saved = one.state_dict()
+    want = one.next_host_aos()  # global batch @ step 1
+    parts = []
+    for p in range(4):
+        pipe = SyntheticAoSPipeline(cfg, process_index=p, process_count=4)
+        pipe.load_state_dict(saved)
+        parts.append(pipe.next_host_aos())
+    np.testing.assert_array_equal(np.concatenate(parts, axis=0), want)
+
+
+def test_batch_feeds_model_loss():
+    from repro.configs import get_arch
+    from repro.models.transformer import init_params, loss_fn
+    arch = get_arch("qwen3-0.6b")
+    cfg = arch.smoke
+    pipe = SyntheticAoSPipeline(DataConfig(vocab=cfg.vocab, seq_len=32,
+                                           global_batch=2))
+    params = init_params(cfg, jax.random.key(0))
+    loss, _ = jax.jit(lambda p, b: loss_fn(p, b, cfg, None))(
+        params, pipe.next_batch())
+    assert bool(jnp.isfinite(loss))

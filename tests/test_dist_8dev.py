@@ -1,0 +1,24 @@
+"""Distributed semantics on 8 fake devices (subprocess-isolated so the rest
+of the suite keeps seeing 1 device, per the dry-run contract)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+CHECKS = ["moe_ep_equivalence", "sharded_train_step",
+          "pipeline_equivalence", "elastic_reshard", "seq_parallel_decode"]
+
+
+@pytest.mark.parametrize("check", CHECKS)
+def test_dist_check(check):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(root, "src") + os.pathsep + root
+    r = subprocess.run(
+        [sys.executable, os.path.join(root, "tests", "_dist_checks.py"),
+         check],
+        capture_output=True, text=True, timeout=600, env=env, cwd=root)
+    assert r.returncode == 0, f"{check}:\n{r.stdout[-2000:]}\n{r.stderr[-3000:]}"
+    assert "CHECK_OK" in r.stdout

@@ -1,0 +1,100 @@
+"""Fault tolerance: checkpoint atomicity/roundtrip, elastic restore,
+straggler policy behaviour."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ft.checkpoint import CheckpointManager
+from repro.ft.straggler import StragglerConfig, StragglerPolicy
+
+
+def _tree(key=0):
+    k = jax.random.key(key)
+    return {"params": {"w": jax.random.normal(k, (8, 4)),
+                       "ln": jnp.ones((4,))},
+            "opt": {"m": jnp.zeros((8, 4)), "step": jnp.asarray(7)}}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    tree = _tree()
+    mgr.save(7, tree, extra={"pipeline": {"step": 3, "seed": 0}},
+             blocking=True)
+    restored, extra = mgr.restore(jax.tree.map(jnp.zeros_like, tree))
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b)), tree, restored)
+    assert extra["pipeline"]["step"] == 3
+
+
+def test_latest_and_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = _tree()
+    for s in (1, 2, 3, 4):
+        mgr.save(s, tree, blocking=True)
+    assert mgr.latest_step() == 4
+    assert mgr.all_steps() == [3, 4]  # older GC'd
+
+
+def test_atomic_no_partial_checkpoint(tmp_path):
+    """A leftover .tmp dir is never listed as a valid step."""
+    mgr = CheckpointManager(str(tmp_path))
+    os.makedirs(os.path.join(str(tmp_path), "step_00000009.tmp0"))
+    assert mgr.all_steps() == []
+    mgr.save(1, _tree(), blocking=True)
+    assert mgr.latest_step() == 1
+
+
+def test_async_save_then_wait(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(5, _tree(), blocking=False)
+    mgr.wait()
+    assert mgr.latest_step() == 5
+
+
+def test_restore_onto_different_value_template(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    tree = _tree()
+    mgr.save(1, tree, blocking=True)
+    template = jax.tree.map(jnp.zeros_like, tree)
+    restored, _ = mgr.restore(template)
+    assert float(jnp.sum(jnp.abs(restored["params"]["w"]))) > 0
+
+
+# --------------------------- straggler policy -------------------------------
+
+def test_straggler_detection_and_cooldown():
+    pol = StragglerPolicy(8, StragglerConfig(window=8, factor=2.0,
+                                             cooldown_steps=3,
+                                             min_history=2))
+    for step in range(4):
+        d = {h: 1.0 for h in range(8)}
+        d[3] = 10.0  # host 3 straggles
+        pol.record_step(d)
+    assert 3 in pol.excluded()
+    assert pol.gradient_scale() == 8 / 7
+    # recovery: host 3 becomes fast again; after cooldown it rejoins
+    for _ in range(6):
+        pol.record_step({h: 1.0 for h in range(8)})
+    assert 3 not in pol.excluded()
+    assert pol.gradient_scale() == 1.0
+
+
+def test_straggler_budget_cap():
+    """Never excludes more than max_excluded_frac of the fleet."""
+    pol = StragglerPolicy(8, StragglerConfig(min_history=2, factor=1.5,
+                                             max_excluded_frac=0.25))
+    for _ in range(4):
+        d = {h: 1.0 for h in range(4)}
+        d.update({h: 50.0 for h in range(4, 8)})  # half the fleet "slow"
+        pol.record_step(d)
+    assert len(pol.excluded()) <= 2
+
+
+def test_missing_report_treated_as_slow():
+    pol = StragglerPolicy(4, StragglerConfig(min_history=2, factor=2.0))
+    for _ in range(4):
+        pol.record_step({0: 1.0, 1: 1.0, 2: 1.0})  # host 3 never reports
+    assert 3 in pol.excluded()

@@ -1,0 +1,166 @@
+"""Per-kernel Pallas (interpret) vs pure-jnp oracle, sweeping shapes/dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+DTYPES = [jnp.float32, jnp.bfloat16, jnp.int32]
+
+
+def rand(key, shape, dtype):
+    if jnp.issubdtype(dtype, jnp.integer):
+        return jax.random.randint(key, shape, -100, 100, dtype)
+    return jax.random.normal(key, shape, dtype)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("lead,n", [((), 128), ((4,), 64), ((2, 3), 256),
+                                    ((5,), 96), ((8,), 512)])
+@pytest.mark.parametrize("stride,offset", [(2, 0), (3, 1), (4, 2), (7, 5),
+                                           (1, 0), (16, 3)])
+def test_gather_strided(dtype, lead, n, stride, offset):
+    vl = (n - 1 - offset) // stride + 1
+    win = rand(jax.random.key(0), lead + (n,), dtype)
+    got = ops.gather_strided(win, stride, offset, vl, impl="pallas")
+    want = ops.gather_strided(win, stride, offset, vl, impl="ref")
+    np.testing.assert_allclose(np.asarray(got, np.float64),
+                               np.asarray(want, np.float64))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("lead,n", [((), 128), ((4,), 64), ((3, 2), 256)])
+@pytest.mark.parametrize("stride,offset", [(2, 0), (3, 1), (5, 4), (1, 0)])
+def test_scatter_strided(dtype, lead, n, stride, offset):
+    vl = (n - 1 - offset) // stride + 1
+    win = rand(jax.random.key(1), lead + (n,), dtype)
+    vals = rand(jax.random.key(2), lead + (vl,), dtype)
+    got = ops.scatter_strided(win, vals, stride, offset, impl="pallas")
+    want = ops.scatter_strided(win, vals, stride, offset, impl="ref")
+    np.testing.assert_allclose(np.asarray(got, np.float64),
+                               np.asarray(want, np.float64))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("fields", [2, 3, 4, 5, 8])
+@pytest.mark.parametrize("lead,m", [((), 64), ((4,), 32), ((2, 2), 128)])
+def test_deinterleave(dtype, fields, lead, m):
+    aos = rand(jax.random.key(3), lead + (fields * m,), dtype)
+    got = ops.deinterleave(aos, fields, impl="pallas")
+    want = ops.deinterleave(aos, fields, impl="ref")
+    assert len(got) == fields
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g, np.float64),
+                                   np.asarray(w, np.float64))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("fields", [2, 3, 4, 8])
+@pytest.mark.parametrize("lead,m", [((), 64), ((4,), 32), ((2, 2), 128)])
+def test_interleave(dtype, fields, lead, m):
+    soa = [rand(jax.random.key(10 + f), lead + (m,), dtype)
+           for f in range(fields)]
+    got = ops.interleave(soa, impl="pallas")
+    want = ops.interleave(soa, impl="ref")
+    np.testing.assert_allclose(np.asarray(got, np.float64),
+                               np.asarray(want, np.float64))
+
+
+@pytest.mark.parametrize("fields", [2, 3, 4, 8])
+def test_segment_roundtrip(fields):
+    aos = rand(jax.random.key(4), (6, fields * 48), jnp.float32)
+    parts = ops.deinterleave(aos, fields, impl="pallas")
+    back = ops.interleave(parts, impl="pallas")
+    np.testing.assert_allclose(np.asarray(back), np.asarray(aos))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("n,d", [(64, 128), (128, 64), (256, 384), (32, 8)])
+@pytest.mark.parametrize("density", [0.0, 0.3, 0.7, 1.0])
+def test_compact_rows(dtype, n, d, density):
+    key = jax.random.key(5)
+    rows = rand(key, (n, d), dtype)
+    mask = jax.random.uniform(jax.random.key(6), (n,)) < density
+    got, gv = ops.compact_rows(rows, mask, impl="pallas")
+    want, wv = ops.compact_rows(rows, mask, impl="ref")
+    np.testing.assert_array_equal(np.asarray(gv), np.asarray(wv))
+    np.testing.assert_allclose(np.asarray(got, np.float64),
+                               np.asarray(want, np.float64))
+
+
+@pytest.mark.parametrize("n,d", [(64, 128), (128, 96), (32, 8)])
+@pytest.mark.parametrize("density", [0.0, 0.5, 1.0])
+def test_expand_rows(n, d, density):
+    mask = jax.random.uniform(jax.random.key(7), (n,)) < density
+    packed = rand(jax.random.key(8), (n, d), jnp.float32)
+    # zero out rows beyond the packed count, as compact_rows would produce
+    total = int(jnp.sum(mask.astype(jnp.int32)))
+    packed = packed.at[total:].set(0.0)
+    got = ops.expand_rows(packed, mask, impl="pallas")
+    want = ops.expand_rows(packed, mask, impl="ref")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("n,d", [(64, 128), (128, 256)])
+def test_compact_expand_roundtrip(n, d):
+    rows = rand(jax.random.key(9), (n, d), jnp.float32)
+    mask = jax.random.uniform(jax.random.key(11), (n,)) < 0.5
+    packed, _ = ops.compact_rows(rows, mask, impl="pallas")
+    back = ops.expand_rows(packed, mask, impl="pallas")
+    want = jnp.where(mask[:, None], rows, 0.0)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(want))
+
+
+def test_raw_shift_gather_matches_ref():
+    from repro.core import scg
+    n = 128
+    x = rand(jax.random.key(12), (3, n), jnp.float32)
+    shift, valid = scg.gather_counts(n, 5, 2, (n - 3) // 5 + 1)
+    got = ops.shift_gather(x, shift, valid, impl="pallas")
+    want = ops.shift_gather(x, shift, valid, impl="ref")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+
+def test_raw_shift_scatter_matches_ref():
+    from repro.core import scg
+    n = 128
+    x = rand(jax.random.key(13), (3, n), jnp.float32)
+    shift, valid = scg.scatter_counts(n, 5, 2, 25)
+    gp, gv = ops.shift_scatter(x, shift, valid, impl="pallas")
+    wp, wv = ops.shift_scatter(x, shift, valid, impl="ref")
+    np.testing.assert_array_equal(np.asarray(gv), np.asarray(wv))
+    np.testing.assert_allclose(np.asarray(gp), np.asarray(wp))
+
+
+def test_kv_interleaved_roundtrip():
+    from repro.kernels import kv_interleaved as kvi
+    k = rand(jax.random.key(14), (2, 4, 64), jnp.float32)
+    v = rand(jax.random.key(15), (2, 4, 64), jnp.float32)
+    for impl in ("ref", "pallas"):
+        kv = kvi.interleave_kv(k, v, impl=impl)
+        k2, v2 = kvi.split_kv(kv, impl=impl)
+        np.testing.assert_allclose(np.asarray(k2), np.asarray(k))
+        np.testing.assert_allclose(np.asarray(v2), np.asarray(v))
+
+
+def test_kv_append_token():
+    from repro.kernels import kv_interleaved as kvi
+    cache = jnp.zeros((2, 16, 4, 128))
+    k = jnp.ones((2, 4, 64))
+    v = 2 * jnp.ones((2, 4, 64))
+    out = kvi.append_token(cache, k, v, 3)
+    beat = np.asarray(out[:, 3])
+    np.testing.assert_allclose(beat[..., 0::2], 1.0)
+    np.testing.assert_allclose(beat[..., 1::2], 2.0)
+    assert float(jnp.sum(jnp.abs(out[:, :3]))) == 0.0
+    assert float(jnp.sum(jnp.abs(out[:, 4:]))) == 0.0
+
+
+def test_ops_jit_compatible():
+    @jax.jit
+    def f(x):
+        parts = ops.deinterleave(x, 2, impl="pallas")
+        return ops.interleave(parts, impl="pallas")
+    x = rand(jax.random.key(16), (4, 256), jnp.float32)
+    np.testing.assert_allclose(np.asarray(f(x)), np.asarray(x))

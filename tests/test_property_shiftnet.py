@@ -1,0 +1,167 @@
+"""Hypothesis property tests for the EARTH shift-network invariants.
+
+The paper's §4.1.4 conflict-free theorem states that the networks route
+without collision exactly when the mapping is order-preserving and
+separation-monotone. We generate random legal mappings and assert:
+  * no conflict flag at any layer,
+  * every valid element lands at its target,
+  * gather(scatter(x)) round-trips.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import scg, shiftnet
+
+settings.register_profile("fast", max_examples=60, deadline=None)
+settings.load_profile("fast")
+
+
+@st.composite
+def monotone_gather_map(draw, n=64):
+    """Random order-preserving, separation-non-increasing mapping.
+
+    Build target positions first (sorted unique), then source positions with
+    pairwise separations >= target separations (guarantees the gather
+    precondition, incl. shift >= 0 for all elements).
+    """
+    k = draw(st.integers(min_value=1, max_value=n // 2))
+    targets = sorted(draw(st.sets(st.integers(0, n - 1), min_size=k,
+                                  max_size=k)))
+    sources = [draw(st.integers(targets[0], n - 1 - sum(
+        max(targets[i + 1] - targets[i], 1) for i in range(len(targets) - 1))
+        if len(targets) > 1 else n - 1))]
+    for i in range(1, len(targets)):
+        gap_t = targets[i] - targets[i - 1]
+        lo = sources[-1] + gap_t
+        hi = n - 1
+        if lo > hi:
+            return ((), ())  # cannot extend without violating separation
+        sources.append(draw(st.integers(lo, hi)))
+    # enforce shift >= 0 and in-range
+    ok = all(s >= t and s < n for s, t in zip(sources, targets))
+    return (sources, targets) if ok else ((), ())
+
+
+@given(monotone_gather_map())
+def test_gather_conflict_free_and_exact(mapping):
+    sources, targets = mapping
+    if not sources:
+        return
+    n = 64
+    payload = jnp.zeros((n,), jnp.int32)
+    shift = jnp.zeros((n,), jnp.int32)
+    valid = jnp.zeros((n,), bool)
+    for s, t in zip(sources, targets):
+        payload = payload.at[s].set(1000 + s)
+        shift = shift.at[s].set(s - t)
+        valid = valid.at[s].set(True)
+    res = shiftnet.gather_network(payload, shift, valid)
+    assert not bool(res.conflict), (sources, targets)
+    out = np.asarray(res.payload)
+    vmask = np.asarray(res.valid)
+    for s, t in zip(sources, targets):
+        assert vmask[t]
+        assert out[t] == 1000 + s
+    assert vmask.sum() == len(sources)
+
+
+@st.composite
+def monotone_scatter_map(draw, n=64):
+    """Order-preserving, separation-non-decreasing mapping (scatter legal)."""
+    k = draw(st.integers(min_value=1, max_value=n // 2))
+    sources = sorted(draw(st.sets(st.integers(0, n // 2 - 1), min_size=k,
+                                  max_size=k)))
+    targets = [draw(st.integers(sources[0], n - 1 - sum(
+        max(sources[i + 1] - sources[i], 1) for i in range(len(sources) - 1))
+        if len(sources) > 1 else n - 1))]
+    for i in range(1, len(sources)):
+        gap_s = sources[i] - sources[i - 1]
+        lo = targets[-1] + gap_s
+        if lo > n - 1:
+            return ((), ())
+        targets.append(draw(st.integers(lo, n - 1)))
+    ok = all(t >= s for s, t in zip(sources, targets))
+    return (sources, targets) if ok else ((), ())
+
+
+@given(monotone_scatter_map())
+def test_scatter_conflict_free_and_exact(mapping):
+    sources, targets = mapping
+    if not sources:
+        return
+    n = 64
+    payload = jnp.zeros((n,), jnp.int32)
+    shift = jnp.zeros((n,), jnp.int32)
+    valid = jnp.zeros((n,), bool)
+    for s, t in zip(sources, targets):
+        payload = payload.at[s].set(1000 + s)
+        shift = shift.at[s].set(t - s)
+        valid = valid.at[s].set(True)
+    res = shiftnet.scatter_network(payload, shift, valid)
+    assert not bool(res.conflict), (sources, targets)
+    out = np.asarray(res.payload)
+    vmask = np.asarray(res.valid)
+    for s, t in zip(sources, targets):
+        assert vmask[t]
+        assert out[t] == 1000 + s
+    assert vmask.sum() == len(sources)
+
+
+@given(st.integers(1, 16), st.integers(0, 15), st.integers(1, 10))
+def test_strided_roundtrip(stride, offset, vl):
+    """scatter(gather(window)) restores strided elements exactly."""
+    n = 256
+    if offset + (vl - 1) * stride + 1 > n:
+        return
+    window = jnp.arange(n, dtype=jnp.int32) * 7 + 1
+    gs, gv = scg.gather_counts(n, stride, offset, vl)
+    dense = shiftnet.gather_network(window, gs, gv)
+    assert not bool(dense.conflict)
+    ss, sv = scg.scatter_counts(n, stride, offset, vl)
+    back = shiftnet.scatter_network(dense.payload, ss, sv)
+    assert not bool(back.conflict)
+    out = np.asarray(back.payload)
+    for i in range(vl):
+        p = offset + i * stride
+        assert out[p] == p * 7 + 1
+
+
+@given(st.lists(st.booleans(), min_size=1, max_size=128))
+def test_compaction_conflict_free(bits):
+    mask = jnp.array(bits, dtype=bool)
+    n = mask.shape[0]
+    data = jnp.arange(n, dtype=jnp.int32) + 1
+    shift, valid = scg.compaction_counts(mask)
+    res = shiftnet.gather_network(data, shift, valid)
+    assert not bool(res.conflict)
+    want = np.asarray(data)[np.asarray(mask)]
+    got = np.asarray(res.payload)[: len(want)]
+    np.testing.assert_array_equal(got, want)
+
+
+@given(st.lists(st.booleans(), min_size=1, max_size=128))
+def test_expansion_inverts_compaction(bits):
+    mask = jnp.array(bits, dtype=bool)
+    n = mask.shape[0]
+    data = (jnp.arange(n, dtype=jnp.int32) + 1) * jnp.asarray(mask, jnp.int32)
+    cs, cv = scg.compaction_counts(mask)
+    packed = shiftnet.gather_network(data, cs, cv)
+    es, ev = scg.expansion_counts(mask)
+    restored = shiftnet.scatter_network(packed.payload, es, ev)
+    assert not bool(restored.conflict)
+    got = np.where(np.asarray(restored.valid), np.asarray(restored.payload), 0)
+    np.testing.assert_array_equal(got, np.asarray(data))
+
+
+@given(st.integers(2, 8), st.integers(1, 32))
+def test_segment_field_extraction(fields, m):
+    n = fields * m
+    aos = jnp.arange(n, dtype=jnp.int32)
+    for f in range(fields):
+        shift, valid = scg.segment_gather_counts(n, fields, f, m)
+        res = shiftnet.gather_network(aos, shift, valid)
+        assert not bool(res.conflict)
+        np.testing.assert_array_equal(np.asarray(res.payload)[:m],
+                                      np.arange(m) * fields + f)

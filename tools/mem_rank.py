@@ -1,0 +1,62 @@
+"""Dev tool: rank the largest per-device tensors in a cell's compiled HLO.
+
+Usage: PYTHONPATH=src python tools/mem_rank.py <arch> <shape> [threshold_gib]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import collections  # noqa: E402
+import re  # noqa: E402
+import sys  # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+from repro.configs import get_arch  # noqa: E402
+from repro.configs.base import shape_by_name  # noqa: E402
+from repro.launch.dryrun import _lower_cell, _total_params  # noqa: E402
+from repro.launch.mesh import make_ctx, make_production_mesh  # noqa: E402
+
+DT = {"f32": 4, "bf16": 2, "s32": 4, "u32": 4, "pred": 1, "s8": 1,
+      "f16": 2, "u8": 1, "s64": 8, "u64": 8, "f64": 8}
+
+
+def main():
+    arch, shape_name = sys.argv[1], sys.argv[2]
+    thresh = float(sys.argv[3]) if len(sys.argv) > 3 else 1.0
+    cfg = get_arch(arch).model
+    shape = shape_by_name(shape_name)
+    mesh = make_production_mesh()
+    fsdp = shape.kind == "train" and _total_params(cfg) > 8e9
+    ctx = make_ctx(mesh, long_context=shape.name == "long_500k", fsdp=fsdp)
+    lw, _ = _lower_cell(cfg, shape, ctx)
+    cp = lw.compile()
+    ma = cp.memory_analysis()
+    print(f"args={ma.argument_size_in_bytes/2**30:.2f}G "
+          f"temp={ma.temp_size_in_bytes/2**30:.2f}G")
+    big = collections.Counter()
+    ops = collections.defaultdict(set)
+    for line in cp.as_text().splitlines():
+        m = re.search(r"= ([a-z0-9]+)\[([0-9,]{6,})\][^ ]* ([a-z\-]+)\(",
+                      line)
+        if not m:
+            continue
+        dt, dims, op = m.groups()
+        if dt not in DT:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        byt = n * DT[dt]
+        if byt > thresh * 2**30:
+            key = f"{dt}[{dims}] = {byt/2**30:.2f}G"
+            big[key] += 1
+            ops[key].add(op)
+    for k, c in big.most_common(20):
+        print(f"{c:5d}x {k}  ops={sorted(ops[k])[:6]}")
+
+
+if __name__ == "__main__":
+    main()

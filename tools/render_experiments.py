@@ -1,0 +1,38 @@
+"""Regenerate the §Roofline table in EXPERIMENTS.md from dry-run artifacts."""
+import glob
+import json
+import os
+import re
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.roofline_table import HEADER, fmt_row  # noqa: E402
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def main():
+    rows = []
+    for path in sorted(glob.glob(os.path.join(
+            ROOT, "experiments", "artifacts", "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    # order: arch, shape, mesh
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    lines = [HEADER] + [fmt_row(r) for r in rows] + [f"", f"{len(rows)} cells."]
+    table = "\n".join(lines)
+    exp = os.path.join(ROOT, "EXPERIMENTS.md")
+    with open(exp) as f:
+        txt = f.read()
+    txt = re.sub(
+        r"<!-- ROOFLINE_TABLE_START -->.*<!-- ROOFLINE_TABLE_END -->",
+        f"<!-- ROOFLINE_TABLE_START -->\n{table}\n<!-- ROOFLINE_TABLE_END -->",
+        txt, flags=re.S)
+    with open(exp, "w") as f:
+        f.write(txt)
+    print(f"rendered {len(rows)} cells into EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()

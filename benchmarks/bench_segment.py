@@ -1,9 +1,12 @@
-"""Fig. 13 analogue — segment (AoS<->SoA) handling, buffer-free vs buffer.
+"""Fig. 13 analogue — segment (AoS<->SoA) handling, fused vs unfused vs buffer.
 
 EARTH claims parity in performance with a segment buffer while removing the
 2 x 8 x MLEN buffer. We compare, per FIELDS in 2..8:
 
-  * EARTH path: in-place field-wise shift-network deinterleave,
+  * FUSED path: ONE compiled-permutation shift-network pass emitting all
+    fields (the RCVRF bulk-transposition analogue, core/shiftplan.py),
+  * unfused path: ``fields`` sequential dynamic-count gather networks
+    (the seed path, measured in the same run),
   * buffer path: materialized (FIELDS, m) transpose scratch then row reads
     (the Saturn segment-buffer dataflow),
 and report wall time + scratch bytes (the Fig. 14 area claim analogue).
@@ -13,7 +16,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from benchmarks import common
 from benchmarks.common import emit, time_jit
+from repro.core import scg, shiftnet, shiftplan
 from repro.kernels import ops
 
 MLEN = 128
@@ -26,21 +31,57 @@ def buffer_path(aos, fields):
     return [buf[..., f, :] for f in range(fields)]
 
 
+def fused_path(aos, fields):
+    from repro.kernels import segment as seg
+    n = aos.shape[-1]
+    mode, plans = shiftplan.segment_deinterleave_plans(n, fields)
+    masks, spans = seg._stack_masks(plans)
+    return seg.route_deinterleave(aos, jnp.asarray(masks), mode, plans,
+                                  spans, fields)
+
+
+def unfused_path(aos, fields):
+    n = aos.shape[-1]
+    m = n // fields
+    outs = []
+    for f in range(fields):
+        shift, valid = scg.gather_counts(n, fields, f, m)
+        res = shiftnet.gather_network(aos, shift[None, :], valid[None, :],
+                                      axis=-1)
+        outs.append(jax.lax.slice(res.payload, (0, 0), (aos.shape[0], m)))
+    return outs
+
+
 def run() -> None:
     rows = 64
-    for fields in (2, 3, 4, 5, 6, 7, 8):
+    field_sweep = (2, 4) if common.QUICK else (2, 3, 4, 5, 6, 7, 8)
+    for fields in field_sweep:
         m = MLEN
         aos = jnp.arange(rows * fields * m,
                          dtype=jnp.float32).reshape(rows, fields * m)
-        t_earth = time_jit(lambda a: ops.deinterleave(a, fields), aos)
-        t_buf = time_jit(lambda a: buffer_path(a, fields), aos)
+        mode, plans = shiftplan.segment_deinterleave_plans(fields * m,
+                                                           fields)
+        wide_ops = sum(p.num_shifts for p in plans)
+        passes = 1 if mode == "fused" else fields
+        t_fused = time_jit(lambda a, f=fields: fused_path(a, f), aos)
+        t_unfused = time_jit(lambda a, f=fields: unfused_path(a, f), aos)
+        t_buf = time_jit(lambda a, f=fields: buffer_path(a, f), aos)
         scratch_buffer = 2 * 8 * MLEN * 4  # dual 8xMLEN f32 buffers (paper)
-        emit(f"segment/f{fields}", t_earth,
-             f"buffer_us={t_buf:.1f} ratio={t_buf/max(t_earth,1e-9):.2f}x "
-             f"scratch_bytes_earth=0 scratch_bytes_buffer={scratch_buffer}")
-        # round-trip (segment store) parity check
-        parts = ops.deinterleave(aos, fields)
-        back = ops.interleave(parts)
+        emit(f"segment/f{fields}", t_fused,
+             f"unfused_us={t_unfused:.1f} buffer_us={t_buf:.1f} "
+             f"vs_unfused={t_unfused/max(t_fused,1e-9):.2f}x "
+             f"mode={mode} passes={passes}(seed {fields}) "
+             f"wide_ops={wide_ops} "
+             f"scratch_bytes_earth=0 scratch_bytes_buffer={scratch_buffer}",
+             coalescing=float(fields),   # one transaction serves all fields
+             unfused_us=round(t_unfused, 2),
+             buffer_us=round(t_buf, 2),
+             mode=mode,
+             wide_ops=wide_ops,
+             fields=fields)
+        # round-trip (segment store) parity check through the real kernels
+        parts = ops.deinterleave(aos, fields, impl="pallas")
+        back = ops.interleave(parts, impl="pallas")
         assert bool(jnp.all(back == aos))
 
 

@@ -1,13 +1,28 @@
-"""Shared benchmark helpers: timing and CSV emission."""
+"""Shared benchmark helpers: timing, CSV emission, and structured records.
+
+Every ``emit`` also appends a structured record to ``RECORDS`` so the
+driver (benchmarks/run.py) can write machine-readable ``BENCH_*.json``
+artifacts — the perf trajectory tracked from PR 1 onward.
+"""
 from __future__ import annotations
 
 import time
 
 import jax
 
+# Reduced sweep for CI smoke runs (set by run.py --quick).
+QUICK = False
+
+# Structured results of the current process: list of dicts with at least
+# {"name", "us_per_call"}; extra numeric fields (coalescing, ratios) ride
+# along verbatim.
+RECORDS: list[dict] = []
+
 
 def time_jit(fn, *args, iters: int = 20, warmup: int = 3) -> float:
     """Median wall time (us) of a jitted call on this host."""
+    if QUICK:
+        iters, warmup = 5, 1
     f = jax.jit(fn)
     for _ in range(warmup):
         jax.block_until_ready(f(*args))
@@ -20,5 +35,6 @@ def time_jit(fn, *args, iters: int = 20, warmup: int = 3) -> float:
     return times[len(times) // 2]
 
 
-def emit(name: str, us: float, derived: str) -> None:
+def emit(name: str, us: float, derived: str, **fields) -> None:
     print(f"{name},{us:.1f},{derived}")
+    RECORDS.append({"name": name, "us_per_call": round(us, 2), **fields})

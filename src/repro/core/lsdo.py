@@ -22,8 +22,9 @@ from typing import Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core import scg, shiftnet
+from repro.core import scg, shiftnet, shiftplan
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,16 +81,62 @@ def plan_strided(base: int, stride: int, vl: int, mlen: int) -> AccessPlan:
     return AccessPlan(base, stride, vl, mlen, rev, tuple(txs))
 
 
-def load_strided(buffer: jax.Array, plan: AccessPlan) -> jax.Array:
+def _tx_meta(plan: AccessPlan):
+    txs = plan.transactions
+    starts = np.array([tx.region * plan.mlen for tx in txs])
+    offsets = tuple(tx.offset for tx in txs)
+    counts = tuple(tx.count for tx in txs)
+    firsts = tuple(tx.first_elem for tx in txs)
+    return starts, offsets, counts, firsts
+
+
+def load_strided(buffer: jax.Array, plan: AccessPlan, *,
+                 batched: bool = True) -> jax.Array:
     """Gather ``vl`` strided elements via coalesced regions + GSN.
 
     buffer: flat (N,) array. Returns (vl,) dense elements.
+
+    The default path stacks ALL transactions into one (T, mlen) block
+    (a single constant-index gather), routes the whole block through ONE
+    compiled batched shift plan, and reassembles with one static take —
+    replacing the per-transaction Python loop of dynamic_slice + network
+    passes.  ``batched=False`` keeps the loop/dynamic-count fallback (the
+    property-test oracle and the shape runtime-stride callers use).
     """
+    if plan.vl <= 0:
+        return jnp.zeros((0,), buffer.dtype)
+    if not batched:
+        return _load_strided_loop(buffer, plan)
+    s = abs(plan.stride) if plan.stride != 0 else 1
+    mlen = plan.mlen
+    starts, offsets, counts, _ = _tx_meta(plan)
+    idx = starts[:, None] + np.arange(mlen)[None, :]          # (T, mlen)
+    block = jnp.take(buffer, jnp.asarray(np.minimum(idx, buffer.shape[0] - 1)))
+    bplan = shiftplan.batched_gather_plan(mlen, s, offsets, counts)
+    routed = shiftnet.apply_plan(block, bplan, axis=-1)
+    flat_idx = np.concatenate([t * mlen + np.arange(c)
+                               for t, c in enumerate(counts)])
+    out = jnp.take(routed.reshape(-1), jnp.asarray(flat_idx))
+    if plan.reversed:
+        out = out[::-1]
+    return out
+
+
+def _region_lanes(buffer: jax.Array, start: int, mlen: int) -> jax.Array:
+    """Read one aligned region with per-lane clipping: a region whose tail
+    hangs past the buffer end must NOT be start-clamped (dynamic_slice
+    would silently shift the whole window and mis-align every lane); the
+    clipped tail lanes hold garbage but are invalid by construction."""
+    idx = np.minimum(start + np.arange(mlen), buffer.shape[0] - 1)
+    return jnp.take(buffer, jnp.asarray(idx))
+
+
+def _load_strided_loop(buffer: jax.Array, plan: AccessPlan) -> jax.Array:
+    """Per-transaction dynamic-count fallback."""
     s = abs(plan.stride) if plan.stride != 0 else 1
     pieces = []
     for tx in plan.transactions:
-        region = jax.lax.dynamic_slice(buffer, (tx.region * plan.mlen,),
-                                       (plan.mlen,))
+        region = _region_lanes(buffer, tx.region * plan.mlen, plan.mlen)
         shift, valid = scg.gather_counts(plan.mlen, s, tx.offset, tx.count)
         routed = shiftnet.gather_network(region, shift, valid)
         pieces.append(jax.lax.slice(routed.payload, (0,), (tx.count,)))
@@ -99,9 +146,40 @@ def load_strided(buffer: jax.Array, plan: AccessPlan) -> jax.Array:
     return out
 
 
-def store_strided(buffer: jax.Array, values: jax.Array, plan: AccessPlan) -> jax.Array:
+def store_strided(buffer: jax.Array, values: jax.Array, plan: AccessPlan,
+                  *, batched: bool = True) -> jax.Array:
     """Scatter ``vl`` dense elements to strided positions via SSN + coalesced
-    region writes. Returns the updated buffer (functional)."""
+    region writes. Returns the updated buffer (functional).
+
+    Default path mirrors :func:`load_strided`: one stacked (T, mlen) block
+    built with a static take, ONE batched scatter-plan pass, one merged
+    constant-index region writeback (aligned regions are disjoint by
+    construction, so the scatter has no duplicate targets)."""
+    if plan.vl <= 0:
+        return buffer
+    if not batched:
+        return _store_strided_loop(buffer, values, plan)
+    s = abs(plan.stride) if plan.stride != 0 else 1
+    mlen = plan.mlen
+    vals = values[::-1] if plan.reversed else values
+    starts, offsets, counts, firsts = _tx_meta(plan)
+    T = len(counts)
+    src = np.array(firsts)[:, None] + np.arange(mlen)[None, :]
+    lane_valid = np.arange(mlen)[None, :] < np.array(counts)[:, None]
+    src = np.clip(src, 0, plan.vl - 1)
+    block = jnp.where(jnp.asarray(lane_valid),
+                      jnp.take(vals, jnp.asarray(src)),
+                      jnp.zeros((T, mlen), vals.dtype))
+    bplan = shiftplan.batched_scatter_plan(mlen, s, offsets, counts)
+    routed = shiftnet.apply_plan(block, bplan, axis=-1)
+    idx = starts[:, None] + np.arange(mlen)[None, :]
+    old = jnp.take(buffer, jnp.asarray(np.minimum(idx, buffer.shape[0] - 1)))
+    merged = jnp.where(jnp.asarray(bplan.valid), routed, old)
+    return buffer.at[jnp.asarray(idx)].set(merged, mode="drop")
+
+
+def _store_strided_loop(buffer: jax.Array, values: jax.Array,
+                        plan: AccessPlan) -> jax.Array:
     s = abs(plan.stride) if plan.stride != 0 else 1
     vals = values[::-1] if plan.reversed else values
     for tx in plan.transactions:
@@ -110,9 +188,10 @@ def store_strided(buffer: jax.Array, values: jax.Array, plan: AccessPlan) -> jax
         shift, valid = scg.scatter_counts(plan.mlen, s, tx.offset, tx.count)
         routed = shiftnet.scatter_network(piece, shift, valid)
         start = tx.region * plan.mlen
-        old = jax.lax.dynamic_slice(buffer, (start,), (plan.mlen,))
+        old = _region_lanes(buffer, start, plan.mlen)
         merged = jnp.where(routed.valid, routed.payload, old)
-        buffer = jax.lax.dynamic_update_slice(buffer, merged, (start,))
+        idx = start + np.arange(plan.mlen)
+        buffer = buffer.at[jnp.asarray(idx)].set(merged, mode="drop")
     return buffer
 
 

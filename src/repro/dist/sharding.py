@@ -1,0 +1,232 @@
+"""Sharding rules: one ShardCtx object carries the mesh + axis roles; every
+PartitionSpec in the system is derived here (params, activations, optimizer
+state) so that elastic restore / dry-run / serving all agree on placement.
+
+Axis roles
+----------
+* ``data_axes``  : batch dimension of activations; gradient all-reduce.
+* ``model_axis`` : tensor parallelism (Megatron column/row splits, expert
+                   parallelism, vocab-sharded logits).
+* ``seq_axes``   : long-context serving only (B=1): KV sequence dim sharded.
+
+Spec derivation is *rule-based on leaf path + shape* (not stored per-leaf),
+so checkpoints hold logical arrays and any mesh can rebuild placements
+(ft/elastic.py).
+
+This module also provides version-compat wrappers (``shard_map``,
+``make_mesh``) because the public JAX surface for these moved across the
+versions this repo must run on.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# Version-compat wrappers
+# ---------------------------------------------------------------------------
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` where available, else the experimental spelling
+    (mapping ``check_vma`` onto the older ``check_rep``)."""
+    if hasattr(jax, "shard_map"):
+        try:
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=check_vma)
+        except TypeError:  # pre-check_vma signature
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma)
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]):
+    """``jax.make_mesh`` with Auto axis types when the installed JAX
+    supports them, plain otherwise."""
+    try:
+        from jax.sharding import AxisType
+        return jax.make_mesh(tuple(shape), tuple(axes),
+                             axis_types=(AxisType.Auto,) * len(axes))
+    except (ImportError, TypeError):
+        return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+# ---------------------------------------------------------------------------
+# ShardCtx
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Mesh + axis-role bundle threaded through models/train/serve."""
+    mesh: Any
+    data_axes: tuple = ()
+    model_axis: str | None = None
+    seq_axes: tuple = ()
+    fsdp: bool = False
+
+    # -- sizes ---------------------------------------------------------------
+    def _axis_size(self, axis) -> int:
+        if self.mesh is None or axis is None:
+            return 1
+        return self.mesh.shape[axis]
+
+    @property
+    def model_size(self) -> int:
+        return self._axis_size(self.model_axis)
+
+    @property
+    def data_size(self) -> int:
+        return math.prod(self._axis_size(a) for a in self.data_axes) \
+            if self.data_axes else 1
+
+    @property
+    def seq_shard_acts(self) -> bool:
+        """Megatron-SP: sequence-shard the residual stream between blocks."""
+        return self.mesh is not None and self.model_axis is not None
+
+    # -- spec helpers --------------------------------------------------------
+    def model_if_divisible(self, dim: int):
+        """model_axis iff ``dim`` splits evenly across it, else None."""
+        if (self.mesh is None or self.model_axis is None or dim is None
+                or dim % self.model_size or dim < self.model_size):
+            return None
+        return self.model_axis
+
+    def batch_spec(self, *rest) -> P:
+        """P for a batch-leading activation: (B over data axes, *rest)."""
+        return P(self.data_axes if self.data_axes else None, *rest)
+
+    def sharding(self, spec: P) -> NamedSharding:
+        assert self.mesh is not None, "sharding() needs a mesh"
+        return NamedSharding(self.mesh, spec)
+
+    def constrain(self, x, spec: P):
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, self.sharding(spec))
+
+
+def local_ctx() -> ShardCtx:
+    """Single-process / single-device context (mesh-less no-op specs)."""
+    return ShardCtx(mesh=None, data_axes=(), model_axis=None)
+
+
+# ---------------------------------------------------------------------------
+# Parameter spec rules
+# ---------------------------------------------------------------------------
+
+def _kp_str(kp) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+
+
+def _pick_model_dim(path: str, shape: tuple, start: int, ctx: ShardCtx):
+    """Dim index to place the model axis on, or None.
+
+    Rules (checked in order):
+      * MoE expert banks (wg/wu/wo under a moe subtree, >= 3 trailing dims):
+        shard the EXPERT dim — expert parallelism, matching the shard_map
+        in_specs of models/moe.py.
+      * attention/FFN output projections named ``wo``: shard the INPUT
+        (row-parallel — the matching all-reduce is the FFN psum).
+      * otherwise: the largest trailing dim divisible by the model size
+        (column-parallel default; embed/lm_head land vocab-sharded, which
+        is what the sharded cross-entropy in models/transformer.py expects).
+    """
+    ms = ctx.model_size
+    nd = len(shape)
+    if nd - start < 2:          # vectors (norm gains, biases): replicate
+        return None
+
+    def ok(i):
+        return shape[i] % ms == 0 and shape[i] >= ms
+
+    leaf = path.rsplit("/", 1)[-1]
+    if "moe" in path and leaf in ("wg", "wu", "wo") and nd - start >= 3:
+        if ok(start):
+            return start
+    if leaf == "wo" and nd - start == 2 and ok(start):
+        return start
+    if leaf == "wkv" and nd - start == 2:
+        # the interleaved [k|v] beat (EARTH AoS unit) must stay contiguous
+        # per device — shard the INPUT dim instead of splitting the beat
+        # (splitting it also trips an XLA SPMD partitioner miscompile with
+        # the strided deinterleave reshape on some backends; measured)
+        return start if ok(start) else None
+    best = None
+    for i in range(start, nd):
+        if ok(i) and (best is None or shape[i] >= shape[best]):
+            best = i
+    return best
+
+
+def param_spec(path: str, shape: tuple, ctx: ShardCtx) -> P:
+    """PartitionSpec for one parameter leaf."""
+    if ctx.mesh is None:
+        return P()
+    # block stacks carry a leading superblock dim that must never shard
+    # (it is the lax.scan carry axis)
+    stacked = path.startswith("blocks") or "/blocks/" in path
+    start = 1 if (stacked and len(shape) >= 2) else 0
+    parts: list = [None] * len(shape)
+    if ctx.model_axis is not None:
+        md = _pick_model_dim(path, shape, start, ctx)
+        if md is not None:
+            parts[md] = ctx.model_axis
+    spec = P(*parts)
+    if ctx.fsdp:
+        spec = add_data_sharding(spec, shape, ctx, start=start)
+    return spec
+
+
+def tree_param_specs(params, ctx: ShardCtx):
+    """Pytree of PartitionSpecs mirroring ``params``."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = [param_spec(_kp_str(kp), tuple(leaf.shape), ctx)
+             for kp, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def add_data_sharding(spec: P, shape: tuple, ctx: ShardCtx, *,
+                      start: int = 0) -> P:
+    """Additionally shard ``spec`` over the data axes (ZeRO-1 / FSDP).
+
+    Picks the first dim >= ``start`` that is unsharded and splits evenly
+    across the combined data axes; returns ``spec`` unchanged when none fits.
+    """
+    if ctx.mesh is None or not ctx.data_axes:
+        return spec
+    ds = ctx.data_size
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    for i in range(start, len(shape)):
+        if parts[i] is None and shape[i] % ds == 0 and shape[i] >= ds:
+            parts[i] = ctx.data_axes if len(ctx.data_axes) > 1 \
+                else ctx.data_axes[0]
+            return P(*parts)
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# Misc helpers used by launch / tests
+# ---------------------------------------------------------------------------
+
+def replicate(x, ctx: ShardCtx):
+    """Fully replicate a pytree on ctx's mesh (no-op mesh-less)."""
+    if ctx.mesh is None:
+        return x
+    return jax.tree.map(
+        lambda a: jax.device_put(a, ctx.sharding(P())), x)
+
+
+def spec_tree_shardings(specs, ctx: ShardCtx):
+    """Map a PartitionSpec pytree to NamedShardings."""
+    if ctx.mesh is None:
+        return None
+    return jax.tree.map(lambda s: ctx.sharding(s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

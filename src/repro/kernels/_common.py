@@ -3,7 +3,10 @@
 Kernels are written for TPU (pl.pallas_call + BlockSpec VMEM tiling) and
 validated on CPU with ``interpret=True`` — the kernel bodies use only
 static-shape slice/pad/where ops, which lower to cheap VREG data movement on
-real TPUs (see DESIGN.md §2).
+real TPUs (see DESIGN.md §2).  Static-pattern kernels route via compiled
+ShiftPlans (DESIGN.md §3): take-masks ride in as one stacked operand
+(Pallas kernels cannot close over array constants) while shift amounts and
+layer structure stay static Python in the kernel closure.
 """
 from __future__ import annotations
 
@@ -47,6 +50,23 @@ def pad_rows(x: jax.Array, tile: int = ROW_TILE) -> tuple[jax.Array, int]:
 def row_grid(rows: int, tile: int = ROW_TILE) -> int:
     assert rows % tile == 0
     return rows // tile
+
+
+def plan_operands(plan):
+    """(masks, valid, S) kernel operands for a compiled ShiftPlan.
+
+    masks: (S, plan.n) int32 stacked take-masks, padded to one dummy row
+    for empty plans (Pallas rejects zero-size blocks — apply_plan_operand
+    consumes zero rows in that case).  valid: (1, plan.n) int32 occupancy.
+    """
+    import numpy as np
+
+    from repro.core import shiftnet
+    masks = shiftnet.plan_mask_stack(plan).astype(np.int32)
+    if not masks.shape[0]:
+        masks = np.zeros((1, plan.n), np.int32)
+    valid = plan.valid.astype(np.int32).reshape(1, plan.n)
+    return jnp.asarray(masks), jnp.asarray(valid), masks.shape[0]
 
 
 def call(kernel, *, out_shape, grid, in_specs, out_specs, **kwargs):

@@ -3,7 +3,10 @@
 Layout: cache[..., t, 2*d] holds [k0, v0, k1, v1, ...] per token — K and V
 of a token are ONE contiguous beat, so a decode-step append is a single
 coalesced write (the paper's one-transaction-per-segment), and attention-time
-splitting is a FIELD=2 segment load through the segment kernel.
+splitting is a FIELD=2 segment load.  With impl="pallas" the split/pack go
+through the FUSED segment kernel: one compiled-permutation pass (static
+shifts + constant masks, core/shiftplan.py) produces both K and V — not two
+sequential gather networks.
 """
 from __future__ import annotations
 

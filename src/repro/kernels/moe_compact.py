@@ -3,8 +3,15 @@
 Packing the tokens routed to an expert to the front of a tile is an
 order-preserving, separation-non-increasing mapping — exactly the GSN-safe
 class.  Shift counts are a prefix sum of the routing mask (the "SCG" of
-dispatch), computed once outside; the kernel then routes (n, d) token rows
-with log2(n) static sublane shifts per d-tile, replacing a gather/sort.
+dispatch), computed once outside.
+
+Routing-mask precomputation (the static-plan compiler's runtime-count
+sibling): the per-layer take-masks depend only on the (n,)-wide shift
+counts, so they are derived ONCE outside the kernel (cheap vector
+arithmetic) and fed in as an (L, n) operand.  The kernel then pays exactly
+one static sublane shift + one select per layer on the wide (n, d) payload
+— for every d-tile — instead of re-routing the (shiftcnt, valid) triple
+inside each tile (3x the shifted arrays, duplicated per grid step).
 
 The inverse (expansion) scatters expert outputs back to token slots (SSN).
 """
@@ -22,61 +29,56 @@ from repro.kernels import _common
 COL_TILE = 128
 
 
-def _compact_kernel(shift_ref, valid_ref, rows_ref, o_ref):
+def _route_kernel(masks_ref, valid_ref, rows_ref, o_ref, *,
+                  toward_zero: bool, lsb_first: bool):
     rows = rows_ref[...]                  # (n, dt)
-    shift = shift_ref[...]                # (n, 1)
-    valid = valid_ref[...] != 0           # (n, 1)
-    res = shiftnet._route(rows, jnp.broadcast_to(shift, rows.shape),
-                          jnp.broadcast_to(valid, rows.shape),
-                          axis=0, toward_zero=True, lsb_first=True)
-    o_ref[...] = jnp.where(res.valid, res.payload, jnp.zeros_like(res.payload))
+    masks = masks_ref[...] != 0           # (L, n)
+    routed = shiftnet.apply_layer_masks(rows, masks, axis=0,
+                                        toward_zero=toward_zero,
+                                        lsb_first=lsb_first)
+    keep = valid_ref[...] != 0            # (n, 1)
+    o_ref[...] = jnp.where(keep, routed, jnp.zeros_like(routed))
+
+
+def _route_rows(rows: jax.Array, shift: jax.Array, valid: jax.Array,
+                out_valid: jax.Array, *, toward_zero: bool,
+                lsb_first: bool) -> jax.Array:
+    """Shared compact/expand driver: precompute (L, n) masks, tile over d."""
+    n, d = rows.shape
+    masks, _ = shiftnet.layer_masks(shift, valid, toward_zero=toward_zero,
+                                    lsb_first=lsb_first)
+    L = masks.shape[0]
+    if L == 0:                            # n <= 1: nothing can move
+        return jnp.where(out_valid[:, None], rows, jnp.zeros_like(rows))
+    dpad = (-d) % COL_TILE
+    rp = jnp.pad(rows, ((0, 0), (0, dpad))) if dpad else rows
+    dt = min(COL_TILE, rp.shape[1])
+    out = _common.call(
+        functools.partial(_route_kernel, toward_zero=toward_zero,
+                          lsb_first=lsb_first),
+        out_shape=jax.ShapeDtypeStruct(rp.shape, rows.dtype),
+        grid=(rp.shape[1] // dt,),
+        in_specs=[pl.BlockSpec((L, n), lambda j: (0, 0)),
+                  pl.BlockSpec((n, 1), lambda j: (0, 0)),
+                  pl.BlockSpec((n, dt), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((n, dt), lambda j: (0, j)),
+    )(masks.astype(jnp.int32), out_valid.reshape(n, 1).astype(jnp.int32), rp)
+    return out[:, :d]
 
 
 def compact_rows(rows: jax.Array, mask: jax.Array
                  ) -> tuple[jax.Array, jax.Array]:
     """Pack masked (n, d) rows to the front (stable). Returns (packed, valid)."""
-    n, d = rows.shape
+    n, _ = rows.shape
     shift, valid = scg.compaction_counts(mask)
-    dpad = (-d) % COL_TILE
-    rp = jnp.pad(rows, ((0, 0), (0, dpad))) if dpad else rows
-    dt = min(COL_TILE, rp.shape[1])
-    out = _common.call(
-        _compact_kernel,
-        out_shape=jax.ShapeDtypeStruct(rp.shape, rows.dtype),
-        grid=(rp.shape[1] // dt,),
-        in_specs=[pl.BlockSpec((n, 1), lambda j: (0, 0)),
-                  pl.BlockSpec((n, 1), lambda j: (0, 0)),
-                  pl.BlockSpec((n, dt), lambda j: (0, j))],
-        out_specs=pl.BlockSpec((n, dt), lambda j: (0, j)),
-    )(shift.reshape(n, 1), valid.reshape(n, 1).astype(jnp.int32), rp)
     packed_valid = jnp.arange(n) < jnp.sum(mask.astype(jnp.int32))
-    return out[:, :d], packed_valid
-
-
-def _expand_kernel(shift_ref, valid_ref, rows_ref, o_ref):
-    rows = rows_ref[...]
-    shift = shift_ref[...]
-    valid = valid_ref[...] != 0
-    res = shiftnet._route(rows, jnp.broadcast_to(shift, rows.shape),
-                          jnp.broadcast_to(valid, rows.shape),
-                          axis=0, toward_zero=False, lsb_first=False)
-    o_ref[...] = jnp.where(res.valid, res.payload, jnp.zeros_like(res.payload))
+    out = _route_rows(rows, shift, valid, packed_valid,
+                      toward_zero=True, lsb_first=True)
+    return out, packed_valid
 
 
 def expand_rows(packed: jax.Array, mask: jax.Array) -> jax.Array:
     """Scatter packed rows back to the set positions of mask (zeros elsewhere)."""
-    n, d = packed.shape
     shift, valid = scg.expansion_counts(mask)
-    dpad = (-d) % COL_TILE
-    pp = jnp.pad(packed, ((0, 0), (0, dpad))) if dpad else packed
-    dt = min(COL_TILE, pp.shape[1])
-    out = _common.call(
-        _expand_kernel,
-        out_shape=jax.ShapeDtypeStruct(pp.shape, packed.dtype),
-        grid=(pp.shape[1] // dt,),
-        in_specs=[pl.BlockSpec((n, 1), lambda j: (0, 0)),
-                  pl.BlockSpec((n, 1), lambda j: (0, 0)),
-                  pl.BlockSpec((n, dt), lambda j: (0, j))],
-        out_specs=pl.BlockSpec((n, dt), lambda j: (0, j)),
-    )(shift.reshape(n, 1), valid.reshape(n, 1).astype(jnp.int32), pp)
-    return out[:, :d]
+    return _route_rows(packed, shift, valid, mask.astype(bool),
+                       toward_zero=False, lsb_first=False)

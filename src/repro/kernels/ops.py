@@ -1,10 +1,14 @@
 """Public wrappers for the EARTH kernels with impl dispatch.
 
-impl="ref"    -> pure-jnp oracle (XLA path; used by the dry-run lowering)
-impl="pallas" -> Pallas TPU kernel (interpret mode off-TPU)
+impl="ref"            -> pure-jnp oracle (XLA path; the dry-run lowering)
+impl="pallas"         -> Pallas TPU kernel routed by a COMPILED ShiftPlan
+                         (constant masks, pruned layers; interpret off-TPU)
+impl="pallas_dynamic" -> Pallas kernel with the dynamic-count network in
+                         the body (the runtime-stride fallback; kept as the
+                         in-kernel oracle for the compiled path)
 
 Strides / offsets / field counts are static Python ints (they parameterize
-shift tables and block shapes); callers jit around these wrappers.
+shift plans and block shapes); callers jit around these wrappers.
 """
 from __future__ import annotations
 
@@ -14,40 +18,54 @@ import jax
 
 from repro.kernels import ref as _ref
 
+_IMPLS = ("ref", "pallas", "pallas_dynamic")
+
+
+def _check_impl(impl: str) -> None:
+    if impl not in _IMPLS:
+        raise ValueError(f"unknown impl {impl!r} (want one of {_IMPLS})")
+
 
 def _pick(impl: str, ref_fn, pallas_fn):
-    if impl == "pallas":
-        return pallas_fn
-    if impl == "ref":
-        return ref_fn
-    raise ValueError(f"unknown impl {impl!r} (want 'ref' or 'pallas')")
+    _check_impl(impl)
+    return ref_fn if impl == "ref" else pallas_fn
 
 
 def gather_strided(window: jax.Array, stride: int, offset: int, vl: int,
                    *, impl: str = "ref") -> jax.Array:
+    _check_impl(impl)
+    if impl == "ref":
+        return _ref.gather_strided(window, stride, offset, vl)
     from repro.kernels import strided as _strided
-    fn = _pick(impl, _ref.gather_strided, _strided.gather_strided)
-    return fn(window, stride, offset, vl)
+    return _strided.gather_strided(window, stride, offset, vl,
+                                   compiled=impl == "pallas")
 
 
 def scatter_strided(window: jax.Array, values: jax.Array, stride: int,
                     offset: int, *, impl: str = "ref") -> jax.Array:
+    _check_impl(impl)
+    if impl == "ref":
+        return _ref.scatter_strided(window, values, stride, offset)
     from repro.kernels import strided as _strided
-    fn = _pick(impl, _ref.scatter_strided, _strided.scatter_strided)
-    return fn(window, values, stride, offset)
+    return _strided.scatter_strided(window, values, stride, offset,
+                                    compiled=impl == "pallas")
 
 
 def deinterleave(aos: jax.Array, fields: int, *, impl: str = "ref"
                  ) -> list[jax.Array]:
+    _check_impl(impl)
+    if impl == "ref":
+        return _ref.deinterleave(aos, fields)
     from repro.kernels import segment as _segment
-    fn = _pick(impl, _ref.deinterleave, _segment.deinterleave)
-    return fn(aos, fields)
+    return _segment.deinterleave(aos, fields, fused=impl == "pallas")
 
 
 def interleave(soa: Sequence[jax.Array], *, impl: str = "ref") -> jax.Array:
+    _check_impl(impl)
+    if impl == "ref":
+        return _ref.interleave(list(soa))
     from repro.kernels import segment as _segment
-    fn = _pick(impl, _ref.interleave, _segment.interleave)
-    return fn(list(soa))
+    return _segment.interleave(list(soa), fused=impl == "pallas")
 
 
 def compact_rows(rows: jax.Array, mask: jax.Array, *, impl: str = "ref"

@@ -1,10 +1,20 @@
-"""Segment (AoS <-> SoA) Pallas kernels — the RCVRF path, buffer-free.
+"""Segment (AoS <-> SoA) Pallas kernels — compiled bulk transposition.
 
-A segment load with FIELDS=f is f field-wise strided gathers (stride=f,
-offset=field) over the same VMEM-resident AoS beat; a segment store is the
-mirrored scatter.  No scratch "segment buffer" is allocated: each field's
-routed lanes are written straight to its output block, matching EARTH's
-immediate-writeback timeline (Fig. 4c).
+A segment access with FIELDS=f over an n-lane beat is ONE lane permutation
+(AoS -> concatenated SoA fields, or back).  The static-plan compiler
+(core/shiftplan.py) routes it in a SINGLE kernel either as
+
+  * a FUSED permutation pass — one O(log n) Benes/butterfly sweep of static
+    shifts + constant-mask selects handling ALL fields at once (the RCVRF
+    shifted-register-bank bulk transposition, EARTH §4.5), or
+  * ``fields`` compiled per-field passes when the cost model says that is
+    cheaper (small field counts) — still pruned single-shift layers with
+    constant masks, never the dynamic triple-shift loop.
+
+No scratch "segment buffer" is allocated: each field's lanes are sliced
+straight out of the routed beat into its output block (immediate writeback,
+Fig. 4c).  ``fused=False`` keeps the per-field dynamic-count networks as
+the fallback/oracle.
 """
 from __future__ import annotations
 
@@ -12,14 +22,84 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
-from repro.core import scg, shiftnet
+from repro.core import scg, shiftnet, shiftplan
 from repro.kernels import _common
 
 
-def _deint_kernel(aos_ref, *o_refs, fields: int):
-    aos = aos_ref[...]                    # (rt, f*m)
+def _stack_masks(plans) -> tuple[np.ndarray, tuple[tuple[int, int], ...]]:
+    """Concat all plans' mask rows into one (S, n) operand + row spans."""
+    rows, spans = [], []
+    for p in plans:
+        r = shiftnet.plan_mask_stack(p)
+        spans.append((len(rows), len(rows) + r.shape[0]))
+        rows.extend(r)
+    if not rows:
+        return np.zeros((1, plans[0].n), np.int32), spans
+    return np.stack(rows).astype(np.int32), spans
+
+
+# ---------------------------------------------------------------------------
+# Routing bodies (pure jnp — shared by the Pallas kernels and benchmarks)
+# ---------------------------------------------------------------------------
+
+def route_deinterleave(aos, masks, mode: str, plans, spans, fields: int):
+    """(rows, n) AoS -> list of (rows, m) fields via compiled plans."""
+    n = aos.shape[-1]
+    m = n // fields
+    if mode == "fused":
+        plan = plans[0]
+        x = aos if plan.n == n else jnp.pad(aos, ((0, 0), (0, plan.n - n)))
+        lo, hi = spans[0]
+        routed = shiftnet.apply_plan_operand(x, masks[lo:hi], plan, axis=-1)
+        return [jax.lax.slice(routed, (0, f * m), (aos.shape[0], (f + 1) * m))
+                for f in range(fields)]
+    outs = []
+    for f, plan in enumerate(plans):
+        lo, hi = spans[f]
+        routed = shiftnet.apply_plan_operand(aos, masks[lo:hi], plan,
+                                             axis=-1)
+        outs.append(jax.lax.slice(routed, (0, 0), (aos.shape[0], m)))
+    return outs
+
+
+def route_interleave(x, masks, valid, mode: str, plans, spans, fields: int):
+    """(rows, n) concatenated SoA -> (rows, n) AoS beat."""
+    rows, n = x.shape
+    if mode == "fused":
+        plan = plans[0]
+        xp = x if plan.n == n else jnp.pad(x, ((0, 0), (0, plan.n - n)))
+        lo, hi = spans[0]
+        routed = shiftnet.apply_plan_operand(xp, masks[lo:hi], plan, axis=-1)
+        return jax.lax.slice(routed, (0, 0), (rows, n))
+    m = n // fields
+    acc = jnp.zeros((rows, n), x.dtype)
+    for f, plan in enumerate(plans):
+        lo, hi = spans[f]
+        fx = jax.lax.slice(x, (0, f * m), (rows, (f + 1) * m))
+        padded = jnp.pad(fx, ((0, 0), (0, n - m)))
+        routed = shiftnet.apply_plan_operand(padded, masks[lo:hi], plan,
+                                             axis=-1)
+        acc = jnp.where(valid[f][None, :] != 0, routed, acc)
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# Deinterleave (segment load)
+# ---------------------------------------------------------------------------
+
+def _deint_plan_kernel(masks_ref, aos_ref, *o_refs, mode, plans, spans,
+                       fields: int):
+    outs = route_deinterleave(aos_ref[...], masks_ref[...], mode, plans,
+                              spans, fields)
+    for f in range(fields):
+        o_refs[f][...] = outs[f]
+
+
+def _deint_dyn_kernel(aos_ref, *o_refs, fields: int):
+    aos = aos_ref[...]
     n = aos.shape[-1]
     m = n // fields
     for f in range(fields):
@@ -29,7 +109,8 @@ def _deint_kernel(aos_ref, *o_refs, fields: int):
         o_refs[f][...] = jax.lax.slice(res.payload, (0, 0), (aos.shape[0], m))
 
 
-def deinterleave(aos: jax.Array, fields: int) -> list[jax.Array]:
+def deinterleave(aos: jax.Array, fields: int, *,
+                 fused: bool = True) -> list[jax.Array]:
     """(..., fields*m) -> fields x (..., m)   (segment load)."""
     n = aos.shape[-1]
     assert n % fields == 0
@@ -37,19 +118,48 @@ def deinterleave(aos: jax.Array, fields: int) -> list[jax.Array]:
     flat, lead = _common.flatten_rows(aos)
     flat, r0 = _common.pad_rows(flat)
     rt = _common.ROW_TILE
-    outs = _common.call(
-        functools.partial(_deint_kernel, fields=fields),
-        out_shape=tuple(jax.ShapeDtypeStruct((flat.shape[0], m), aos.dtype)
-                        for _ in range(fields)),
-        grid=(_common.row_grid(flat.shape[0]),),
-        in_specs=[pl.BlockSpec((rt, n), lambda i: (i, 0))],
-        out_specs=tuple(pl.BlockSpec((rt, m), lambda i: (i, 0))
-                        for _ in range(fields)),
-    )(flat)
+    grid = (_common.row_grid(flat.shape[0]),)
+    out_shape = tuple(jax.ShapeDtypeStruct((flat.shape[0], m), aos.dtype)
+                      for _ in range(fields))
+    out_specs = tuple(pl.BlockSpec((rt, m), lambda i: (i, 0))
+                      for _ in range(fields))
+    if fused:
+        mode, plans = shiftplan.segment_deinterleave_plans(n, fields)
+        masks, spans = _stack_masks(plans)
+        S, W = masks.shape
+        outs = _common.call(
+            functools.partial(_deint_plan_kernel, mode=mode, plans=plans,
+                              spans=spans, fields=fields),
+            out_shape=out_shape,
+            grid=grid,
+            in_specs=[pl.BlockSpec((S, W), lambda i: (0, 0)),
+                      pl.BlockSpec((rt, n), lambda i: (i, 0))],
+            out_specs=out_specs,
+        )(jnp.asarray(masks), flat)
+    else:
+        outs = _common.call(
+            functools.partial(_deint_dyn_kernel, fields=fields),
+            out_shape=out_shape,
+            grid=grid,
+            in_specs=[pl.BlockSpec((rt, n), lambda i: (i, 0))],
+            out_specs=out_specs,
+        )(flat)
     return [o[:r0].reshape(lead + (m,)) for o in outs]
 
 
-def _int_kernel(*refs, fields: int):
+# ---------------------------------------------------------------------------
+# Interleave (segment store)
+# ---------------------------------------------------------------------------
+
+def _int_plan_kernel(masks_ref, valid_ref, *refs, mode, plans, spans,
+                     fields: int):
+    f_refs, o_ref = refs[:-1], refs[-1]
+    x = jnp.concatenate([r[...] for r in f_refs], axis=-1)  # (rt, n)
+    o_ref[...] = route_interleave(x, masks_ref[...], valid_ref[...], mode,
+                                  plans, spans, fields)
+
+
+def _int_dyn_kernel(*refs, fields: int):
     f_refs, o_ref = refs[:-1], refs[-1]
     rt, m = f_refs[0].shape
     n = m * fields
@@ -63,7 +173,7 @@ def _int_kernel(*refs, fields: int):
     o_ref[...] = acc
 
 
-def interleave(soa: list[jax.Array]) -> jax.Array:
+def interleave(soa: list[jax.Array], *, fused: bool = True) -> jax.Array:
     """fields x (..., m) -> (..., fields*m)   (segment store)."""
     fields = len(soa)
     m = soa[0].shape[-1]
@@ -75,12 +185,31 @@ def interleave(soa: list[jax.Array]) -> jax.Array:
         f, r0 = _common.pad_rows(f)
         flats.append(f)
     rt = _common.ROW_TILE
-    out = _common.call(
-        functools.partial(_int_kernel, fields=fields),
-        out_shape=jax.ShapeDtypeStruct((flats[0].shape[0], n), soa[0].dtype),
-        grid=(_common.row_grid(flats[0].shape[0]),),
-        in_specs=[pl.BlockSpec((rt, m), lambda i: (i, 0))
-                  for _ in range(fields)],
-        out_specs=pl.BlockSpec((rt, n), lambda i: (i, 0)),
-    )(*flats)
+    grid = (_common.row_grid(flats[0].shape[0]),)
+    out_shape = jax.ShapeDtypeStruct((flats[0].shape[0], n), soa[0].dtype)
+    f_specs = [pl.BlockSpec((rt, m), lambda i: (i, 0))
+               for _ in range(fields)]
+    if fused:
+        mode, plans = shiftplan.segment_interleave_plans(n, fields)
+        masks, spans = _stack_masks(plans)
+        S, W = masks.shape
+        valid = np.stack([p.valid for p in plans]).astype(np.int32) \
+            if mode == "per_field" else np.zeros((1, n), np.int32)
+        out = _common.call(
+            functools.partial(_int_plan_kernel, mode=mode, plans=plans,
+                              spans=spans, fields=fields),
+            out_shape=out_shape,
+            grid=grid,
+            in_specs=[pl.BlockSpec((S, W), lambda i: (0, 0)),
+                      pl.BlockSpec(valid.shape, lambda i: (0, 0))] + f_specs,
+            out_specs=pl.BlockSpec((rt, n), lambda i: (i, 0)),
+        )(jnp.asarray(masks), jnp.asarray(valid), *flats)
+    else:
+        out = _common.call(
+            functools.partial(_int_dyn_kernel, fields=fields),
+            out_shape=out_shape,
+            grid=grid,
+            in_specs=f_specs,
+            out_specs=pl.BlockSpec((rt, n), lambda i: (i, 0)),
+        )(*flats)
     return out[:r0].reshape(lead + (n,))

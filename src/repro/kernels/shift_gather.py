@@ -12,9 +12,10 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
-from repro.core import shiftnet
+from repro.core import shiftnet, shiftplan
 from repro.kernels import _common
 
 
@@ -26,12 +27,50 @@ def _kernel(shift_ref, valid_ref, x_ref, o_ref):
     o_ref[...] = jnp.where(res.valid, res.payload, jnp.zeros_like(res.payload))
 
 
+def _plan_kernel(masks_ref, valid_ref, x_ref, o_ref, *, plan):
+    x = x_ref[...]
+    routed = shiftnet.apply_plan_operand(x, masks_ref[...], plan, axis=-1)
+    o_ref[...] = jnp.where(valid_ref[...] != 0, routed,
+                           jnp.zeros_like(routed))
+
+
+def _is_static(a) -> bool:
+    return isinstance(a, (np.ndarray, tuple, list))
+
+
+def shift_gather_static(x: jax.Array, plan) -> jax.Array:
+    """Route lanes through a compiled ShiftPlan (pruned constant masks)."""
+    n = x.shape[-1]
+    assert plan.n == n, (plan.n, n)
+    flat, lead = _common.flatten_rows(x)
+    flat, r0 = _common.pad_rows(flat)
+    rt = _common.ROW_TILE
+    masks, valid, S = _common.plan_operands(plan)
+    out = _common.call(
+        functools.partial(_plan_kernel, plan=plan),
+        out_shape=jax.ShapeDtypeStruct(flat.shape, x.dtype),
+        grid=(_common.row_grid(flat.shape[0]),),
+        in_specs=[pl.BlockSpec((S, n), lambda i: (0, 0)),
+                  pl.BlockSpec((1, n), lambda i: (0, 0)),
+                  pl.BlockSpec((rt, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((rt, n), lambda i: (i, 0)),
+    )(masks, valid, flat)
+    return out[:r0].reshape(lead + (n,))
+
+
 def shift_gather(x: jax.Array, shift: jax.Array, valid: jax.Array) -> jax.Array:
     """Route (..., n) lanes down by ``shift`` where ``valid``; zero elsewhere.
 
     shift, valid: (n,) — one routing program shared by all rows (matching
-    DROM: one SCG feeds the whole beat).
+    DROM: one SCG feeds the whole beat).  When both are HOST data (NumPy /
+    tuples) the routing is compiled to a pruned static plan; traced arrays
+    take the dynamic-count network.
     """
+    if _is_static(shift) and _is_static(valid):
+        plan = shiftplan.counts_plan(
+            tuple(int(s) for s in np.asarray(shift)),
+            tuple(bool(v) for v in np.asarray(valid)), gather=True)
+        return shift_gather_static(x, plan)
     n = x.shape[-1]
     flat, lead = _common.flatten_rows(x)
     flat, r0 = _common.pad_rows(flat)

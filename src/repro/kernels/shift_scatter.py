@@ -6,12 +6,46 @@ existing buffer (the store path of LSDO).
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
-from repro.core import shiftnet
+from repro.core import shiftnet, shiftplan
 from repro.kernels import _common
+
+
+def _plan_kernel(masks_ref, valid_ref, x_ref, o_ref, ov_ref, *, plan):
+    x = x_ref[...]
+    routed = shiftnet.apply_plan_operand(x, masks_ref[...], plan, axis=-1)
+    keep = valid_ref[...] != 0
+    o_ref[...] = jnp.where(keep, routed, jnp.zeros_like(routed))
+    ov_ref[...] = jnp.broadcast_to(keep, x.shape).astype(jnp.int32)
+
+
+def shift_scatter_static(x: jax.Array, plan) -> tuple[jax.Array, jax.Array]:
+    """Compiled-plan SSN: (payload, occupancy) with constant masks."""
+    n = x.shape[-1]
+    assert plan.n == n, (plan.n, n)
+    flat, lead = _common.flatten_rows(x)
+    flat, r0 = _common.pad_rows(flat)
+    rt = _common.ROW_TILE
+    masks, valid, S = _common.plan_operands(plan)
+    out, outv = _common.call(
+        functools.partial(_plan_kernel, plan=plan),
+        out_shape=(jax.ShapeDtypeStruct(flat.shape, x.dtype),
+                   jax.ShapeDtypeStruct(flat.shape, jnp.int32)),
+        grid=(_common.row_grid(flat.shape[0]),),
+        in_specs=[pl.BlockSpec((S, n), lambda i: (0, 0)),
+                  pl.BlockSpec((1, n), lambda i: (0, 0)),
+                  pl.BlockSpec((rt, n), lambda i: (i, 0))],
+        out_specs=(pl.BlockSpec((rt, n), lambda i: (i, 0)),
+                   pl.BlockSpec((rt, n), lambda i: (i, 0))),
+    )(masks, valid, flat)
+    return (out[:r0].reshape(lead + (n,)),
+            (outv[:r0] != 0).reshape(lead + (n,)))
 
 
 def _kernel(shift_ref, valid_ref, x_ref, o_ref, ov_ref):
@@ -28,7 +62,14 @@ def shift_scatter(x: jax.Array, shift: jax.Array, valid: jax.Array
     """Route (..., n) lanes up by ``shift`` where ``valid``.
 
     Returns (payload, valid_mask) with zeros / False in unoccupied lanes.
+    Host-data (shift, valid) compile to a pruned static plan.
     """
+    if isinstance(shift, (np.ndarray, tuple, list)) and \
+            isinstance(valid, (np.ndarray, tuple, list)):
+        plan = shiftplan.counts_plan(
+            tuple(int(s) for s in np.asarray(shift)),
+            tuple(bool(v) for v in np.asarray(valid)), gather=False)
+        return shift_scatter_static(x, plan)
     n = x.shape[-1]
     flat, lead = _common.flatten_rows(x)
     flat, r0 = _common.pad_rows(flat)

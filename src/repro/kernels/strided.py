@@ -1,10 +1,15 @@
-"""LSDO strided load/store as Pallas TPU kernels.
+"""LSDO strided load/store as Pallas TPU kernels — compiled-plan routing.
 
 The BlockSpec load of the contiguous window IS the coalesced transaction
 (one HBM->VMEM block move per aligned region, replacing ``vl`` element-wise
-requests); the in-kernel shift network is the DROM reorganization.  Shift
-counts use the EARTH §4.2 closed form, computed with static stride/offset so
-the layer masks are constants folded by Mosaic.
+requests).  Since stride/offset/vl are static Python ints here, the in-kernel
+reorganization is a ShiftPlan compiled by core/shiftplan.py: layer-pruned
+constant take-masks (stacked into one small operand — Pallas kernels cannot
+close over array constants) and ONE static lane shift + ONE select per
+active layer — no runtime shift-count arithmetic in the kernel at all.
+
+``compiled=False`` keeps the dynamic-count network in the kernel body (the
+runtime-stride fallback, and the oracle the property tests compare against).
 """
 from __future__ import annotations
 
@@ -12,41 +17,75 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
-from repro.core import scg, shiftnet
+from repro.core import scg, shiftnet, shiftplan
 from repro.kernels import _common
 
 
-def _gather_kernel(x_ref, o_ref, *, stride: int, offset: int, vl: int):
+def _gather_plan_kernel(masks_ref, x_ref, o_ref, *, plan, vl: int):
     x = x_ref[...]                        # (rt, n) coalesced window tile
+    routed = shiftnet.apply_plan_operand(x, masks_ref[...], plan, axis=-1)
+    o_ref[...] = jax.lax.slice(routed, (0, 0), (x.shape[0], vl))
+
+
+def _gather_dyn_kernel(x_ref, o_ref, *, stride: int, offset: int, vl: int):
+    x = x_ref[...]
     n = x.shape[-1]
     shift, valid = scg.gather_counts(n, stride, offset, vl)
     res = shiftnet.gather_network(x, shift[None, :], valid[None, :], axis=-1)
     o_ref[...] = jax.lax.slice(res.payload, (0, 0), (x.shape[0], vl))
 
 
-def gather_strided(window: jax.Array, stride: int, offset: int, vl: int
-                   ) -> jax.Array:
+def gather_strided(window: jax.Array, stride: int, offset: int, vl: int,
+                   *, compiled: bool = True) -> jax.Array:
     """(..., n) -> (..., vl): out[..., i] = window[..., offset + i*stride]."""
     n = window.shape[-1]
     assert offset + (vl - 1) * stride < n
     flat, lead = _common.flatten_rows(window)
     flat, r0 = _common.pad_rows(flat)
     rt = _common.ROW_TILE
-    out = _common.call(
-        functools.partial(_gather_kernel, stride=stride, offset=offset, vl=vl),
-        out_shape=jax.ShapeDtypeStruct((flat.shape[0], vl), window.dtype),
-        grid=(_common.row_grid(flat.shape[0]),),
-        in_specs=[pl.BlockSpec((rt, n), lambda i: (i, 0))],
-        out_specs=pl.BlockSpec((rt, vl), lambda i: (i, 0)),
-    )(flat)
+    out_shape = jax.ShapeDtypeStruct((flat.shape[0], vl), window.dtype)
+    grid = (_common.row_grid(flat.shape[0]),)
+    if compiled:
+        plan = shiftplan.gather_plan(n, stride, offset, vl)
+        masks, _, S = _common.plan_operands(plan)
+        out = _common.call(
+            functools.partial(_gather_plan_kernel, plan=plan, vl=vl),
+            out_shape=out_shape,
+            grid=grid,
+            in_specs=[pl.BlockSpec((S, n), lambda i: (0, 0)),
+                      pl.BlockSpec((rt, n), lambda i: (i, 0))],
+            out_specs=pl.BlockSpec((rt, vl), lambda i: (i, 0)),
+        )(masks, flat)
+    else:
+        out = _common.call(
+            functools.partial(_gather_dyn_kernel, stride=stride,
+                              offset=offset, vl=vl),
+            out_shape=out_shape,
+            grid=grid,
+            in_specs=[pl.BlockSpec((rt, n), lambda i: (i, 0))],
+            out_specs=pl.BlockSpec((rt, vl), lambda i: (i, 0)),
+        )(flat)
     return out[:r0].reshape(lead + (vl,))
 
 
-def _scatter_kernel(vals_ref, win_ref, o_ref, *, stride: int, offset: int):
+def _scatter_plan_kernel(masks_ref, valid_ref, vals_ref, win_ref, o_ref, *,
+                         plan):
     vals = vals_ref[...]                  # (rt, vl)
     win = win_ref[...]                    # (rt, n)
+    n = win.shape[-1]
+    padded = jnp.pad(vals, ((0, 0), (0, n - vals.shape[-1])))
+    routed = shiftnet.apply_plan_operand(padded, masks_ref[...], plan,
+                                         axis=-1)
+    o_ref[...] = jnp.where(valid_ref[...] != 0, routed, win)
+
+
+def _scatter_dyn_kernel(vals_ref, win_ref, o_ref, *, stride: int,
+                        offset: int):
+    vals = vals_ref[...]
+    win = win_ref[...]
     n = win.shape[-1]
     vl = vals.shape[-1]
     padded = jnp.pad(vals, ((0, 0), (0, n - vl)))
@@ -57,7 +96,7 @@ def _scatter_kernel(vals_ref, win_ref, o_ref, *, stride: int, offset: int):
 
 
 def scatter_strided(window: jax.Array, values: jax.Array, stride: int,
-                    offset: int) -> jax.Array:
+                    offset: int, *, compiled: bool = True) -> jax.Array:
     """Merge dense values into strided positions of window (read-modify-write,
     the SIFQ store path)."""
     n = window.shape[-1]
@@ -68,12 +107,28 @@ def scatter_strided(window: jax.Array, values: jax.Array, stride: int,
     fw, r0 = _common.pad_rows(fw)
     fv, _ = _common.pad_rows(fv)
     rt = _common.ROW_TILE
-    out = _common.call(
-        functools.partial(_scatter_kernel, stride=stride, offset=offset),
-        out_shape=jax.ShapeDtypeStruct(fw.shape, window.dtype),
-        grid=(_common.row_grid(fw.shape[0]),),
-        in_specs=[pl.BlockSpec((rt, vl), lambda i: (i, 0)),
-                  pl.BlockSpec((rt, n), lambda i: (i, 0))],
-        out_specs=pl.BlockSpec((rt, n), lambda i: (i, 0)),
-    )(fv, fw)
+    grid = (_common.row_grid(fw.shape[0]),)
+    if compiled:
+        plan = shiftplan.scatter_plan(n, stride, offset, vl)
+        masks, valid, S = _common.plan_operands(plan)
+        out = _common.call(
+            functools.partial(_scatter_plan_kernel, plan=plan),
+            out_shape=jax.ShapeDtypeStruct(fw.shape, window.dtype),
+            grid=grid,
+            in_specs=[pl.BlockSpec((S, n), lambda i: (0, 0)),
+                      pl.BlockSpec((1, n), lambda i: (0, 0)),
+                      pl.BlockSpec((rt, vl), lambda i: (i, 0)),
+                      pl.BlockSpec((rt, n), lambda i: (i, 0))],
+            out_specs=pl.BlockSpec((rt, n), lambda i: (i, 0)),
+        )(masks, valid, fv, fw)
+    else:
+        out = _common.call(
+            functools.partial(_scatter_dyn_kernel, stride=stride,
+                              offset=offset),
+            out_shape=jax.ShapeDtypeStruct(fw.shape, window.dtype),
+            grid=grid,
+            in_specs=[pl.BlockSpec((rt, vl), lambda i: (i, 0)),
+                      pl.BlockSpec((rt, n), lambda i: (i, 0))],
+            out_specs=pl.BlockSpec((rt, n), lambda i: (i, 0)),
+        )(fv, fw)
     return out[:r0].reshape(lead + (n,))

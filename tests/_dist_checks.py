@@ -81,8 +81,8 @@ def check_pipeline_equivalence():
     from repro.models.transformer import loss_fn
 
     cfg = get_arch("qwen3-0.6b").smoke  # 2 layers -> 2 stages x 1
-    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    from repro.dist.sharding import make_mesh
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
     ctx = make_ctx(mesh)
     from repro.models.transformer import init_params
     params = init_params(cfg, jax.random.key(0))

@@ -1,0 +1,133 @@
+"""Minimal fallback for the tiny slice of Hypothesis this suite uses.
+
+The container image does not ship ``hypothesis``; rather than skip every
+property test, this module provides deterministic pseudo-random example
+generation with the same decorator surface (``given``, ``settings``,
+``strategies``: integers / booleans / sampled_from / lists / sets /
+composite). Test modules do::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypcompat import given, settings, strategies as st
+
+Real Hypothesis (shrinking, coverage-guided generation) is used whenever it
+is installed — this shim only keeps the properties *exercised* without it.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+_MAX_EXAMPLES = 20  # capped: examples re-trigger jit compiles
+
+
+class settings:  # noqa: N801 — mirrors hypothesis.settings
+    _profiles: dict[str, int] = {}
+
+    def __init__(self, *a, **kw):
+        pass
+
+    @classmethod
+    def register_profile(cls, name: str, max_examples: int = 50, **kw):
+        cls._profiles[name] = max_examples
+
+    @classmethod
+    def load_profile(cls, name: str):
+        global _MAX_EXAMPLES
+        _MAX_EXAMPLES = min(cls._profiles.get(name, 20), 20)
+
+
+class _Strategy:
+    """A strategy is just a draw function rng -> value."""
+
+    def __init__(self, fn):
+        self.fn = fn
+
+    def map(self, f):
+        return _Strategy(lambda rng: f(self.fn(rng)))
+
+    def filter(self, pred):
+        def draw(rng):
+            for _ in range(1000):
+                v = self.fn(rng)
+                if pred(v):
+                    return v
+            raise ValueError("filter predicate never satisfied")
+        return _Strategy(draw)
+
+
+class strategies:  # noqa: N801 — mirrors hypothesis.strategies
+    @staticmethod
+    def integers(min_value=0, max_value=0, **kw):
+        lo = kw.get("min_value", min_value)
+        hi = kw.get("max_value", max_value)
+        return _Strategy(lambda rng: rng.randint(lo, hi))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, **kw):
+        lo = kw.get("min_value", min_value)
+        hi = kw.get("max_value", max_value)
+        return _Strategy(lambda rng: rng.uniform(lo, hi))
+
+    @staticmethod
+    def sampled_from(seq):
+        seq = list(seq)
+        return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+    @staticmethod
+    def lists(elem: _Strategy, min_size=0, max_size=10, **kw):
+        lo = kw.get("min_size", min_size)
+        hi = kw.get("max_size", max_size)
+        return _Strategy(
+            lambda rng: [elem.fn(rng) for _ in range(rng.randint(lo, hi))])
+
+    @staticmethod
+    def sets(elem: _Strategy, min_size=0, max_size=10, **kw):
+        lo = kw.get("min_size", min_size)
+        hi = kw.get("max_size", max_size)
+
+        def draw(rng):
+            want = rng.randint(lo, hi)
+            out: set = set()
+            for _ in range(200 * max(want, 1)):
+                if len(out) >= want:
+                    break
+                out.add(elem.fn(rng))
+            return out
+        return _Strategy(draw)
+
+    @staticmethod
+    def composite(f):
+        def builder(*args, **kwargs):
+            return _Strategy(
+                lambda rng: f(lambda s: s.fn(rng), *args, **kwargs))
+        return builder
+
+
+st = strategies
+
+
+def given(*strats, **kwstrats):
+    def deco(test):
+        @functools.wraps(test)
+        def wrapper(*args, **kwargs):
+            rng = random.Random(12345)
+            for _ in range(_MAX_EXAMPLES):
+                vals = [s.fn(rng) for s in strats]
+                kvals = {k: s.fn(rng) for k, s in kwstrats.items()}
+                test(*args, *vals, **kwargs, **kvals)
+        # hide the strategy-filled params from pytest's fixture resolution
+        # (real hypothesis does the same via @impersonate)
+        del wrapper.__wrapped__
+        params = list(inspect.signature(test).parameters.values())
+        keep = params[: len(params) - len(strats)]
+        keep = [p for p in keep if p.name not in kwstrats]
+        wrapper.__signature__ = inspect.Signature(keep)
+        return wrapper
+    return deco

@@ -10,7 +10,12 @@ separation-monotone. We generate random legal mappings and assert:
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container without hypothesis: deterministic fallback
+    import os, sys
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    from _hypcompat import given, settings, strategies as st
 
 from repro.core import scg, shiftnet
 
@@ -165,3 +170,201 @@ def test_segment_field_extraction(fields, m):
         assert not bool(res.conflict)
         np.testing.assert_array_equal(np.asarray(res.payload)[:m],
                                       np.arange(m) * fields + f)
+
+
+# ---------------------------------------------------------------------------
+# Compiled static-plan path (core/shiftplan.py) vs the dynamic-count oracle.
+# The dynamic network above IS the oracle; the compiled plans must match it
+# exactly — payload, occupancy, and conflict flag — across strides/offsets/
+# vl and all segment field counts.
+# ---------------------------------------------------------------------------
+
+import itertools
+
+import pytest
+
+from repro.core import lsdo, shiftplan
+
+STRIDES = (1, 2, 3, 4, 7, 8, 16)
+
+
+@pytest.mark.parametrize("stride", STRIDES)
+@pytest.mark.parametrize("offset", (0, 1, 5))
+@pytest.mark.parametrize("n", (64, 128))
+def test_compiled_gather_matches_dynamic(stride, offset, n):
+    vl = (n - 1 - offset) // stride + 1
+    for v in {1, max(1, vl // 2), vl}:
+        window = jnp.arange(n, dtype=jnp.int32) * 13 + 7
+        shift, valid = scg.gather_counts(n, stride, offset, v)
+        dyn = shiftnet.gather_network(window, shift, valid)
+        plan = shiftplan.gather_plan(n, stride, offset, v)
+        out = shiftnet.apply_plan(window, plan)
+        # conflict parity: legal strided patterns are conflict-free on both
+        assert not bool(dyn.conflict) and not plan.conflict
+        np.testing.assert_array_equal(
+            np.asarray(dyn.valid), plan.valid)
+        np.testing.assert_array_equal(
+            np.where(plan.valid, np.asarray(out), 0),
+            np.where(np.asarray(dyn.valid), np.asarray(dyn.payload), 0))
+
+
+@pytest.mark.parametrize("stride", STRIDES)
+@pytest.mark.parametrize("offset", (0, 1, 5))
+@pytest.mark.parametrize("n", (64, 128))
+def test_compiled_scatter_matches_dynamic(stride, offset, n):
+    vl = (n - 1 - offset) // stride + 1
+    for v in {1, max(1, vl // 2), vl}:
+        dense = jnp.arange(n, dtype=jnp.int32) * 3 + 1
+        shift, valid = scg.scatter_counts(n, stride, offset, v)
+        dyn = shiftnet.scatter_network(dense, shift, valid)
+        plan = shiftplan.scatter_plan(n, stride, offset, v)
+        out = shiftnet.apply_plan(dense, plan)
+        assert not bool(dyn.conflict) and not plan.conflict
+        np.testing.assert_array_equal(np.asarray(dyn.valid), plan.valid)
+        np.testing.assert_array_equal(
+            np.where(plan.valid, np.asarray(out), 0),
+            np.where(np.asarray(dyn.valid), np.asarray(dyn.payload), 0))
+
+
+@pytest.mark.parametrize("fields", (2, 3, 4, 5, 6, 7, 8))
+def test_compiled_segment_matches_dynamic(fields):
+    m = 32
+    n = fields * m
+    aos = jnp.arange(n, dtype=jnp.int32) + 100
+    plan = shiftplan.deinterleave_plan(n, fields)
+    x = jnp.pad(aos, (0, plan.n - n)) if plan.n > n else aos
+    routed = np.asarray(shiftnet.apply_plan(x, plan))
+    for f in range(fields):
+        shift, valid = scg.segment_gather_counts(n, fields, f, m)
+        dyn = shiftnet.gather_network(aos, shift, valid)
+        assert not bool(dyn.conflict)
+        np.testing.assert_array_equal(routed[f * m:(f + 1) * m],
+                                      np.asarray(dyn.payload)[:m])
+    # and the fused interleave inverts it
+    ipl = shiftplan.interleave_plan(n, fields)
+    soa = routed[:n]
+    xi = np.pad(soa, (0, ipl.n - n)) if ipl.n > n else soa
+    back = np.asarray(shiftnet.apply_plan(jnp.asarray(xi), ipl))[:n]
+    np.testing.assert_array_equal(back, np.asarray(aos))
+
+
+def test_stride2_gather_prunes_layers():
+    """Acceptance: stride-2 gather over n=128 executes < log2(n) layers."""
+    plan = shiftplan.gather_plan(128, 2, 0, 64)
+    assert plan.total_layers == 7
+    assert plan.active_layers < 7, plan.active_layers
+    assert not plan.conflict
+
+
+def test_single_transaction_patterns_need_few_layers():
+    """Unit-stride windows route with ZERO active layers (identity);
+    offset-only windows need exactly the popcount of the offset."""
+    assert shiftplan.gather_plan(128, 1, 0, 128).active_layers == 0
+    p = shiftplan.gather_plan(128, 1, 4, 64)
+    assert p.active_layers == 1     # all elements shift by 4 = one bit
+    p = shiftplan.gather_plan(128, 1, 5, 64)
+    assert p.active_layers == 2     # shift 5 = bits 0 and 2
+
+
+def test_batched_plan_matches_per_transaction():
+    """The (T, mlen) batched LSDO plan equals the per-transaction loop."""
+    buf = jnp.arange(1024, dtype=jnp.float32) * 5 + 3
+    for base, stride, vl, mlen in [(0, 2, 64, 128), (7, 3, 40, 64),
+                                   (5, 16, 30, 128), (1, -4, 50, 64),
+                                   (3, 1, 100, 32)]:
+        plan = lsdo.plan_strided(base, stride, vl, mlen)
+        got = lsdo.load_strided(buf, plan)                  # batched
+        want = lsdo.load_strided(buf, plan, batched=False)  # loop oracle
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        vals = jnp.arange(1, vl + 1, dtype=jnp.float32)
+        sb = lsdo.store_strided(jnp.zeros(1024), vals, plan)
+        sl = lsdo.store_strided(jnp.zeros(1024), vals, plan, batched=False)
+        np.testing.assert_array_equal(np.asarray(sb), np.asarray(sl))
+
+
+def test_permutation_plan_random():
+    """Benes fallback routes arbitrary permutations conflict-free."""
+    rng = np.random.default_rng(0)
+    for n in (8, 32, 57, 128):
+        perm = rng.permutation(n)
+        plan = shiftplan.permutation_plan(tuple(int(x) for x in perm))
+        x = np.pad(np.arange(n), (0, plan.n - n))
+        out = shiftplan.apply_np(plan, x)
+        for src, dst in enumerate(perm):
+            assert out[dst] == src
+        assert plan.active_layers <= 2 * shiftplan.num_layers(plan.n) - 1
+
+
+def test_compiled_counts_plan_matches_dynamic_counts():
+    """Static host-side (shift, valid) through counts_plan == dynamic net."""
+    rng = np.random.default_rng(1)
+    n = 64
+    for _ in range(10):
+        k = int(rng.integers(1, n // 2))
+        targets = np.sort(rng.choice(n, size=k, replace=False))
+        # order-preserving, separation-non-increasing sources
+        sources = targets.copy()
+        slack = n - 1 - targets[-1]
+        sources = targets + rng.integers(0, slack + 1)
+        shift = np.zeros(n, np.int64)
+        valid = np.zeros(n, bool)
+        for s, t in zip(sources, targets):
+            shift[s] = s - t
+            valid[s] = True
+        plan = shiftplan.counts_plan(tuple(int(x) for x in shift),
+                                     tuple(bool(v) for v in valid),
+                                     gather=True)
+        dyn = shiftnet.gather_network(jnp.arange(n), jnp.asarray(shift),
+                                      jnp.asarray(valid))
+        assert plan.conflict == bool(dyn.conflict) == False  # noqa: E712
+        out = shiftplan.apply_np(plan, np.arange(n))
+        np.testing.assert_array_equal(
+            np.where(plan.valid, out, 0),
+            np.where(np.asarray(dyn.valid), np.asarray(dyn.payload), 0))
+
+
+def test_segment_strategy_cost_model():
+    """The segment compiler picks per-field compiled passes when they are
+    cheaper and the FUSED single-pass bulk transposition for wide segments;
+    either choice must cost no more wide ops than the seed's dynamic path
+    (fields passes x log2(n) layers x 3 shifted arrays each)."""
+    for fields, m in [(2, 128), (4, 128), (8, 128), (32, 8)]:
+        n = fields * m
+        mode, plans = shiftplan.segment_deinterleave_plans(n, fields)
+        cost = sum(p.wide_ops for p in plans)
+        seed_cost = fields * shiftplan.num_layers(n) * 3
+        assert cost < seed_cost, (fields, m, mode, cost, seed_cost)
+        # correctness of the chosen strategy via the host-side applier
+        x = np.arange(n)
+        if mode == "fused":
+            assert len(plans) == 1      # ONE pass handles all fields
+            plan = plans[0]
+            out = shiftplan.apply_np(plan, np.pad(x, (0, plan.n - n)))[:n]
+            np.testing.assert_array_equal(
+                out, x.reshape(m, fields).T.reshape(-1))
+        else:
+            for f, plan in enumerate(plans):
+                out = shiftplan.apply_np(plan, x)
+                np.testing.assert_array_equal(out[:m],
+                                              np.arange(m) * fields + f)
+    # wide segments fuse into a single O(log n) pass
+    mode, plans = shiftplan.segment_deinterleave_plans(256, 32)
+    assert mode == "fused" and len(plans) == 1
+    assert plans[0].active_layers <= 2 * shiftplan.num_layers(plans[0].n) - 1
+
+
+def test_lsdo_region_past_buffer_end():
+    """A transaction whose aligned region hangs past the buffer end must
+    still load/store the in-bounds strided elements exactly (per-lane
+    clipping; a start-clamped dynamic_slice would shift the window)."""
+    buf = jnp.arange(100, dtype=jnp.float32)
+    plan = lsdo.plan_strided(30, 3, 20, 64)   # elements 30..87, region 1
+    want = np.asarray([30 + 3 * i for i in range(20)], np.float32)
+    for batched in (True, False):
+        got = np.asarray(lsdo.load_strided(buf, plan, batched=batched))
+        np.testing.assert_array_equal(got, want, err_msg=f"{batched=}")
+        vals = jnp.arange(1, 21, dtype=jnp.float32)
+        out = np.asarray(lsdo.store_strided(jnp.zeros(100), vals, plan,
+                                            batched=batched))
+        np.testing.assert_array_equal(out[30:88:3], np.asarray(vals))
+        assert out.shape == (100,)

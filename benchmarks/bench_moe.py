@@ -11,13 +11,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks import common
 from benchmarks.common import emit, time_jit
 from repro.models.moe import MoESpec, init_moe, moe_ffn_local
 
 
 def run() -> None:
     d, E, k = 256, 16, 2
-    for T in (1024, 4096):
+    for T in (1024,) if common.QUICK else (1024, 4096):
         spec_e = MoESpec(n_experts=E, top_k=k, d_ff=512, dispatch="earth")
         spec_s = MoESpec(n_experts=E, top_k=k, d_ff=512, dispatch="sort")
         params = init_moe(jax.random.key(0), d, spec_e, jnp.float32)

@@ -1,0 +1,185 @@
+"""Whole-step access fusion suite — the step-level scheduler's scoreboard.
+
+Three measurements, all same-run (relative, XLA CPU):
+
+  * ``step/decode_*`` — a 4-layer decode step, FUSED (one hoisted segment
+    load splits every layer's KV cache, single-token reorganizations
+    inlined) vs PER-ACCESS (every layer launches its own kernels, the PR 1
+    path).  Also reports the jaxpr-level kernel-launch and mask-operand
+    counts (jax.make_jaxpr — no timing in the regression-gated numbers).
+  * ``step/pipeline`` — input pipeline with the pack+unpack segment round
+    trip elided by plan composition vs materializing the AoS buffer.
+  * ``step/bank_s{±k}`` — runtime-stride dispatch through the plan bank's
+    ``lax.switch`` (compiled constant masks) vs the dynamic-count Pallas
+    kernel (impl="pallas_dynamic"), per banked stride; negative strides
+    wrap the dynamic kernel in the Reverser (plan on |s|, flip output).
+  * ``step/lsdo_many`` — whole-step LSDO: several strided loads through ONE
+    multi-access (sum_T, mlen) plan vs one batched plan per access.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from benchmarks.common import emit, time_jit
+from repro.core import accessfuse, lsdo
+from repro.kernels import ops
+from repro.models import decode as dec
+from repro.models.transformer import ModelConfig, init_params
+
+
+def _decode_setup(layers: int, batch: int, seq: int, hd: int):
+    cfg = ModelConfig(
+        name=f"bench-step-L{layers}", d_model=2 * hd, n_layers=layers,
+        n_heads=2, n_kv_heads=2, d_ff=0, vocab=256, head_dim=hd,
+        mlp="none", scan_layers=False, kernel_impl="pallas", remat="none")
+    params = init_params(cfg, jax.random.key(0))
+    cache = dec.init_cache(cfg, batch, seq, jnp.float32)
+    tok = jnp.arange(batch, dtype=jnp.int32) % cfg.vocab
+    return cfg, params, cache, tok
+
+
+def _bench_decode() -> None:
+    layers, batch, seq, hd = 4, 4, 128, 64
+    cfg, params, cache, tok = _decode_setup(layers, batch, seq, hd)
+
+    def fused(p, c, t):
+        return dec.decode_step(p, c, t, cfg, None, fuse=True)
+
+    def per_access(p, c, t):
+        return dec.decode_step(p, c, t, cfg, None, fuse=False)
+
+    t_f = time_jit(fused, params, cache, tok)
+    t_p = time_jit(per_access, params, cache, tok)
+    # launch accounting under the TPU lowering decision (off-TPU the
+    # scheduler would inline the merged group on the XLA path)
+    with accessfuse.pinned_kernel_lowering():
+        lf, mf = accessfuse.jaxpr_access_counts(fused, params, cache, tok)
+    lp, mp = accessfuse.jaxpr_access_counts(per_access, params, cache, tok)
+    emit(f"step/decode_L{layers}", t_f,
+         f"per_access_us={t_p:.1f} speedup={t_p / max(t_f, 1e-9):.2f}x "
+         f"launches={lf}vs{lp} mask_ops={mf}vs{mp}",
+         per_access_us=round(t_p, 2),
+         speedup=round(t_p / max(t_f, 1e-9), 3),
+         launches_fused=lf, launches_per_access=lp,
+         mask_ops_fused=mf, mask_ops_per_access=mp)
+
+
+def _bench_pipeline() -> None:
+    from repro.data.pipeline import DataConfig, SyntheticAoSPipeline
+    iters = 11 if common.QUICK else 31
+    cfg = DataConfig(vocab=1000, seq_len=256 if common.QUICK else 1024,
+                     global_batch=8)
+
+    def median_wall(fused: bool) -> float:
+        pipe = SyntheticAoSPipeline(cfg)
+        times = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            batch = pipe.next_batch(fused=fused)
+            jax.block_until_ready(batch["tokens"])
+            times.append((time.perf_counter() - t0) * 1e6)
+        times.sort()
+        return times[len(times) // 2]
+
+    t_f = median_wall(True)
+    t_u = median_wall(False)
+    emit("step/pipeline", t_f,
+         f"unfused_us={t_u:.1f} speedup={t_u / max(t_f, 1e-9):.2f}x",
+         unfused_us=round(t_u, 2),
+         speedup=round(t_u / max(t_f, 1e-9), 3))
+
+
+def _median_us(fn, *args, iters: int = 15) -> float:
+    """Local fixed-iteration timer: the bank cells are small (~100us) and
+    the QUICK 5-iteration median is too noisy for a per-stride claim."""
+    f = jax.jit(fn)
+    jax.block_until_ready(f(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(f(*args))
+        times.append((time.perf_counter() - t0) * 1e6)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def _bench_bank() -> None:
+    n, vl, rows = 256, 16, 64
+    offset = n // 2
+    win = jnp.broadcast_to(jnp.arange(n, dtype=jnp.float32), (rows, n))
+    strides = ((1, 2, 4, -2) if common.QUICK
+               else tuple(range(1, 9)) + tuple(-s for s in range(1, 9)))
+
+    def bank_fn(w, s):
+        return accessfuse.bank_gather_strided(w, s, offset, vl)
+
+    for stride in strides:
+        t_bank = _median_us(bank_fn, win, jnp.int32(stride))
+        s = abs(stride)
+        base = offset + (vl - 1) * stride if stride < 0 else offset
+        if stride < 0:   # Reverser around the dynamic kernel
+            t_dyn = _median_us(
+                lambda w, b=base, ss=s: jnp.flip(ops.gather_strided(
+                    w, ss, b, vl, impl="pallas_dynamic"), -1), win)
+        else:
+            t_dyn = _median_us(
+                lambda w, b=base, ss=s: ops.gather_strided(
+                    w, ss, b, vl, impl="pallas_dynamic"), win)
+        emit(f"step/bank_s{stride}", t_bank,
+             f"dynamic_us={t_dyn:.1f} "
+             f"vs_dynamic={t_dyn / max(t_bank, 1e-9):.1f}x",
+             dynamic_us=round(t_dyn, 2),
+             vs_dynamic=round(t_dyn / max(t_bank, 1e-9), 3))
+
+
+def _bench_lsdo_many() -> None:
+    from repro.core import shiftplan
+    buf = jnp.arange(1 << 14, dtype=jnp.float32)
+    mlen = 128
+    specs = [(0, 2, 64), (7, 3, 40), (513, 4, 32), (1025, 1, 100),
+             (2048, 8, 16), (100, -4, 50)]
+    plans = [lsdo.plan_strided(b, s, v, mlen) for b, s, v in specs]
+
+    def fused(b):
+        return lsdo.load_strided_many(b, plans)
+
+    def per_access(b):
+        return [lsdo.load_strided(b, p) for p in plans]
+
+    # wide-op accounting (the TPU dispatch metric): ONE multi-access plan
+    # applies <= log2(mlen) union layers to the whole stack; per-access
+    # batched plans each re-apply their own layer chain
+    rows = []
+    wide_per = 0
+    for p in plans:
+        s = abs(p.stride) if p.stride != 0 else 1
+        offs = tuple(t.offset for t in p.transactions)
+        cnts = tuple(t.count for t in p.transactions)
+        wide_per += shiftplan.batched_gather_plan(mlen, s, offs,
+                                                 cnts).wide_ops
+        rows.extend((s, o, c) for o, c in zip(offs, cnts))
+    wide_fused = shiftplan.multi_gather_plan(mlen, tuple(rows)).wide_ops
+
+    t_f = _median_us(fused, buf)
+    t_p = _median_us(per_access, buf)
+    emit("step/lsdo_many", t_f,
+         f"per_access_us={t_p:.1f} speedup={t_p / max(t_f, 1e-9):.2f}x "
+         f"accesses={len(plans)} wide_ops={wide_fused}vs{wide_per}",
+         per_access_us=round(t_p, 2),
+         speedup=round(t_p / max(t_f, 1e-9), 3),
+         wide_ops_fused=wide_fused, wide_ops_per_access=wide_per)
+
+
+def run() -> None:
+    _bench_decode()
+    _bench_pipeline()
+    _bench_bank()
+    _bench_lsdo_many()
+
+
+if __name__ == "__main__":
+    run()

@@ -25,6 +25,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 BENCH_JSON = {
     "strided/": "BENCH_strided.json",
     "segment/": "BENCH_segment.json",
+    "moe/": "BENCH_moe.json",
+    "step/": "BENCH_step.json",
 }
 
 
@@ -47,21 +49,23 @@ def main() -> None:
     ap.add_argument("--out", default=os.path.dirname(os.path.abspath(
         __file__)), help="directory for BENCH_*.json artifacts")
     ap.add_argument("--suites", default="all",
-                    help="comma list: diverse,strided,segment,hw_cost,moe")
+                    help="comma list: diverse,strided,segment,hw_cost,"
+                         "moe,step")
     args = ap.parse_args()
 
     from benchmarks import common
     common.QUICK = args.quick
 
     from benchmarks import (bench_diverse, bench_hw_cost, bench_moe,
-                            bench_segment, bench_strided, roofline_table)
+                            bench_segment, bench_step, bench_strided,
+                            roofline_table)
     suites = {
         "diverse": bench_diverse, "strided": bench_strided,
         "segment": bench_segment, "hw_cost": bench_hw_cost,
-        "moe": bench_moe,
+        "moe": bench_moe, "step": bench_step,
     }
     if args.quick and args.suites == "all":
-        picked = ["strided", "segment"]
+        picked = ["strided", "segment", "moe", "step"]
     elif args.suites == "all":
         picked = list(suites)
     else:

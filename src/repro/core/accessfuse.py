@@ -1,0 +1,483 @@
+"""Whole-step access fusion — the step-level memory scheduler.
+
+PR 1's compiler (core/shiftplan.py) folds EARTH's DROM routing at trace
+time, but every ``gather/scatter/segment`` call still plans, uploads masks,
+and launches in isolation, and any *runtime* stride falls back to the slow
+dynamic-count network.  This module lifts the plan compiler from per-access
+to per-step (the TROOP observation: low-intensity vector workloads only
+reach the roofline when memory accesses are scheduled across operations):
+
+* :class:`StepScheduler` — collects every shift-routed access issued by one
+  decode/train step (multi-layer KV split, AoS pack/unpack, GLU field
+  splits, strided windows), merges same-shape plans into ONE stacked
+  ``(A, T, mlen)`` super-transaction with a single concatenated mask
+  operand: one kernel launch and one mask upload per step instead of one
+  per access.  Groups below :data:`MIN_FUSED_ELEMS` are inlined on the XLA
+  path instead — a scheduler does not issue a wide transaction for one
+  beat.
+* **runtime-stride plan bank** — a small precompiled set of plans for the
+  strides that actually occur (±1..8, the §3.2.2 Reverser for the negative
+  half; segment field counts 2/4 via :func:`warm`) dispatched with
+  ``lax.switch``, so runtime strides hit compiled constant masks instead of
+  the dynamic triple-shift network.  Out-of-bank strides take the dynamic
+  fallback branch (bit-exact, property-tested).
+* :func:`compact_indices` — the bank's runtime-count member (MoE
+  compaction): per-layer take-masks are derived ONCE from the prefix-sum
+  counts, the id payload pays one static shift + one select per layer, and
+  the dynamic network's conflict reductions are dropped (compaction is
+  GSN-safe by construction).
+* :func:`jaxpr_access_counts` — the launch/mask-upload accounting used by
+  the CI regression gate and benchmarks/bench_step.py (counted on the
+  jaxpr, no timing flakiness).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import functools
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import scg, shiftnet, shiftplan
+
+# Below this many elements a merged group is inlined on the XLA path
+# instead of paying a kernel launch (decode-time single-token beats).
+MIN_FUSED_ELEMS = 1 << 15
+
+# What the plan bank precompiles: the strides and segment field counts
+# that occur in this repo's models/data paths.
+BANK_STRIDES = tuple(range(1, 9))
+BANK_FIELDS = (2, 4)
+
+
+def pick_impl(total_elems: int, impl: str) -> str:
+    """Scheduler launch policy: tiny accesses ride the XLA path."""
+    if impl == "ref" or total_elems >= MIN_FUSED_ELEMS:
+        return impl
+    return "ref"
+
+
+_PIN_KERNEL_LOWERING = False
+
+
+def platform_impl(impl: str) -> str:
+    """Platform arm of the lowering policy: on TPU a merged group is ONE
+    Mosaic launch; off-TPU the interpret-mode kernels are a correctness
+    vehicle, not a dispatch win (grid steps lower to full-buffer copies),
+    so merged groups lower to the XLA path instead."""
+    if impl == "pallas" and not _PIN_KERNEL_LOWERING:
+        from repro.kernels import _common
+        if _common.interpret_mode():
+            return "ref"
+    return impl
+
+
+@contextlib.contextmanager
+def pinned_kernel_lowering():
+    """Accounting aid: pin merged groups to the kernel lowering (the TPU
+    decision) regardless of platform, so jaxpr launch/mask counts taken
+    off-TPU reflect the dispatch story (benchmarks, CI gate)."""
+    global _PIN_KERNEL_LOWERING
+    prev = _PIN_KERNEL_LOWERING
+    _PIN_KERNEL_LOWERING = True
+    try:
+        yield
+    finally:
+        _PIN_KERNEL_LOWERING = prev
+
+
+# ---------------------------------------------------------------------------
+# Step scheduler: merge same-shape accesses into one super-transaction
+# ---------------------------------------------------------------------------
+
+class Handle:
+    """Result slot filled by :meth:`StepScheduler.flush`."""
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = None
+
+
+@dataclasses.dataclass
+class _Req:
+    key: tuple
+    payload: Any
+    handle: Handle
+
+
+class StepScheduler:
+    """Collects a step's shift-routed accesses and executes them merged.
+
+    Same-key accesses (op kind x shape x dtype x static params) are stacked
+    along a new leading axis and routed by ONE kernel launch whose mask
+    operand is the single plan (shared) or the concatenation of the group's
+    plans (heterogeneous strided specs) — the whole-step analogue of
+    LSDO's batched (T, mlen) transaction block.
+
+    ``platform_policy=False`` pins merged groups to the requested impl
+    (used by the launch-accounting tests to exercise the kernel lowering
+    off-TPU); the default applies :func:`platform_impl`.
+    """
+
+    def __init__(self, impl: str = "ref", *, platform_policy: bool = True):
+        self.impl = impl
+        self.platform_policy = platform_policy
+        self._reqs: list[_Req] = []
+
+    def _impl_for(self, total_elems: int) -> str:
+        impl = pick_impl(total_elems, self.impl)
+        return platform_impl(impl) if self.platform_policy else impl
+
+    # -- access registration ------------------------------------------------
+    def deinterleave(self, aos: jax.Array, fields: int) -> Handle:
+        h = Handle()
+        self._reqs.append(_Req(("deint", fields, aos.shape, str(aos.dtype)),
+                               aos, h))
+        return h
+
+    def interleave(self, parts: Sequence[jax.Array]) -> Handle:
+        parts = list(parts)
+        h = Handle()
+        key = ("int", len(parts), parts[0].shape, str(parts[0].dtype))
+        self._reqs.append(_Req(key, parts, h))
+        return h
+
+    def gather_strided(self, window: jax.Array, stride: int, offset: int,
+                       vl: int) -> Handle:
+        h = Handle()
+        key = ("gather", window.shape, str(window.dtype), vl)
+        self._reqs.append(_Req(key, (window, int(stride), int(offset)), h))
+        return h
+
+    # -- execution ----------------------------------------------------------
+    def flush(self) -> None:
+        groups: dict[tuple, list[_Req]] = {}
+        for r in self._reqs:
+            groups.setdefault(r.key, []).append(r)
+        for key, reqs in groups.items():
+            self._run_group(key, reqs)
+        self._reqs = []
+
+    def _run_group(self, key: tuple, reqs: list[_Req]) -> None:
+        from repro.kernels import ops
+        kind = key[0]
+        if kind == "deint":
+            fields = key[1]
+            stack = (reqs[0].payload if len(reqs) == 1
+                     else jnp.stack([r.payload for r in reqs]))
+            impl = self._impl_for(stack.size)
+            outs = ops.deinterleave(stack, fields, impl=impl)
+            for a, r in enumerate(reqs):
+                r.handle.value = (list(outs) if len(reqs) == 1
+                                  else [o[a] for o in outs])
+        elif kind == "int":
+            nf = key[1]
+            if len(reqs) == 1:
+                fields = list(reqs[0].payload)
+            else:
+                fields = [jnp.stack([r.payload[f] for r in reqs])
+                          for f in range(nf)]
+            impl = self._impl_for(fields[0].size * nf)
+            out = ops.interleave(fields, impl=impl)
+            for a, r in enumerate(reqs):
+                r.handle.value = out if len(reqs) == 1 else out[a]
+        elif kind == "gather":
+            vl = key[3]
+            specs = [(r.payload[1], r.payload[2]) for r in reqs]
+            stack = (reqs[0].payload[0] if len(reqs) == 1
+                     else jnp.stack([r.payload[0] for r in reqs]))
+            impl = self._impl_for(stack.size)
+            if len(set(specs)) == 1:           # one shared plan
+                out = ops.gather_strided(stack, specs[0][0], specs[0][1],
+                                         vl, impl=impl)
+                for a, r in enumerate(reqs):
+                    r.handle.value = out if len(reqs) == 1 else out[a]
+            elif impl == "ref":
+                for r in reqs:
+                    w, s, o = r.payload
+                    r.handle.value = ops.gather_strided(w, s, o, vl,
+                                                        impl="ref")
+            else:                              # concatenated-mask kernel
+                from repro.kernels import strided as _strided
+                out = _strided.gather_strided_fused(
+                    stack, tuple(specs), vl,
+                    compiled=impl == "pallas")
+                for a, r in enumerate(reqs):
+                    r.handle.value = out[a]
+        else:  # pragma: no cover
+            raise ValueError(kind)
+
+
+# -- convenience wrappers (the shapes models actually issue) ----------------
+
+def fuse_deinterleave(arrays: Sequence[jax.Array], fields: int, *,
+                      impl: str = "ref",
+                      platform_policy: bool = True) -> list[list[jax.Array]]:
+    """One fused segment load for a whole step's same-shape AoS arrays."""
+    sched = StepScheduler(impl=impl, platform_policy=platform_policy)
+    hs = [sched.deinterleave(a, fields) for a in arrays]
+    sched.flush()
+    return [h.value for h in hs]
+
+
+def fuse_split_kv(kvs: Sequence[jax.Array], *, impl: str = "ref",
+                  platform_policy: bool = True
+                  ) -> list[tuple[jax.Array, jax.Array]]:
+    """All layers' (…, 2d) KV-cache splits in one launch (FIELD=2)."""
+    return [tuple(pair) for pair in
+            fuse_deinterleave(kvs, 2, impl=impl,
+                              platform_policy=platform_policy)]
+
+
+def fuse_interleave(groups: Sequence[Sequence[jax.Array]], *,
+                    impl: str = "ref") -> list[jax.Array]:
+    """One fused segment store for a step's same-shape SoA groups."""
+    sched = StepScheduler(impl=impl)
+    hs = [sched.interleave(g) for g in groups]
+    sched.flush()
+    return [h.value for h in hs]
+
+
+# ---------------------------------------------------------------------------
+# Runtime-stride plan bank (lax.switch over compiled plans)
+# ---------------------------------------------------------------------------
+
+def _flip(x: jax.Array) -> jax.Array:
+    return jnp.flip(x, axis=-1)
+
+
+@functools.lru_cache(maxsize=None)
+def _gather_bank(n: int, offset: int, vl: int):
+    """16 bank slots: strides 1..8, then -1..-8 (Reverser: plan on the
+    reversed element order — a positive-stride plan from the window's low
+    end, output reversed).  None marks a (stride, offset, vl) that does not
+    fit the window; its slot dispatches to the dynamic fallback."""
+    slots = []
+    for s in BANK_STRIDES:
+        ok = 0 <= offset and offset + (vl - 1) * s < n
+        slots.append(shiftplan.gather_plan(n, s, offset, vl) if ok else None)
+    for s in BANK_STRIDES:
+        base = offset - (vl - 1) * s
+        ok = base >= 0 and offset < n
+        slots.append(shiftplan.gather_plan(n, s, base, vl) if ok else None)
+    return tuple(slots)
+
+
+@functools.lru_cache(maxsize=None)
+def _scatter_bank(n: int, offset: int, vl: int):
+    slots = []
+    for s in BANK_STRIDES:
+        ok = 0 <= offset and offset + (vl - 1) * s < n
+        slots.append(shiftplan.scatter_plan(n, s, offset, vl) if ok else None)
+    for s in BANK_STRIDES:
+        base = offset - (vl - 1) * s
+        ok = base >= 0 and offset < n
+        slots.append(shiftplan.scatter_plan(n, s, base, vl) if ok else None)
+    return tuple(slots)
+
+
+def _bank_index(stride, lut: np.ndarray) -> jax.Array:
+    """stride -> switch branch index (banked slot or 16 = dynamic)."""
+    s = jnp.asarray(stride, jnp.int32)
+    raw = jnp.where((s >= 1) & (s <= BANK_STRIDES[-1]), s - 1,
+                    jnp.where((s <= -1) & (s >= -BANK_STRIDES[-1]),
+                              7 - s, 16))
+    return jnp.take(jnp.asarray(lut), raw)
+
+
+def _dynamic_gather(window: jax.Array, stride, offset: int,
+                    vl: int) -> jax.Array:
+    """Fully dynamic fallback: traced stride of either sign (Reverser by
+    output flip), the oracle the bank must match bit-exactly."""
+    n = window.shape[-1]
+    s = jnp.asarray(stride, jnp.int32)
+    s_abs = jnp.maximum(jnp.abs(s), 1)
+    base = jnp.where(s < 0, offset + (vl - 1) * s, offset)
+    shift, valid = scg.gather_counts(n, s_abs, base, vl)
+    res = shiftnet.gather_network(window, shift, valid, axis=-1)
+    dense = jax.lax.slice_in_dim(res.payload, 0, vl, axis=-1)
+    return jnp.where(s < 0, _flip(dense), dense)
+
+
+def bank_gather_strided(window: jax.Array, stride, offset: int,
+                        vl: int) -> jax.Array:
+    """out[..., i] = window[..., offset + i*stride]; stride may be TRACED.
+
+    Banked strides hit compiled constant-mask plans via one ``lax.switch``;
+    anything else (or a spec that does not fit the window) routes to the
+    dynamic-count network.  Static Python strides skip the dispatch.
+    """
+    n = window.shape[-1]
+    if isinstance(stride, (int, np.integer)):
+        stride = int(stride)
+        if stride == 0:
+            raise ValueError("stride 0 is a broadcast, not a strided access")
+        s, rev = abs(stride), stride < 0
+        base = offset + (vl - 1) * stride if rev else offset
+        plan = shiftplan.gather_plan(n, s, base, vl)
+        out = shiftnet.apply_plan(window, plan, axis=-1)
+        out = jax.lax.slice_in_dim(out, 0, vl, axis=-1)
+        return _flip(out) if rev else out
+
+    slots = _gather_bank(n, offset, vl)
+    lut = np.array([i if p is not None else 16
+                    for i, p in enumerate(slots)] + [16], np.int32)
+
+    def mk(plan, rev):
+        def br(w):
+            out = shiftnet.apply_plan(w, plan, axis=-1)
+            out = jax.lax.slice_in_dim(out, 0, vl, axis=-1)
+            return _flip(out) if rev else out
+        return br
+
+    def dead(w):
+        return jnp.zeros(w.shape[:-1] + (vl,), w.dtype)
+
+    branches = [mk(p, i >= len(BANK_STRIDES)) if p is not None else dead
+                for i, p in enumerate(slots)]
+    branches.append(lambda w: _dynamic_gather(w, stride, offset, vl))
+    return jax.lax.switch(_bank_index(stride, lut), branches, window)
+
+
+def _dynamic_scatter(window: jax.Array, values: jax.Array, stride,
+                     offset: int) -> jax.Array:
+    n = window.shape[-1]
+    vl = values.shape[-1]
+    s = jnp.asarray(stride, jnp.int32)
+    s_abs = jnp.maximum(jnp.abs(s), 1)
+    base = jnp.where(s < 0, offset + (vl - 1) * s, offset)
+    vals = jnp.where(s < 0, _flip(values), values)
+    pad = [(0, 0)] * (values.ndim - 1) + [(0, n - vl)]
+    shift, valid = scg.scatter_counts(n, s_abs, base, vl)
+    res = shiftnet.scatter_network(jnp.pad(vals, pad), shift, valid, axis=-1)
+    return jnp.where(res.valid, res.payload, window)
+
+
+def bank_scatter_strided(window: jax.Array, values: jax.Array, stride,
+                         offset: int) -> jax.Array:
+    """window[..., offset + i*stride] = values[..., i]; traced stride OK."""
+    n = window.shape[-1]
+    vl = values.shape[-1]
+    pad = [(0, 0)] * (values.ndim - 1) + [(0, n - vl)]
+    if isinstance(stride, (int, np.integer)):
+        stride = int(stride)
+        if stride == 0:
+            raise ValueError("stride 0 is a broadcast, not a strided access")
+        s, rev = abs(stride), stride < 0
+        base = offset + (vl - 1) * stride if rev else offset
+        plan = shiftplan.scatter_plan(n, s, base, vl)
+        vals = _flip(values) if rev else values
+        routed = shiftnet.apply_plan(jnp.pad(vals, pad), plan, axis=-1)
+        return jnp.where(shiftnet._broadcast_const(plan.valid, routed, -1),
+                         routed, window)
+
+    slots = _scatter_bank(n, offset, vl)
+    lut = np.array([i if p is not None else 16
+                    for i, p in enumerate(slots)] + [16], np.int32)
+
+    def mk(plan, rev):
+        def br(w, v):
+            vals = _flip(v) if rev else v
+            routed = shiftnet.apply_plan(jnp.pad(vals, pad), plan, axis=-1)
+            return jnp.where(
+                shiftnet._broadcast_const(plan.valid, routed, -1), routed, w)
+        return br
+
+    def dead(w, v):
+        return w
+
+    branches = [mk(p, i >= len(BANK_STRIDES)) if p is not None else dead
+                for i, p in enumerate(slots)]
+    branches.append(lambda w, v: _dynamic_scatter(w, v, stride, offset))
+    return jax.lax.switch(_bank_index(stride, lut), branches, window, values)
+
+
+def warm(n: int, *, offset: int = 0, vl: int | None = None,
+         strided: bool = True, fields: tuple = BANK_FIELDS) -> None:
+    """Precompile bank plans for a window width (one-time host cost, so
+    the first step never pays plan compilation).  ``strided=False`` skips
+    the ±stride gather/scatter slots — serving only consults the segment
+    plans (the KV FIELD=2 split), so the engine warms just those."""
+    if strided:
+        vl = vl if vl is not None else n // BANK_STRIDES[-1]
+        _gather_bank(n, offset, vl)
+        _scatter_bank(n, offset, vl)
+    for f in fields:
+        if n % f == 0:
+            shiftplan.segment_deinterleave_plans(n, f)
+            shiftplan.segment_interleave_plans(n, f)
+
+
+# ---------------------------------------------------------------------------
+# Runtime-count member of the bank: MoE compaction
+# ---------------------------------------------------------------------------
+
+def compact_indices(mask: jax.Array, cap: int) -> jax.Array:
+    """Pack the indices of set bits of ``mask`` (n,) to the front, first
+    ``cap`` kept.  Routing decisions are derived once from the prefix-sum
+    counts (shiftnet.layer_masks); the id payload then pays ONE static
+    shift + ONE select per layer — no triple-shift, no conflict reductions
+    (compaction is order-preserving and separation-non-increasing, hence
+    GSN-safe by construction)."""
+    n = mask.shape[0]
+    ids = jnp.arange(n, dtype=jnp.int32)
+    shift, valid = scg.compaction_counts(mask)
+    masks, _ = shiftnet.layer_masks(shift, valid, toward_zero=True,
+                                    lsb_first=True)
+    if masks.shape[0]:
+        ids = shiftnet.apply_layer_masks(ids, masks, axis=0,
+                                         toward_zero=True, lsb_first=True)
+    return jax.lax.slice(ids, (0,), (min(cap, n),))
+
+
+# ---------------------------------------------------------------------------
+# Launch / mask-upload accounting (jaxpr-level; no timing flakiness)
+# ---------------------------------------------------------------------------
+
+def _child_jaxprs(v) -> list:
+    if hasattr(v, "eqns"):                     # core.Jaxpr
+        return [v]
+    if hasattr(v, "jaxpr") and hasattr(v.jaxpr, "eqns"):   # ClosedJaxpr
+        return [v.jaxpr]
+    if isinstance(v, (list, tuple)):
+        out = []
+        for x in v:
+            out.extend(_child_jaxprs(x))
+        return out
+    return []
+
+
+def _count_jaxpr(jaxpr) -> tuple[int, int]:
+    launches = mask_ops = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            launches += 1
+            for v in eqn.invars:
+                aval = getattr(v, "aval", None)
+                if aval is not None and jnp.issubdtype(aval.dtype,
+                                                       jnp.integer):
+                    mask_ops += 1
+        for v in eqn.params.values():
+            for sub in _child_jaxprs(v):
+                l, m = _count_jaxpr(sub)
+                launches += l
+                mask_ops += m
+    return launches, mask_ops
+
+
+def jaxpr_access_counts(fn, *args) -> tuple[int, int]:
+    """(kernel_launches, mask_operands) of ``fn(*args)``.
+
+    Launches = pallas_call equations anywhere in the jaxpr (scan/cond/pjit
+    bodies included).  Mask operands = integer-dtype inputs feeding those
+    calls — the stacked take-mask / occupancy uploads (payloads in the
+    counted paths are floating point).
+
+    A fresh wrapper defeats the pjit trace cache (keyed on function
+    identity): counts must reflect the CURRENT lowering policy (e.g.
+    :func:`pinned_kernel_lowering`), not a previously cached trace."""
+    closed = jax.make_jaxpr(lambda *a: fn(*a))(*args)
+    return _count_jaxpr(closed.jaxpr)

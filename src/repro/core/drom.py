@@ -54,6 +54,38 @@ def interleave(soa: Sequence[jax.Array], *, impl: Impl | None = None) -> jax.Arr
     return ops.interleave(list(soa), impl=impl or default_impl())
 
 
+def gather_strided_rt(window: jax.Array, stride, offset: int, vl: int,
+                      *, impl: Impl | None = None) -> jax.Array:
+    """Runtime-stride gather via the plan bank (core/accessfuse.py):
+    traced strides ±1..8 hit compiled masks through ``lax.switch``."""
+    from repro.kernels import ops
+    return ops.gather_strided_rt(window, stride, offset, vl,
+                                 impl=impl or default_impl())
+
+
+def scatter_strided_rt(window: jax.Array, values: jax.Array, stride,
+                       offset: int, *, impl: Impl | None = None) -> jax.Array:
+    from repro.kernels import ops
+    return ops.scatter_strided_rt(window, values, stride, offset,
+                                  impl=impl or default_impl())
+
+
+def deinterleave_many(aos_list: Sequence[jax.Array], fields: int, *,
+                      impl: Impl | None = None) -> list[list[jax.Array]]:
+    """Step-fused segment load: A same-shape AoS arrays, ONE launch."""
+    from repro.kernels import ops
+    return ops.deinterleave_many(list(aos_list), fields,
+                                 impl=impl or default_impl())
+
+
+def interleave_many(groups: Sequence[Sequence[jax.Array]], *,
+                    impl: Impl | None = None) -> list[jax.Array]:
+    """Step-fused segment store: A same-shape SoA groups, ONE launch."""
+    from repro.kernels import ops
+    return ops.interleave_many([list(g) for g in groups],
+                               impl=impl or default_impl())
+
+
 def compact_rows(rows: jax.Array, mask: jax.Array, *,
                  impl: Impl | None = None) -> tuple[jax.Array, jax.Array]:
     """Pack masked (n, d) rows to the front, order preserved.

@@ -122,6 +122,48 @@ def load_strided(buffer: jax.Array, plan: AccessPlan, *,
     return out
 
 
+def load_strided_many(buffer: jax.Array,
+                      plans: Sequence[AccessPlan]) -> list[jax.Array]:
+    """Whole-step LSDO fusion: ALL transactions of several same-mlen
+    accesses stacked into one (sum_T, mlen) block, routed by ONE
+    multi-access plan (core/shiftplan.multi_gather_plan) with a single
+    constant mask operand — one gather, one network application, one
+    reassembly per step instead of one per access.
+
+    Returns one dense (vl,) output per plan (Reverser applied per access).
+    """
+    plans = list(plans)
+    live = [p for p in plans if p.vl > 0]
+    if not live:
+        return [jnp.zeros((0,), buffer.dtype) for _ in plans]
+    mlen = live[0].mlen
+    assert all(p.mlen == mlen for p in live), "fusion needs one mlen"
+    rows: list[tuple[int, int, int]] = []
+    row_starts: list[int] = []
+    for p in live:
+        s = abs(p.stride) if p.stride != 0 else 1
+        starts, offsets, counts, _ = _tx_meta(p)
+        rows.extend((s, o, c) for o, c in zip(offsets, counts))
+        row_starts.extend(int(x) for x in starts)
+    mplan = shiftplan.multi_gather_plan(mlen, tuple(rows))
+    idx = np.asarray(row_starts)[:, None] + np.arange(mlen)[None, :]
+    block = jnp.take(buffer, jnp.asarray(np.minimum(idx, buffer.shape[0] - 1)))
+    routed = shiftnet.apply_plan(block, mplan, axis=-1).reshape(-1)
+    outs: list[jax.Array] = []
+    row0 = 0
+    for p in plans:
+        if p.vl <= 0:
+            outs.append(jnp.zeros((0,), buffer.dtype))
+            continue
+        counts = [tx.count for tx in p.transactions]
+        flat_idx = np.concatenate([(row0 + t) * mlen + np.arange(c)
+                                   for t, c in enumerate(counts)])
+        out = jnp.take(routed, jnp.asarray(flat_idx))
+        outs.append(out[::-1] if p.reversed else out)
+        row0 += len(counts)
+    return outs
+
+
 def _region_lanes(buffer: jax.Array, start: int, mlen: int) -> jax.Array:
     """Read one aligned region with per-lane clipping: a region whose tail
     hangs past the buffer end must NOT be start-clamped (dynamic_slice

@@ -201,19 +201,20 @@ def counts_plan(shift: tuple, valid: tuple, *, gather: bool) -> ShiftPlan:
 # Batched transaction plans (LSDO: route all coalesced requests in one call)
 # ---------------------------------------------------------------------------
 
-def _batched_plan(count_fn, n: int, stride: int,
-                  offsets: tuple, counts: tuple, *, kind: str,
+def _batched_plan(count_fn, n: int, rows: tuple, *, kind: str,
                   toward_zero: bool, lsb_first: bool) -> ShiftPlan:
     """One plan routing a stacked (T, n) block: row t carries transaction
-    t's window.  Layer masks are (T, n) constants; a layer survives pruning
-    if ANY row moves an element in it, so depth is the union of the
-    per-transaction active sets (still <= log2(n))."""
-    T = len(offsets)
+    t's window, described by a (stride, offset, count) triple — rows may
+    come from DIFFERENT accesses (the whole-step super-transaction).  Layer
+    masks are (T, n) constants; a layer survives pruning if ANY row moves
+    an element in it, so depth is the union of the per-row active sets
+    (still <= log2(n))."""
+    T = len(rows)
     per_bit: dict[int, list[np.ndarray]] = {}
     valid = np.zeros((T, n), bool)
     source = np.full((T, n), -1)
     conflict = False
-    for t, (off, cnt) in enumerate(zip(offsets, counts)):
+    for t, (stride, off, cnt) in enumerate(rows):
         shift_t, valid_t = count_fn(n, stride, off, cnt)
         masks, v, s, c = _simulate_route(shift_t, valid_t,
                                          toward_zero=toward_zero,
@@ -237,14 +238,33 @@ def _batched_plan(count_fn, n: int, stride: int,
 @functools.lru_cache(maxsize=None)
 def batched_gather_plan(n: int, stride: int, offsets: tuple,
                         counts: tuple) -> ShiftPlan:
-    return _batched_plan(gather_counts_np, n, stride, offsets, counts,
+    rows = tuple((stride, o, c) for o, c in zip(offsets, counts))
+    return _batched_plan(gather_counts_np, n, rows,
                          kind="gather", toward_zero=True, lsb_first=True)
 
 
 @functools.lru_cache(maxsize=None)
 def batched_scatter_plan(n: int, stride: int, offsets: tuple,
                          counts: tuple) -> ShiftPlan:
-    return _batched_plan(scatter_counts_np, n, stride, offsets, counts,
+    rows = tuple((stride, o, c) for o, c in zip(offsets, counts))
+    return _batched_plan(scatter_counts_np, n, rows,
+                         kind="scatter", toward_zero=False, lsb_first=False)
+
+
+@functools.lru_cache(maxsize=None)
+def multi_gather_plan(n: int, rows: tuple) -> ShiftPlan:
+    """Whole-step super-transaction plan: one (T, n) batched plan whose rows
+    are the concatenated transactions of SEVERAL accesses — each row its
+    own (stride, offset, count).  One network application and one mask
+    operand cover every strided load a step issues at this mlen."""
+    return _batched_plan(gather_counts_np, n, rows,
+                         kind="gather", toward_zero=True, lsb_first=True)
+
+
+@functools.lru_cache(maxsize=None)
+def multi_scatter_plan(n: int, rows: tuple) -> ShiftPlan:
+    """Scatter twin of :func:`multi_gather_plan`."""
+    return _batched_plan(scatter_counts_np, n, rows,
                          kind="scatter", toward_zero=False, lsb_first=False)
 
 

@@ -35,3 +35,21 @@ def unpack_records(aos: jax.Array, *, impl: str = "ref") -> dict:
         "loss_weight": wq.astype(jnp.float32) / WEIGHT_SCALE,
         "doc_id": doc_ids,
     }
+
+
+def pack_unpack_fused(tokens: jax.Array, labels: jax.Array,
+                      weights: jax.Array, doc_ids: jax.Array) -> dict:
+    """``unpack_records(pack_records(...))`` with the segment round trip
+    ELIDED by the step scheduler's plan-composition rule:
+    ``interleave_plan(n, 4)`` followed by ``deinterleave_plan(n, 4)`` is the
+    identity permutation (property-tested in tests/test_step_fusion.py), so
+    when one step issues both, neither network pass is launched — only the
+    field dtype conversions of the round trip remain (bit-exact with the
+    unfused path, including the loss-weight quantization)."""
+    wq = jnp.round(weights * WEIGHT_SCALE).astype(jnp.int32)
+    return {
+        "tokens": tokens.astype(jnp.int32),
+        "labels": labels.astype(jnp.int32),
+        "loss_weight": wq.astype(jnp.float32) / WEIGHT_SCALE,
+        "doc_id": doc_ids.astype(jnp.int32),
+    }

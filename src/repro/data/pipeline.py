@@ -55,8 +55,8 @@ class SyntheticAoSPipeline:
     def host_batch(self) -> int:
         return self.cfg.global_batch // self.process_count
 
-    def _global_batch_np(self, step: int) -> np.ndarray:
-        """The full deterministic AoS global batch for ``step`` (numpy)."""
+    def _global_fields_np(self, step: int):
+        """Deterministic SoA fields for ``step`` (numpy host arrays)."""
         cfg = self.cfg
         rng = np.random.default_rng((self.state.seed << 20) + step)
         toks = rng.integers(0, cfg.vocab, (cfg.global_batch, cfg.seq_len),
@@ -65,6 +65,11 @@ class SyntheticAoSPipeline:
         weights = np.ones((cfg.global_batch, cfg.seq_len), np.float32)
         weights[:, -1] = 0.0  # no loss on the rolled-around label
         docs = np.full((cfg.global_batch, cfg.seq_len), step, np.int32)
+        return toks, labels, weights, docs
+
+    def _global_batch_np(self, step: int) -> np.ndarray:
+        """The full deterministic AoS global batch for ``step`` (numpy)."""
+        toks, labels, weights, docs = self._global_fields_np(step)
         buf = aos.pack_records(jnp.asarray(toks), jnp.asarray(labels),
                                jnp.asarray(weights), jnp.asarray(docs))
         return np.asarray(buf)
@@ -77,10 +82,29 @@ class SyntheticAoSPipeline:
         self.state.step += 1
         return shard
 
-    def next_batch(self) -> dict:
-        """SoA batch dict for this host (segment load on device)."""
-        shard = jnp.asarray(self.next_host_aos())
-        batch = aos.unpack_records(shard)
+    def next_batch(self, *, fused: bool = True) -> dict:
+        """SoA batch dict for this host; advances state.
+
+        ``fused=True`` routes through the step scheduler's pack+unpack
+        elision (data/aos.pack_unpack_fused): the producer-side segment
+        store and the consumer-side segment load of the SAME step cancel
+        (inverse permutation plans), skipping the AoS materialization
+        entirely.  Bit-exact with ``fused=False`` (the AoS interface,
+        unchanged, still backs `next_host_aos` for checkpoint/restore
+        determinism) — property-tested in tests/test_step_fusion.py.
+        """
+        if not fused:
+            shard = jnp.asarray(self.next_host_aos())
+            batch = aos.unpack_records(shard)
+            batch.pop("doc_id")
+            return batch
+        toks, labels, weights, docs = self._global_fields_np(self.state.step)
+        lo = self.process_index * self.host_batch
+        hi = lo + self.host_batch
+        self.state.step += 1
+        batch = aos.pack_unpack_fused(
+            jnp.asarray(toks[lo:hi]), jnp.asarray(labels[lo:hi]),
+            jnp.asarray(weights[lo:hi]), jnp.asarray(docs[lo:hi]))
         batch.pop("doc_id")
         return batch
 

@@ -52,6 +52,55 @@ def row_grid(rows: int, tile: int = ROW_TILE) -> int:
     return rows // tile
 
 
+def row_tile(rows: int, cap: int = 256) -> int:
+    """Largest power-of-two multiple of ROW_TILE dividing ``rows``, capped.
+
+    Whole-step fused super-transactions stack many accesses into one tall
+    block; with a fixed 8-row tile the grid step count grows with the
+    stack and both interpret-mode grid iteration and TPU grid dispatch
+    scale with it.  A (cap, n) block stays far inside VMEM."""
+    t = ROW_TILE
+    while rows % (t * 2) == 0 and t * 2 <= cap:
+        t *= 2
+    return t
+
+
+def tile_rows(x: jax.Array, cap: int = 256) -> tuple[jax.Array, int, int]:
+    """Pad axis 0 and pick the row tile: (padded, original_rows, tile).
+
+    On TPU: pad to ROW_TILE and tile up to ``cap`` rows (fewer grid
+    dispatches, still pipelined).  Off-TPU (interpret mode) a grid step
+    costs a full-buffer copy regardless of block height, so the whole
+    padded block becomes ONE grid step (tile = rows padded to a power of
+    two — at most 2x routing work, instead of rows/8 buffer copies)."""
+    r = x.shape[0]
+    if interpret_mode():
+        tile = max(ROW_TILE, 1 << max(r - 1, 1).bit_length())
+        pad = tile - r
+        if pad:
+            x = jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1))
+        return x, r, tile
+    x, r = pad_rows(x)
+    return x, r, row_tile(x.shape[0], cap)
+
+
+def stack_plan_masks(plans) -> tuple:
+    """Concat several plans' mask rows into ONE (S, n) int32 operand plus
+    per-plan row spans — the single concatenated mask upload of a fused
+    super-transaction (used by segment and multi-access strided kernels)."""
+    import numpy as np
+
+    from repro.core import shiftnet
+    rows, spans = [], []
+    for p in plans:
+        r = shiftnet.plan_mask_stack(p)
+        spans.append((len(rows), len(rows) + r.shape[0]))
+        rows.extend(r)
+    if not rows:
+        return np.zeros((1, plans[0].n), np.int32), spans
+    return np.stack(rows).astype(np.int32), spans
+
+
 def plan_operands(plan):
     """(masks, valid, S) kernel operands for a compiled ShiftPlan.
 

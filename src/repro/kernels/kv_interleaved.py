@@ -32,6 +32,16 @@ def split_kv(kv: jax.Array, *, impl: str = "ref") -> tuple[jax.Array, jax.Array]
     return _ref.kv_split(kv)
 
 
+def split_kv_step(kvs: list[jax.Array], *, impl: str = "ref"
+                  ) -> list[tuple[jax.Array, jax.Array]]:
+    """Whole-step KV split: EVERY layer's (…, 2d) cache in one fused
+    FIELD=2 segment load — one kernel launch and one mask upload per decode
+    step instead of one per layer (core/accessfuse.py groups same-shape
+    caches; mixed window sizes form one group per shape)."""
+    from repro.core import accessfuse
+    return accessfuse.fuse_split_kv(kvs, impl=impl)
+
+
 def append_token(cache: jax.Array, k: jax.Array, v: jax.Array, pos,
                  *, impl: str = "ref") -> jax.Array:
     """Write one token's interleaved KV beat at position ``pos``.

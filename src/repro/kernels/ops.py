@@ -51,6 +51,69 @@ def scatter_strided(window: jax.Array, values: jax.Array, stride: int,
                                     compiled=impl == "pallas")
 
 
+def gather_strided_rt(window: jax.Array, stride, offset: int, vl: int,
+                      *, impl: str = "ref") -> jax.Array:
+    """Runtime-stride gather: static Python strides take the normal impl
+    dispatch; TRACED strides dispatch through the plan bank's ``lax.switch``
+    (core/accessfuse.py) — compiled constant masks for banked strides
+    (±1..8), dynamic-count network otherwise.  Either sign engages the
+    Reverser."""
+    import numpy as _np
+    if isinstance(stride, (int, _np.integer)) and int(stride) > 0:
+        return gather_strided(window, int(stride), offset, vl, impl=impl)
+    from repro.core import accessfuse
+    return accessfuse.bank_gather_strided(window, stride, offset, vl)
+
+
+def scatter_strided_rt(window: jax.Array, values: jax.Array, stride,
+                       offset: int, *, impl: str = "ref") -> jax.Array:
+    """Runtime-stride scatter twin of :func:`gather_strided_rt`."""
+    import numpy as _np
+    if isinstance(stride, (int, _np.integer)) and int(stride) > 0:
+        return scatter_strided(window, values, int(stride), offset,
+                               impl=impl)
+    from repro.core import accessfuse
+    return accessfuse.bank_scatter_strided(window, values, stride, offset)
+
+
+def gather_strided_many(windows: jax.Array, specs, vl: int,
+                        *, impl: str = "ref") -> jax.Array:
+    """A same-shape gathers with per-access (stride, offset) specs in ONE
+    launch with one concatenated mask operand.  windows: (A, ..., n)."""
+    _check_impl(impl)
+    if impl == "ref":
+        import jax.numpy as jnp
+        return jnp.stack([_ref.gather_strided(windows[a], s, o, vl)
+                          for a, (s, o) in enumerate(specs)])
+    from repro.kernels import strided as _strided
+    return _strided.gather_strided_fused(windows, tuple(specs), vl,
+                                         compiled=impl == "pallas")
+
+
+def deinterleave_many(aos_list: Sequence[jax.Array], fields: int, *,
+                      impl: str = "ref") -> list[list[jax.Array]]:
+    """A same-shape segment loads in ONE launch (stacked leading axis)."""
+    _check_impl(impl)
+    if impl != "ref":
+        from repro.kernels import segment as _segment
+        return _segment.deinterleave_many(list(aos_list), fields,
+                                          fused=impl == "pallas")
+    import jax.numpy as jnp
+    outs = deinterleave(jnp.stack(list(aos_list)), fields, impl="ref")
+    return [[o[a] for o in outs] for a in range(len(aos_list))]
+
+
+def interleave_many(groups: Sequence[Sequence[jax.Array]], *,
+                    impl: str = "ref") -> list[jax.Array]:
+    """A same-shape segment stores in ONE launch (stacked leading axis)."""
+    _check_impl(impl)
+    import jax.numpy as jnp
+    nf = len(groups[0])
+    stacked = [jnp.stack([g[f] for g in groups]) for f in range(nf)]
+    out = interleave(stacked, impl=impl)
+    return [out[a] for a in range(len(groups))]
+
+
 def deinterleave(aos: jax.Array, fields: int, *, impl: str = "ref"
                  ) -> list[jax.Array]:
     _check_impl(impl)

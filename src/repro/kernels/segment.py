@@ -29,16 +29,8 @@ from repro.core import scg, shiftnet, shiftplan
 from repro.kernels import _common
 
 
-def _stack_masks(plans) -> tuple[np.ndarray, tuple[tuple[int, int], ...]]:
-    """Concat all plans' mask rows into one (S, n) operand + row spans."""
-    rows, spans = [], []
-    for p in plans:
-        r = shiftnet.plan_mask_stack(p)
-        spans.append((len(rows), len(rows) + r.shape[0]))
-        rows.extend(r)
-    if not rows:
-        return np.zeros((1, plans[0].n), np.int32), spans
-    return np.stack(rows).astype(np.int32), spans
+# One concatenated (S, n) mask operand for several plans (shared helper).
+_stack_masks = _common.stack_plan_masks
 
 
 # ---------------------------------------------------------------------------
@@ -116,9 +108,8 @@ def deinterleave(aos: jax.Array, fields: int, *,
     assert n % fields == 0
     m = n // fields
     flat, lead = _common.flatten_rows(aos)
-    flat, r0 = _common.pad_rows(flat)
-    rt = _common.ROW_TILE
-    grid = (_common.row_grid(flat.shape[0]),)
+    flat, r0, rt = _common.tile_rows(flat)
+    grid = (_common.row_grid(flat.shape[0], rt),)
     out_shape = tuple(jax.ShapeDtypeStruct((flat.shape[0], m), aos.dtype)
                       for _ in range(fields))
     out_specs = tuple(pl.BlockSpec((rt, m), lambda i: (i, 0))
@@ -145,6 +136,17 @@ def deinterleave(aos: jax.Array, fields: int, *,
             out_specs=out_specs,
         )(flat)
     return [o[:r0].reshape(lead + (m,)) for o in outs]
+
+
+def deinterleave_many(aos_list: list[jax.Array], fields: int, *,
+                      fused: bool = True) -> list[list[jax.Array]]:
+    """Step-fused segment load: A same-shape AoS arrays in ONE launch.
+
+    The stack rides through :func:`deinterleave` as a new leading dim, so
+    the whole group shares one kernel launch and one mask upload (the
+    whole-step analogue of the batched LSDO transaction block)."""
+    outs = deinterleave(jnp.stack(aos_list), fields, fused=fused)
+    return [[o[a] for o in outs] for a in range(len(aos_list))]
 
 
 # ---------------------------------------------------------------------------
@@ -179,13 +181,12 @@ def interleave(soa: list[jax.Array], *, fused: bool = True) -> jax.Array:
     m = soa[0].shape[-1]
     n = m * fields
     flats = []
-    r0 = lead = None
+    r0 = lead = rt = None
     for t in soa:
         f, lead = _common.flatten_rows(t)
-        f, r0 = _common.pad_rows(f)
+        f, r0, rt = _common.tile_rows(f)
         flats.append(f)
-    rt = _common.ROW_TILE
-    grid = (_common.row_grid(flats[0].shape[0]),)
+    grid = (_common.row_grid(flats[0].shape[0], rt),)
     out_shape = jax.ShapeDtypeStruct((flats[0].shape[0], n), soa[0].dtype)
     f_specs = [pl.BlockSpec((rt, m), lambda i: (i, 0))
                for _ in range(fields)]

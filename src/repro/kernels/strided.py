@@ -44,10 +44,9 @@ def gather_strided(window: jax.Array, stride: int, offset: int, vl: int,
     n = window.shape[-1]
     assert offset + (vl - 1) * stride < n
     flat, lead = _common.flatten_rows(window)
-    flat, r0 = _common.pad_rows(flat)
-    rt = _common.ROW_TILE
+    flat, r0, rt = _common.tile_rows(flat)
     out_shape = jax.ShapeDtypeStruct((flat.shape[0], vl), window.dtype)
-    grid = (_common.row_grid(flat.shape[0]),)
+    grid = (_common.row_grid(flat.shape[0], rt),)
     if compiled:
         plan = shiftplan.gather_plan(n, stride, offset, vl)
         masks, _, S = _common.plan_operands(plan)
@@ -69,6 +68,65 @@ def gather_strided(window: jax.Array, stride: int, offset: int, vl: int,
             out_specs=pl.BlockSpec((rt, vl), lambda i: (i, 0)),
         )(flat)
     return out[:r0].reshape(lead + (vl,))
+
+
+def _gather_fused_kernel(masks_ref, x_ref, o_ref, *, plans, spans, vl: int):
+    x = x_ref[...]                        # (A, rt, n) super-transaction tile
+    masks = masks_ref[...] != 0
+    for a, plan in enumerate(plans):
+        lo, hi = spans[a]
+        routed = shiftnet.apply_plan_operand(x[a], masks[lo:hi], plan,
+                                             axis=-1)
+        o_ref[a, ...] = jax.lax.slice(routed, (0, 0), (x.shape[1], vl))
+
+
+def gather_strided_fused(windows: jax.Array, specs, vl: int, *,
+                         compiled: bool = True) -> jax.Array:
+    """Whole-step fused gather: A same-shape windows, possibly DIFFERENT
+    (stride, offset) specs, routed in ONE kernel launch whose mask operand
+    is the concatenation of every access's compiled plan.  Rows are tiled
+    like every other kernel (one grid step off-TPU; VMEM-capped tiles on
+    TPU, with the cap shared across the A stacked accesses).
+
+    windows: (A, ..., n); specs: A pairs (stride, offset).
+    Returns (A, ..., vl).
+    """
+    A = windows.shape[0]
+    assert A == len(specs)
+    n = windows.shape[-1]
+    lead = windows.shape[1:-1]
+    R = 1
+    for d in lead:
+        R *= d
+    flat = windows.reshape(A, R, n)
+    if not compiled:
+        outs = [gather_strided(flat[a], s, o, vl, compiled=False)
+                for a, (s, o) in enumerate(specs)]
+        return jnp.stack(outs).reshape((A,) + lead + (vl,))
+    plans = tuple(shiftplan.gather_plan(n, s, o, vl) for s, o in specs)
+    masks, spans = _common.stack_plan_masks(plans)
+    S, W = masks.shape
+    # tile rows within each access; the A axis stays whole per tile, so
+    # the per-tile VMEM budget is divided across the stacked accesses
+    if _common.interpret_mode():
+        rt = max(_common.ROW_TILE, 1 << max(R - 1, 1).bit_length())
+    else:
+        rt = _common.row_tile(R + (-R) % _common.ROW_TILE,
+                              cap=max(_common.ROW_TILE, 256 // A))
+    pad = (-R) % rt
+    if pad:
+        flat = jnp.pad(flat, ((0, 0), (0, pad), (0, 0)))
+    Rp = flat.shape[1]
+    out = _common.call(
+        functools.partial(_gather_fused_kernel, plans=plans, spans=spans,
+                          vl=vl),
+        out_shape=jax.ShapeDtypeStruct((A, Rp, vl), windows.dtype),
+        grid=(_common.row_grid(Rp, rt),),
+        in_specs=[pl.BlockSpec((S, W), lambda i: (0, 0)),
+                  pl.BlockSpec((A, rt, n), lambda i: (0, i, 0)),],
+        out_specs=pl.BlockSpec((A, rt, vl), lambda i: (0, i, 0)),
+    )(jnp.asarray(masks), flat)
+    return out[:, :R].reshape((A,) + lead + (vl,))
 
 
 def _scatter_plan_kernel(masks_ref, valid_ref, vals_ref, win_ref, o_ref, *,
@@ -104,10 +162,9 @@ def scatter_strided(window: jax.Array, values: jax.Array, stride: int,
     assert offset + (vl - 1) * stride < n
     fw, lead = _common.flatten_rows(window)
     fv, _ = _common.flatten_rows(values)
-    fw, r0 = _common.pad_rows(fw)
-    fv, _ = _common.pad_rows(fv)
-    rt = _common.ROW_TILE
-    grid = (_common.row_grid(fw.shape[0]),)
+    fw, r0, rt = _common.tile_rows(fw)
+    fv, _ = _common.pad_rows(fv, rt)
+    grid = (_common.row_grid(fw.shape[0], rt),)
     if compiled:
         plan = shiftplan.scatter_plan(n, stride, offset, vl)
         masks, valid, S = _common.plan_operands(plan)

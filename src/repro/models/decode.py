@@ -16,7 +16,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.core import drom
+from repro.core import accessfuse, drom
+from repro.kernels import kv_interleaved
 from repro.models import attention, layers
 from repro.models.ssm import init_mamba_cache, mamba_decode_step
 from repro.models.transformer import ModelConfig, _ffn_apply
@@ -74,34 +75,72 @@ def cache_from_prefill(cfg: ModelConfig, cache_states, seq_len: int,
 
 
 def decode_step(params, cache: dict, token: jax.Array, cfg: ModelConfig,
-                ctx) -> tuple[jax.Array, dict]:
-    """token: (B,) int32. Returns (logits (B, V), updated cache)."""
+                ctx, *, fuse: bool | None = None) -> tuple[jax.Array, dict]:
+    """token: (B,) int32. Returns (logits (B, V), updated cache).
+
+    ``fuse`` (default cfg.step_fusion) enables whole-step access fusion:
+    the attention-time cache splits of EVERY layer — the step's dominant
+    shift-routed traffic — are hoisted to the top of the step (they read
+    the pre-append cache, which depends on nothing computed this step) and
+    merged into ONE fused FIELD=2 segment load: one kernel launch and one
+    mask operand per decode step instead of one per layer.  The current
+    token's (k, v) is then written into the pre-split arrays at its slot
+    (two one-beat updates), which is bit-exact with splitting the
+    post-append cache because the segment op is a pure lane permutation.
+    Single-token reorganizations (QKV beat pack/split, GLU field split)
+    are inlined on the XLA path by the scheduler's launch policy.
+    ``fuse=False`` keeps the per-access path (the equivalence oracle).
+    """
     from repro.models.transformer import cast_params
     params = cast_params(params, cfg)
     if cfg.encoder is not None:
         from repro.models import encdec
         return encdec.decode_step(params, cache, token, cfg, ctx)
+    fuse = cfg.step_fusion if fuse is None else fuse
     B = token.shape[0]
     pos = cache["len"]
     x = layers.embed(token, params["embed"]).astype(cfg.cdtype)
 
+    attn_pos = [i for i, k in enumerate(cfg.block_pattern) if k == "attn"]
+    pre_split: dict[str, Any] = {}
+    if fuse and attn_pos:
+        # One fused split for all layers: leaves are stacked over
+        # superblocks ((NS, B, Sc, K, 2D)), so this single call covers the
+        # full depth; same-shape positions share one launch.
+        leaves = [cache["blocks"][f"pos{i}"] for i in attn_pos]
+        splits = kv_interleaved.split_kv_step(leaves, impl=cfg.kernel_impl)
+        pre_split = {f"pos{i}": splits[j] for j, i in enumerate(attn_pos)}
+    beat_impl = (accessfuse.pick_impl(B * cfg.n_kv_heads * 2 * cfg.hd,
+                                      cfg.kernel_impl)
+                 if fuse else cfg.kernel_impl)
+    ffn_impl = (accessfuse.pick_impl(B * 2 * cfg.d_ff, cfg.kernel_impl)
+                if fuse else cfg.kernel_impl)
+
     def sb_step(x, inp):
-        sb_p, sb_c = inp
+        sb_p, sb_c, sb_pre = inp
         new_c = {}
         for i, kind in enumerate(cfg.block_pattern):
             p = sb_p[f"pos{i}"]
             if kind == "attn":
                 h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
                 positions = jnp.broadcast_to(pos, (B, 1))
-                q, _, _, kv = attention.qkv_project(
+                q, k, v, kv = attention.qkv_project(
                     p["attn"], h[:, None], cfg.n_heads, cfg.n_kv_heads,
-                    cfg.hd, positions, cfg.rope_theta, impl=cfg.kernel_impl)
+                    cfg.hd, positions, cfg.rope_theta, impl=beat_impl)
                 kvc = sb_c[f"pos{i}"]                      # (B, Sc, K, 2D)
                 sc = kvc.shape[1]
                 slot = jax.lax.rem(pos, sc)
                 kvc = jax.lax.dynamic_update_slice_in_dim(
                     kvc, kv.astype(kvc.dtype), slot, axis=1)
-                k_all, v_all = drom.deinterleave(kvc, 2, impl="ref")
+                if fuse:
+                    k_pre, v_pre = sb_pre[f"pos{i}"]
+                    k_all = jax.lax.dynamic_update_slice_in_dim(
+                        k_pre, k.astype(kvc.dtype), slot, axis=1)
+                    v_all = jax.lax.dynamic_update_slice_in_dim(
+                        v_pre, v.astype(kvc.dtype), slot, axis=1)
+                else:
+                    k_all, v_all = drom.deinterleave(kvc, 2,
+                                                     impl=cfg.kernel_impl)
                 eff_len = jnp.minimum(pos + 1, sc)
                 out = attention.decode_attention(
                     q[:, 0], k_all, v_all, eff_len, window=None)
@@ -131,19 +170,21 @@ def decode_step(params, cache: dict, token: jax.Array, cfg: ModelConfig,
                 x = x + y
                 new_c[f"pos{i}"] = st
             if cfg.pos_has_ffn(i):
-                x2, _ = _ffn_apply(p, x[:, None], cfg, ctx, i)
+                x2, _ = _ffn_apply(p, x[:, None], cfg, ctx, i,
+                                   impl=ffn_impl)
                 x = x2[:, 0]
         return x, new_c
 
     if cfg.scan_layers:
-        x, new_blocks = jax.lax.scan(sb_step, x,
-                                     (params["blocks"], cache["blocks"]))
+        x, new_blocks = jax.lax.scan(
+            sb_step, x, (params["blocks"], cache["blocks"], pre_split))
     else:
         outs = []
         for sbi in range(cfg.n_superblocks):
             sb = jax.tree.map(lambda a: a[sbi], params["blocks"])
             cb = jax.tree.map(lambda a: a[sbi], cache["blocks"])
-            x, nb = sb_step(x, (sb, cb))
+            pb = jax.tree.map(lambda a: a[sbi], pre_split)
+            x, nb = sb_step(x, (sb, cb, pb))
             outs.append(nb)
         new_blocks = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
 

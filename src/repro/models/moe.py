@@ -24,7 +24,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import scg, shiftnet
+from repro.core import accessfuse
 
 
 class MoESpec(NamedTuple):
@@ -57,11 +57,11 @@ def _capacity(T: int, k: int, n_shards: int, slack: float) -> int:
 def _compact_ids(mine: jax.Array, cap: int, dispatch: str) -> tuple[jax.Array, jax.Array]:
     """Pack indices of set bits of ``mine`` (n,) to the front; take cap."""
     n = mine.shape[0]
-    ids = jnp.arange(n, dtype=jnp.int32)
     if dispatch == "earth":
-        shift, valid = scg.compaction_counts(mine)
-        res = shiftnet.gather_network(ids, shift, valid)
-        packed = jax.lax.slice(res.payload, (0,), (min(cap, n),))
+        # runtime-count member of the plan bank (core/accessfuse.py):
+        # take-masks derived once from the prefix-sum counts, ids pay one
+        # shift+select per layer, no conflict reductions
+        packed = accessfuse.compact_indices(mine, cap)
     else:  # argsort baseline (the XLA-native path)
         order = jnp.argsort(~mine, stable=True)
         packed = order[:cap].astype(jnp.int32)

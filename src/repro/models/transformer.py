@@ -68,6 +68,7 @@ class ModelConfig:
     remat: str = "full"                    # "none" | "full" | "dots"
     scan_layers: bool = True
     kernel_impl: str = "ref"               # EARTH op impl in-model
+    step_fusion: bool = True               # whole-step access fusion (decode)
     ssm_chunk: int = 128
 
     @property
@@ -175,7 +176,10 @@ def param_count(params) -> int:
 # Superblock application (train / prefill / decode)
 # ---------------------------------------------------------------------------
 
-def _ffn_apply(p, x, cfg: ModelConfig, ctx, i: int):
+def _ffn_apply(p, x, cfg: ModelConfig, ctx, i: int, *, impl: str | None = None):
+    """``impl`` overrides cfg.kernel_impl for the GLU field split — the
+    step scheduler (core/accessfuse.py) inlines single-token splits on the
+    XLA path during fused decode instead of paying a kernel launch."""
     aux = jnp.zeros((), jnp.float32)
     if not cfg.pos_has_ffn(i):
         return x, aux
@@ -184,7 +188,7 @@ def _ffn_apply(p, x, cfg: ModelConfig, ctx, i: int):
         y, aux = moe_layer(p["moe"], h, cfg.moe, ctx)
     elif cfg.mlp == "swiglu":
         y = layers.glu_ffn(p["ffn"], h, fused=cfg.fused_glu,
-                           impl=cfg.kernel_impl)
+                           impl=impl or cfg.kernel_impl)
     else:
         y = layers.mlp_ffn(p["mlp"], h)
     return x + y, aux

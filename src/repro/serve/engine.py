@@ -29,6 +29,12 @@ class ServeConfig:
     max_len: int
     cache_dtype: str = "bfloat16"
     long_context: bool = False     # sequence-parallel KV sharding
+    # Whole-step access fusion (core/accessfuse.py): one fused KV split
+    # per decode step.  Costs one transient cache-sized pre-split copy
+    # (k_pre/v_pre live across the step, ~+1x KV memory at peak); set
+    # False when the cache is the memory ceiling.  Auto-disabled for
+    # long_context (seq-parallel leaves would reshard per superblock).
+    step_fusion: bool = True
 
 
 def cache_specs(cfg: ModelConfig, ctx: ShardCtx, scfg: ServeConfig,
@@ -103,11 +109,26 @@ def jit_decode_step(cfg: ModelConfig, ctx: ShardCtx, scfg: ServeConfig,
     models (Jamba-398B) shard weights 2D over (data x model) even though
     the serving batch only uses the model axis (weights are gathered
     layer-by-layer under the superblock scan)."""
-    step_fn = (encdec.decode_step if cfg.encoder is not None
-               else dec.decode_step)
+    from repro.core import accessfuse
+    # one-time host compile of the FIELD=2 segment plans the fused KV
+    # split consults (decode takes no runtime-stride path: skip those)
+    accessfuse.warm(2 * cfg.hd, strided=False, fields=(2,))
 
-    def serve_step(params, cache, token):
-        return step_fn(params, cache, token, cfg, ctx)
+    if cfg.encoder is not None:
+        def serve_step(params, cache, token):
+            return encdec.decode_step(params, cache, token, cfg, ctx)
+    else:
+        # long_500k seq-parallel caches keep the per-access path: the
+        # fused pre-split leaves ride the superblock scan as xs, and
+        # slicing a seq-sharded (NS, B, Sc, K, D) leaf per superblock
+        # forces an involuntary full rematerialization in SPMD (XLA
+        # partitioner warning, measured on the 8-device dry run)
+        fuse = scfg.step_fusion and not scfg.long_context
+
+        def serve_step(params, cache, token):
+            # one fused append/split for all layers per decode step
+            return dec.decode_step(params, cache, token, cfg, ctx,
+                                   fuse=fuse)
 
     if ctx.mesh is None:
         return jax.jit(serve_step, donate_argnums=1)
@@ -147,14 +168,16 @@ class BatchedServer:
     """Fixed-slot continuous batching over a single decode step function."""
 
     def __init__(self, cfg: ModelConfig, params, *, slots: int, max_len: int,
-                 ctx: ShardCtx | None = None, cache_dtype=jnp.float32):
+                 ctx: ShardCtx | None = None, cache_dtype=jnp.float32,
+                 fuse_step: bool = True):
         self.cfg, self.params = cfg, params
         self.slots = slots
         self.max_len = max_len
         self.ctx = ctx
         self.cache = dec.init_cache(cfg, slots, max_len, cache_dtype)
         self.step_fn = jax.jit(
-            lambda p, c, t: dec.decode_step(p, c, t, cfg, None))
+            lambda p, c, t: dec.decode_step(p, c, t, cfg, None,
+                                            fuse=fuse_step))
         self.active = [False] * slots
         self.tokens: list[list[int]] = [[] for _ in range(slots)]
 

@@ -353,6 +353,110 @@ def test_segment_strategy_cost_model():
     assert plans[0].active_layers <= 2 * shiftplan.num_layers(plans[0].n) - 1
 
 
+@pytest.mark.parametrize("stride", (-1, -2, -3, -4, -7, -8))
+def test_reverser_negative_stride_load_store(stride):
+    """§3.2.2 Reverser: negative strides plan on the reversed element order
+    and un-reverse the assembled output — batched and loop paths both must
+    match direct indexing, and store must invert load."""
+    n = 512
+    buf = jnp.arange(n, dtype=jnp.float32) * 3 + 1
+    base, vl, mlen = 400, 40, 64
+    plan = lsdo.plan_strided(base, stride, vl, mlen)
+    assert plan.reversed
+    want = np.asarray([3 * (base + i * stride) + 1 for i in range(vl)],
+                      np.float32)
+    for batched in (True, False):
+        got = np.asarray(lsdo.load_strided(buf, plan, batched=batched))
+        np.testing.assert_array_equal(got, want, err_msg=f"{batched=}")
+        vals = jnp.arange(1, vl + 1, dtype=jnp.float32)
+        out = np.asarray(lsdo.store_strided(jnp.zeros(n), vals, plan,
+                                            batched=batched))
+        for i in range(vl):
+            assert out[base + i * stride] == i + 1
+        assert np.count_nonzero(out) == vl
+
+
+# ---------------------------------------------------------------------------
+# Runtime-stride plan bank (core/accessfuse.py): lax.switch dispatch over
+# compiled plans must match the dynamic oracle bit-exactly — every banked
+# stride (±1..8), both signs (Reverser), and the out-of-bank fallback.
+# ---------------------------------------------------------------------------
+
+from repro.core import accessfuse
+
+BANK_SWEEP = tuple(range(1, 9)) + tuple(-s for s in range(1, 9)) + (9, -9)
+
+
+@pytest.mark.parametrize("stride", BANK_SWEEP)
+def test_plan_bank_gather_matches_dynamic_oracle(stride):
+    n, offset, vl = 128, 64, 8
+    win = jnp.arange(n, dtype=jnp.int32) * 13 + 7
+    win2 = jnp.broadcast_to(win, (4, n))
+    traced = jax.jit(lambda w, s: accessfuse.bank_gather_strided(
+        w, s, offset, vl))(win2, jnp.int32(stride))
+    static = accessfuse.bank_gather_strided(win2, stride, offset, vl)
+    want = np.asarray(win)[offset + stride * np.arange(vl)]
+    np.testing.assert_array_equal(np.asarray(traced),
+                                  np.broadcast_to(want, (4, vl)))
+    np.testing.assert_array_equal(np.asarray(static), np.asarray(traced))
+
+
+@pytest.mark.parametrize("stride", BANK_SWEEP)
+def test_plan_bank_scatter_matches_dynamic_oracle(stride):
+    n, offset, vl = 128, 64, 8
+    vals = jnp.broadcast_to(jnp.arange(1, vl + 1, dtype=jnp.int32), (4, vl))
+    base = jnp.zeros((4, n), jnp.int32)
+    traced = jax.jit(lambda w, v, s: accessfuse.bank_scatter_strided(
+        w, v, s, offset))(base, vals, jnp.int32(stride))
+    static = accessfuse.bank_scatter_strided(base, vals, stride, offset)
+    want = np.zeros(n, np.int64)
+    want[offset + stride * np.arange(vl)] = np.arange(1, vl + 1)
+    np.testing.assert_array_equal(np.asarray(traced),
+                                  np.broadcast_to(want, (4, n)))
+    np.testing.assert_array_equal(np.asarray(static), np.asarray(traced))
+
+
+def test_plan_bank_unfittable_slot_routes_to_fallback():
+    """A banked stride whose (offset, vl) does not fit the window must
+    still produce oracle results via the dynamic branch."""
+    n, offset, vl = 64, 0, 16
+    win = jnp.arange(n, dtype=jnp.int32)
+    # stride 8 needs offset + 15*8 = 120 >= n: slot is None -> fallback...
+    # for an in-range request we must pick a stride that fits; stride 5
+    # (75 >= 64) is also unfittable, so sweep only fitting ones and assert
+    # the bank builder marked non-fitting slots None.
+    slots = accessfuse._gather_bank(n, offset, vl)
+    assert slots[7] is None and slots[4] is None       # strides 8 and 5
+    for stride in (1, 2, 3, 4):
+        got = jax.jit(lambda w, s: accessfuse.bank_gather_strided(
+            w, s, offset, vl))(win, jnp.int32(stride))
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.asarray(win)[::stride][:vl])
+
+
+def test_multi_access_plan_matches_batched_plans():
+    """The whole-step multi-access plan (concatenated transactions of
+    several accesses) routes identically to per-access batched plans."""
+    mlen = 64
+    accesses = [(2, ((0, 10), (3, 20))), (4, ((1, 8), (5, 12))),
+                (1, ((0, 64),))]
+    rows = tuple((s, o, c) for s, pairs in accesses for o, c in pairs)
+    mplan = shiftplan.multi_gather_plan(mlen, rows)
+    assert not mplan.conflict
+    x = np.arange(len(rows) * mlen).reshape(len(rows), mlen)
+    got = shiftplan.apply_np(mplan, x)
+    r = 0
+    for s, pairs in accesses:
+        bplan = shiftplan.batched_gather_plan(
+            mlen, s, tuple(o for o, _ in pairs), tuple(c for _, c in pairs))
+        want = shiftplan.apply_np(bplan, x[r:r + len(pairs)])
+        valid = bplan.valid
+        np.testing.assert_array_equal(np.where(valid, got[r:r + len(pairs)], 0),
+                                      np.where(valid, want, 0))
+        np.testing.assert_array_equal(mplan.valid[r:r + len(pairs)], valid)
+        r += len(pairs)
+
+
 def test_lsdo_region_past_buffer_end():
     """A transaction whose aligned region hangs past the buffer end must
     still load/store the in-bounds strided elements exactly (per-lane

@@ -12,8 +12,8 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, time_jit
+from repro import vx
 from repro.core import lsdo
-from repro.kernels import ops
 
 
 def run() -> None:
@@ -25,21 +25,24 @@ def run() -> None:
     emit("diverse/unit_stride_sgemm", t, "parity_with_baseline=expected")
 
     # strided: complex-interleaved real extraction (cgemm: stride-2)
-    t_e = time_jit(lambda b: ops.gather_strided(b[:8192], 2, 0, 4096), buf)
+    t_e = time_jit(lambda b: vx.gather(
+        vx.Strided(n=8192, stride=2, vl=4096), b[:8192]), buf)
     plan = lsdo.plan_strided(0, 2, 4096, 128)
     emit("diverse/strided_cgemm_real", t_e,
          f"coalesce={plan.coalescing_factor:.0f}x "
          f"transactions={plan.num_transactions}/4096")
 
     # strided large-stride (ctpmv-like packed triangular row walk)
-    t_e = time_jit(lambda b: ops.gather_strided(b, 33, 0, 256), buf)
+    t_e = time_jit(lambda b: vx.gather(
+        vx.Strided(n=n, stride=33, vl=256), b), buf)
     plan = lsdo.plan_strided(0, 33, 256, 128)
     emit("diverse/strided_ctpmv", t_e,
          f"coalesce={plan.coalescing_factor:.2f}x")
 
     # segment FIELD=3 (yuv2rgb)
     yuv = jnp.arange(3 * 4096, dtype=jnp.float32).reshape(8, 1536)
-    t_e = time_jit(lambda a: ops.deinterleave(a, 3), yuv)
+    t_e = time_jit(lambda a: vx.transpose(
+        vx.Segment(n=1536, fields=3), a), yuv)
     emit("diverse/segment_yuv2rgb", t_e, "fields=3 buffer_free=true")
 
     # indexed (LUT4): element-wise gather — EARTH adds pipeline stages,

@@ -18,8 +18,8 @@ import jax.numpy as jnp
 
 from benchmarks import common
 from benchmarks.common import emit, time_jit
+from repro import vx
 from repro.core import scg, shiftnet, shiftplan
-from repro.kernels import ops
 
 MLEN = 128
 
@@ -80,8 +80,9 @@ def run() -> None:
              wide_ops=wide_ops,
              fields=fields)
         # round-trip (segment store) parity check through the real kernels
-        parts = ops.deinterleave(aos, fields, impl="pallas")
-        back = ops.interleave(parts, impl="pallas")
+        spec = vx.Segment(n=aos.shape[-1], fields=fields)
+        with vx.use("pallas"):
+            back = vx.transpose(spec, vx.transpose(spec, aos))
         assert bool(jnp.all(back == aos))
 
 

@@ -25,8 +25,8 @@ import jax.numpy as jnp
 
 from benchmarks import common
 from benchmarks.common import emit, time_jit
+from repro import vx
 from repro.core import accessfuse, lsdo
-from repro.kernels import ops
 from repro.models import decode as dec
 from repro.models.transformer import ModelConfig, init_params
 
@@ -114,21 +114,24 @@ def _bench_bank() -> None:
     strides = ((1, 2, 4, -2) if common.QUICK
                else tuple(range(1, 9)) + tuple(-s for s in range(1, 9)))
 
+    bank_spec = vx.Strided(n=n, stride=vx.BANK, offset=offset, vl=vl)
+
     def bank_fn(w, s):
-        return accessfuse.bank_gather_strided(w, s, offset, vl)
+        return vx.gather(bank_spec, w, stride=s)
 
     for stride in strides:
         t_bank = _median_us(bank_fn, win, jnp.int32(stride))
         s = abs(stride)
         base = offset + (vl - 1) * stride if stride < 0 else offset
+        dyn_spec = vx.Strided(n=n, stride=s, offset=base, vl=vl)
         if stride < 0:   # Reverser around the dynamic kernel
             t_dyn = _median_us(
-                lambda w, b=base, ss=s: jnp.flip(ops.gather_strided(
-                    w, ss, b, vl, impl="pallas_dynamic"), -1), win)
+                lambda w, sp=dyn_spec: jnp.flip(vx.gather(
+                    sp, w, policy="pallas_dynamic"), -1), win)
         else:
             t_dyn = _median_us(
-                lambda w, b=base, ss=s: ops.gather_strided(
-                    w, ss, b, vl, impl="pallas_dynamic"), win)
+                lambda w, sp=dyn_spec: vx.gather(
+                    sp, w, policy="pallas_dynamic"), win)
         emit(f"step/bank_s{stride}", t_bank,
              f"dynamic_us={t_dyn:.1f} "
              f"vs_dynamic={t_dyn / max(t_bank, 1e-9):.1f}x",
@@ -164,13 +167,19 @@ def _bench_lsdo_many() -> None:
         rows.extend((s, o, c) for o, c in zip(offs, cnts))
     wide_fused = shiftplan.multi_gather_plan(mlen, tuple(rows)).wide_ops
 
-    t_f = _median_us(fused, buf)
-    t_p = _median_us(per_access, buf)
+    # both paths land in the ~100us dispatch-noise floor on XLA CPU, so the
+    # wall-clock ratio is not a stable claim — the asserted metric is the
+    # wide-op count (one union-layer plan vs per-access chains), which is
+    # what survives on TPU where dispatch is not the bound
+    t_f = _median_us(fused, buf, iters=101)
+    t_p = _median_us(per_access, buf, iters=101)
     emit("step/lsdo_many", t_f,
          f"per_access_us={t_p:.1f} speedup={t_p / max(t_f, 1e-9):.2f}x "
-         f"accesses={len(plans)} wide_ops={wide_fused}vs{wide_per}",
+         f"accesses={len(plans)} wide_ops={wide_fused}vs{wide_per} "
+         f"dispatch_noise_bound=true",
          per_access_us=round(t_p, 2),
          speedup=round(t_p / max(t_f, 1e-9), 3),
+         dispatch_noise_bound=True,
          wide_ops_fused=wide_fused, wide_ops_per_access=wide_per)
 
 

@@ -35,6 +35,12 @@ print(f"\nexpert 0 owns {n0} (token,slot) units; "
       f"compacted unit ids: {np.asarray(res.payload[:n0])}")
 print("conflict-free routing:", not bool(res.conflict))
 
+# the same compaction through the public vx API (what moe.py calls)
+from repro import vx
+packed = vx.compact(vx.Compact(n=T * k, cap=T * k), mine)
+print("vx.compact agrees:",
+      bool(jnp.all(packed[:n0] == res.payload[:n0])))
+
 # --- full MoE layer: earth vs argsort dispatch ------------------------------
 for dispatch in ("earth", "sort"):
     spec = MoESpec(n_experts=E, top_k=k, d_ff=64, dispatch=dispatch)

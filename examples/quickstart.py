@@ -1,9 +1,10 @@
-"""Quickstart: the EARTH data-movement core in 60 lines.
+"""Quickstart: the EARTH data-movement core through the `vx` API.
 
-Shows the paper's three mechanisms as JAX ops:
+One spec type, four verbs, one policy — every vector memory access in the
+framework goes through `repro.vx`:
   1. LSDO   — coalesced strided load (plan + shift-network gather),
-  2. DROM   — raw gather/scatter through the log-depth shift network,
-  3. RCVRF  — buffer-free segment (AoS<->SoA) access,
+  2. vx     — declarative gather/scatter/transpose/compact verbs,
+  3. Policy — scoped lowering control (no per-call impl strings),
 then uses them for a real task: unpacking an AoS training record.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
@@ -11,7 +12,8 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 import jax
 import jax.numpy as jnp
 
-from repro.core import drom, lsdo
+from repro import vx
+from repro.core import lsdo
 from repro.data import aos
 
 # --- 1. LSDO: strided access with transaction coalescing --------------------
@@ -23,17 +25,36 @@ print(f"strided vl=40 stride=6: {plan.num_transactions} coalesced "
 dense = lsdo.load_strided(buf, plan)
 print("loaded:", dense[:8], "...")
 
-# --- 2. DROM: gather/scatter through the shift network -----------------------
+# --- 2. vx verbs: one declarative API for every access pattern ---------------
 x = jnp.arange(32, dtype=jnp.float32) * 10
-out = drom.gather_strided(x[None, :], stride=4, offset=2, vl=8)[0]
+spec = vx.Strided(n=32, stride=4, offset=2, vl=8)
+out = vx.gather(spec, x[None, :])[0]
 print("gathered every 4th from offset 2:", out)
-back = drom.scatter_strided(jnp.zeros((1, 32)), out[None, :], 4, 2)[0]
+back = vx.scatter(spec, jnp.zeros((1, 32)), out[None, :])[0]
 print("scattered back:", back[:12], "...")
 
-# --- 3. RCVRF: segment access without a segment buffer ----------------------
-fields = drom.deinterleave(jnp.arange(24, dtype=jnp.float32)[None, :], 3)
+# segment access (AoS <-> SoA) is a transpose over a Segment spec
+fields = vx.transpose(vx.Segment(n=24, fields=3),
+                      jnp.arange(24, dtype=jnp.float32)[None, :])
 print("AoS [x0,y0,z0,x1,...] -> SoA:",
       [list(map(int, f[0])) for f in fields])
+
+# masked compaction (the MoE dispatch primitive)
+mask = jnp.array([1, 0, 1, 1, 0, 0, 1, 0], bool)
+print("packed indices of set bits:",
+      vx.compact(vx.Compact(n=8, cap=4), mask))
+
+# runtime (traced) stride: the plan-bank lax.switch picks a compiled plan
+rt = vx.Strided(n=32, stride=vx.BANK, offset=2, vl=8)
+fast_rt = jax.jit(lambda w, s: vx.gather(rt, w, stride=s))
+print("runtime stride 3:", fast_rt(x[None, :], jnp.int32(3))[0])
+
+# --- 3. Policy: scoped lowering, no per-call impl strings --------------------
+# default: REPRO_VX_IMPL env var, else platform (pallas on TPU, ref off-TPU)
+print("default policy:", vx.Policy.default())
+with vx.use("pallas"):              # everything in scope lowers to Pallas
+    fast = jax.jit(lambda a: vx.transpose(vx.Segment(n=64, fields=2), a))
+    print("pallas deinterleave ok:", fast(jnp.arange(64.0)[None, :])[0][0, :4])
 
 # --- 4. All together: the AoS training-record pipeline ----------------------
 tokens = jnp.array([[5, 6, 7, 8]]); labels = jnp.array([[6, 7, 8, 9]])
@@ -42,7 +63,3 @@ record = aos.pack_records(tokens, labels, w, docs)
 print("AoS record:", record[0])
 batch = aos.unpack_records(record)
 print("unpacked tokens:", batch["tokens"][0], "labels:", batch["labels"][0])
-
-# Everything above is jit-able and TPU-ready (Pallas kernels via impl='pallas')
-fast = jax.jit(lambda a: drom.deinterleave(a, 2, impl="pallas"))
-print("pallas deinterleave ok:", fast(jnp.arange(64.0)[None, :])[0][0, :4])

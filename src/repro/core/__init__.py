@@ -1,4 +1,5 @@
 """EARTH core: shift networks, shift-count generation, LSDO coalescing,
 and the row/column-accessible register-file layout — the paper's
-contribution as composable JAX modules."""
+contribution as composable JAX modules.  High-level dispatch lives in
+``repro.vx`` (``drom`` remains only as a deprecated shim)."""
 from repro.core import drom, lsdo, rcvrf, scg, shiftnet  # noqa: F401

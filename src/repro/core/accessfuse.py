@@ -29,12 +29,19 @@ reach the roofline when memory accesses are scheduled across operations):
 * :func:`jaxpr_access_counts` — the launch/mask-upload accounting used by
   the CI regression gate and benchmarks/bench_step.py (counted on the
   jaxpr, no timing flakiness).
+
+Since PR 3 this module sits BELOW the public ``repro.vx`` API: the
+scheduler's launch/platform policies read the active ``vx.Policy``
+(fusion threshold, platform lowering), group execution routes through the
+vx verbs, and the plan banks are memoized in the unified spec-keyed LRU
+(``vx.PLANS``).  Callers reach the bank via
+``vx.gather(vx.Strided(stride=vx.BANK, ...), w, stride=s)`` and compaction
+via ``vx.compact(vx.Compact(n, cap), mask)``.
 """
 from __future__ import annotations
 
 import contextlib
 import dataclasses
-import functools
 from typing import Any, Sequence
 
 import jax
@@ -42,33 +49,40 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import scg, shiftnet, shiftplan
+from repro.vx import cache as vxcache
+from repro.vx import policy as vxpolicy
 
-# Below this many elements a merged group is inlined on the XLA path
-# instead of paying a kernel launch (decode-time single-token beats).
-MIN_FUSED_ELEMS = 1 << 15
+# Frozen defaults re-exported from the policy layer (repro/vx/policy.py).
+# These are NOT runtime knobs: the scheduler reads fusion_threshold (and
+# platform_lowering) from its governing vx.Policy, so tune via
+# vx.Policy(fusion_threshold=...) / vx.use(...), not by rebinding these.
+MIN_FUSED_ELEMS = vxpolicy.MIN_FUSED_ELEMS
+BANK_STRIDES = vxpolicy.BANK_STRIDES
+BANK_FIELDS = vxpolicy.BANK_FIELDS
 
-# What the plan bank precompiles: the strides and segment field counts
-# that occur in this repo's models/data paths.
-BANK_STRIDES = tuple(range(1, 9))
-BANK_FIELDS = (2, 4)
 
-
-def pick_impl(total_elems: int, impl: str) -> str:
-    """Scheduler launch policy: tiny accesses ride the XLA path."""
-    if impl == "ref" or total_elems >= MIN_FUSED_ELEMS:
-        return impl
-    return "ref"
+def pick_impl(total_elems: int, impl: str,
+              policy: "vxpolicy.Policy | None" = None) -> str:
+    """Scheduler launch policy: tiny accesses ride the XLA path.  The
+    threshold comes from ``policy`` (default: the active ``vx.Policy``)."""
+    pol = vxpolicy.current() if policy is None else policy
+    return pol.with_impl(impl).for_elems(total_elems).impl
 
 
 _PIN_KERNEL_LOWERING = False
 
 
-def platform_impl(impl: str) -> str:
+def platform_impl(impl: str,
+                  policy: "vxpolicy.Policy | None" = None) -> str:
     """Platform arm of the lowering policy: on TPU a merged group is ONE
     Mosaic launch; off-TPU the interpret-mode kernels are a correctness
     vehicle, not a dispatch win (grid steps lower to full-buffer copies),
-    so merged groups lower to the XLA path instead."""
-    if impl == "pallas" and not _PIN_KERNEL_LOWERING:
+    so merged groups lower to the XLA path instead.  Disabled while
+    :func:`pinned_kernel_lowering` is active or when the governing policy
+    (``policy``, default the active one) sets ``platform_lowering=False``."""
+    pol = vxpolicy.current() if policy is None else policy
+    if impl == "pallas" and not _PIN_KERNEL_LOWERING \
+            and pol.platform_lowering:
         from repro.kernels import _common
         if _common.interpret_mode():
             return "ref"
@@ -117,19 +131,28 @@ class StepScheduler:
     plans (heterogeneous strided specs) — the whole-step analogue of
     LSDO's batched (T, mlen) transaction block.
 
-    ``platform_policy=False`` pins merged groups to the requested impl
-    (used by the launch-accounting tests to exercise the kernel lowering
-    off-TPU); the default applies :func:`platform_impl`.
+    Lowering is governed by ONE ``vx.Policy``: ``policy`` (or the ambient
+    one) with ``impl`` pinned on top when given — an explicitly passed
+    Policy keeps ALL its fields (fusion threshold, platform lowering),
+    never just the impl string.  ``platform_policy=False`` is sugar for
+    ``platform_lowering=False`` on that policy (pins merged groups to the
+    requested impl — used by the launch-accounting tests to exercise the
+    kernel lowering off-TPU).
     """
 
-    def __init__(self, impl: str = "ref", *, platform_policy: bool = True):
-        self.impl = impl
-        self.platform_policy = platform_policy
+    def __init__(self, impl: str | None = None, *,
+                 platform_policy: bool = True,
+                 policy: "vxpolicy.Policy | None" = None):
+        pol = vxpolicy.resolve(policy).with_impl(impl)
+        if not platform_policy:
+            pol = dataclasses.replace(pol, platform_lowering=False)
+        self.policy = pol
+        self.impl = pol.impl
         self._reqs: list[_Req] = []
 
     def _impl_for(self, total_elems: int) -> str:
-        impl = pick_impl(total_elems, self.impl)
-        return platform_impl(impl) if self.platform_policy else impl
+        return platform_impl(self.policy.for_elems(total_elems).impl,
+                             self.policy)
 
     # -- access registration ------------------------------------------------
     def deinterleave(self, aos: jax.Array, fields: int) -> Handle:
@@ -162,14 +185,16 @@ class StepScheduler:
         self._reqs = []
 
     def _run_group(self, key: tuple, reqs: list[_Req]) -> None:
-        from repro.kernels import ops
+        from repro import vx
+        pol = self.policy
         kind = key[0]
         if kind == "deint":
             fields = key[1]
             stack = (reqs[0].payload if len(reqs) == 1
                      else jnp.stack([r.payload for r in reqs]))
             impl = self._impl_for(stack.size)
-            outs = ops.deinterleave(stack, fields, impl=impl)
+            spec = vx.Segment(n=stack.shape[-1], fields=fields)
+            outs = vx.transpose(spec, stack, policy=pol.with_impl(impl))
             for a, r in enumerate(reqs):
                 r.handle.value = (list(outs) if len(reqs) == 1
                                   else [o[a] for o in outs])
@@ -181,30 +206,29 @@ class StepScheduler:
                 fields = [jnp.stack([r.payload[f] for r in reqs])
                           for f in range(nf)]
             impl = self._impl_for(fields[0].size * nf)
-            out = ops.interleave(fields, impl=impl)
+            spec = vx.Segment(n=nf * fields[0].shape[-1], fields=nf)
+            out = vx.transpose(spec, fields, policy=pol.with_impl(impl))
             for a, r in enumerate(reqs):
                 r.handle.value = out if len(reqs) == 1 else out[a]
         elif kind == "gather":
             vl = key[3]
-            specs = [(r.payload[1], r.payload[2]) for r in reqs]
+            n = key[1][-1]
+            specs = [vx.Strided(n=n, stride=r.payload[1],
+                                offset=r.payload[2], vl=vl) for r in reqs]
             stack = (reqs[0].payload[0] if len(reqs) == 1
                      else jnp.stack([r.payload[0] for r in reqs]))
             impl = self._impl_for(stack.size)
-            if len(set(specs)) == 1:           # one shared plan
-                out = ops.gather_strided(stack, specs[0][0], specs[0][1],
-                                         vl, impl=impl)
+            if len(set(s.key() for s in specs)) == 1:  # one shared plan
+                out = vx.gather(specs[0], stack, policy=pol.with_impl(impl))
                 for a, r in enumerate(reqs):
                     r.handle.value = out if len(reqs) == 1 else out[a]
             elif impl == "ref":
-                for r in reqs:
-                    w, s, o = r.payload
-                    r.handle.value = ops.gather_strided(w, s, o, vl,
-                                                        impl="ref")
+                for r, spec in zip(reqs, specs):
+                    r.handle.value = vx.gather(spec, r.payload[0],
+                                               policy=pol.with_impl("ref"))
             else:                              # concatenated-mask kernel
-                from repro.kernels import strided as _strided
-                out = _strided.gather_strided_fused(
-                    stack, tuple(specs), vl,
-                    compiled=impl == "pallas")
+                out = vx.gather_many(specs, stack,
+                                     policy=pol.with_impl(impl))
                 for a, r in enumerate(reqs):
                     r.handle.value = out[a]
         else:  # pragma: no cover
@@ -214,28 +238,35 @@ class StepScheduler:
 # -- convenience wrappers (the shapes models actually issue) ----------------
 
 def fuse_deinterleave(arrays: Sequence[jax.Array], fields: int, *,
-                      impl: str = "ref",
-                      platform_policy: bool = True) -> list[list[jax.Array]]:
+                      impl: str | None = None,
+                      platform_policy: bool = True,
+                      policy: "vxpolicy.Policy | None" = None
+                      ) -> list[list[jax.Array]]:
     """One fused segment load for a whole step's same-shape AoS arrays."""
-    sched = StepScheduler(impl=impl, platform_policy=platform_policy)
+    sched = StepScheduler(impl=impl, platform_policy=platform_policy,
+                          policy=policy)
     hs = [sched.deinterleave(a, fields) for a in arrays]
     sched.flush()
     return [h.value for h in hs]
 
 
-def fuse_split_kv(kvs: Sequence[jax.Array], *, impl: str = "ref",
-                  platform_policy: bool = True
+def fuse_split_kv(kvs: Sequence[jax.Array], *, impl: str | None = None,
+                  platform_policy: bool = True,
+                  policy: "vxpolicy.Policy | None" = None
                   ) -> list[tuple[jax.Array, jax.Array]]:
     """All layers' (…, 2d) KV-cache splits in one launch (FIELD=2)."""
     return [tuple(pair) for pair in
             fuse_deinterleave(kvs, 2, impl=impl,
-                              platform_policy=platform_policy)]
+                              platform_policy=platform_policy,
+                              policy=policy)]
 
 
 def fuse_interleave(groups: Sequence[Sequence[jax.Array]], *,
-                    impl: str = "ref") -> list[jax.Array]:
+                    impl: str | None = None,
+                    policy: "vxpolicy.Policy | None" = None
+                    ) -> list[jax.Array]:
     """One fused segment store for a step's same-shape SoA groups."""
-    sched = StepScheduler(impl=impl)
+    sched = StepScheduler(impl=impl, policy=policy)
     hs = [sched.interleave(g) for g in groups]
     sched.flush()
     return [h.value for h in hs]
@@ -249,7 +280,7 @@ def _flip(x: jax.Array) -> jax.Array:
     return jnp.flip(x, axis=-1)
 
 
-@functools.lru_cache(maxsize=None)
+@vxcache.memoize("bank.gather")
 def _gather_bank(n: int, offset: int, vl: int):
     """16 bank slots: strides 1..8, then -1..-8 (Reverser: plan on the
     reversed element order — a positive-stride plan from the window's low
@@ -266,7 +297,7 @@ def _gather_bank(n: int, offset: int, vl: int):
     return tuple(slots)
 
 
-@functools.lru_cache(maxsize=None)
+@vxcache.memoize("bank.scatter")
 def _scatter_bank(n: int, offset: int, vl: int):
     slots = []
     for s in BANK_STRIDES:

@@ -1,104 +1,122 @@
-"""DROM — the unified Data ReOrganization Module API (EARTH §4.3).
+"""DEPRECATED — legacy DROM batched entry points, superseded by ``repro.vx``.
 
-High-level, batched entry points used by the rest of the framework.  Each
-op dispatches to either the pure-JAX reference (XLA path — also what the
-512-device dry-run lowers) or the Pallas TPU kernels (validated in
-interpret mode on CPU, compiled for real TPUs).
-
-Semantics are defined by kernels/ref.py; this module only routes.
+This module was the high-level routing layer of PRs 0-2.  Its job —
+choosing a lowering per call via ``impl=`` strings and a platform probe —
+now belongs to ``vx.Policy`` (explicit arg > ``with vx.use(...)`` scope >
+``REPRO_VX_IMPL`` env var > platform default).  Each wrapper below emits a
+:class:`DeprecationWarning` and delegates to the vx verbs; internal code
+must call ``vx`` directly (CI escalates the shim warnings to errors).
+See DESIGN.md §9 for the migration map.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Literal, Sequence
 
 import jax
 
+from repro import vx
+
 Impl = Literal["ref", "pallas"]
-_DEFAULT: Impl = "ref"
+
+
+def _warn(name: str, repl: str) -> None:
+    warnings.warn(
+        f"repro.core.drom.{name} is deprecated; use {repl} "
+        f"(see DESIGN.md §9)", DeprecationWarning, stacklevel=3)
 
 
 def default_impl() -> Impl:
-    try:
-        platform = jax.devices()[0].platform
-    except Exception:  # pragma: no cover
-        platform = "cpu"
-    return "pallas" if platform == "tpu" else _DEFAULT
+    """One knob for the whole stack: resolves through
+    :meth:`vx.Policy.default` (``REPRO_VX_IMPL`` env var, else platform)."""
+    _warn("default_impl", "vx.Policy.default().impl")
+    return vx.Policy.default().impl
 
 
 def gather_strided(window: jax.Array, stride: int, offset: int, vl: int,
                    *, impl: Impl | None = None) -> jax.Array:
     """Dense (..., vl) from strided positions of a coalesced (..., n) window."""
-    from repro.kernels import ops
-    return ops.gather_strided(window, stride, offset, vl,
-                              impl=impl or default_impl())
+    _warn("gather_strided", "vx.gather(vx.Strided(...), window)")
+    spec = vx.Strided(n=window.shape[-1], stride=stride, vl=vl,
+                      offset=offset)
+    return vx.gather(spec, window, policy=impl)
 
 
 def scatter_strided(window: jax.Array, values: jax.Array, stride: int,
                     offset: int, *, impl: Impl | None = None) -> jax.Array:
     """Place (..., vl) dense values at strided positions of (..., n) window."""
-    from repro.kernels import ops
-    return ops.scatter_strided(window, values, stride, offset,
-                               impl=impl or default_impl())
+    _warn("scatter_strided", "vx.scatter(vx.Strided(...), window, values)")
+    spec = vx.Strided(n=window.shape[-1], stride=stride,
+                      vl=values.shape[-1], offset=offset)
+    return vx.scatter(spec, window, values, policy=impl)
 
 
 def deinterleave(aos: jax.Array, fields: int, *,
                  impl: Impl | None = None) -> list[jax.Array]:
     """AoS (..., fields*m) -> [ (..., m) ] * fields   (segment load)."""
-    from repro.kernels import ops
-    return ops.deinterleave(aos, fields, impl=impl or default_impl())
+    _warn("deinterleave", "vx.transpose(vx.Segment(...), aos)")
+    return vx.transpose(vx.Segment(n=aos.shape[-1], fields=fields), aos,
+                        policy=impl)
 
 
 def interleave(soa: Sequence[jax.Array], *, impl: Impl | None = None) -> jax.Array:
     """[ (..., m) ] * fields -> AoS (..., fields*m)   (segment store)."""
-    from repro.kernels import ops
-    return ops.interleave(list(soa), impl=impl or default_impl())
+    _warn("interleave", "vx.transpose(vx.Segment(...), [fields...])")
+    parts = list(soa)
+    spec = vx.Segment(n=len(parts) * parts[0].shape[-1], fields=len(parts))
+    return vx.transpose(spec, parts, policy=impl)
 
 
 def gather_strided_rt(window: jax.Array, stride, offset: int, vl: int,
                       *, impl: Impl | None = None) -> jax.Array:
-    """Runtime-stride gather via the plan bank (core/accessfuse.py):
-    traced strides ±1..8 hit compiled masks through ``lax.switch``."""
-    from repro.kernels import ops
-    return ops.gather_strided_rt(window, stride, offset, vl,
-                                 impl=impl or default_impl())
+    """Runtime-stride gather via the plan bank (core/accessfuse.py)."""
+    _warn("gather_strided_rt",
+          "vx.gather(vx.Strided(stride=vx.BANK, ...), window, stride=s)")
+    spec = vx.Strided(n=window.shape[-1], stride=vx.BANK, vl=vl,
+                      offset=offset)
+    return vx.gather(spec, window, stride=stride, policy=impl)
 
 
 def scatter_strided_rt(window: jax.Array, values: jax.Array, stride,
                        offset: int, *, impl: Impl | None = None) -> jax.Array:
-    from repro.kernels import ops
-    return ops.scatter_strided_rt(window, values, stride, offset,
-                                  impl=impl or default_impl())
+    _warn("scatter_strided_rt",
+          "vx.scatter(vx.Strided(stride=vx.BANK, ...), window, values, "
+          "stride=s)")
+    spec = vx.Strided(n=window.shape[-1], stride=vx.BANK,
+                      vl=values.shape[-1], offset=offset)
+    return vx.scatter(spec, window, values, stride=stride,
+                      policy=impl)
 
 
 def deinterleave_many(aos_list: Sequence[jax.Array], fields: int, *,
                       impl: Impl | None = None) -> list[list[jax.Array]]:
     """Step-fused segment load: A same-shape AoS arrays, ONE launch."""
-    from repro.kernels import ops
-    return ops.deinterleave_many(list(aos_list), fields,
-                                 impl=impl or default_impl())
+    _warn("deinterleave_many", "vx.gather_many(vx.Segment(...), aos_list)")
+    spec = vx.Segment(n=aos_list[0].shape[-1], fields=fields)
+    return vx.gather_many(spec, list(aos_list), policy=impl)
 
 
 def interleave_many(groups: Sequence[Sequence[jax.Array]], *,
                     impl: Impl | None = None) -> list[jax.Array]:
     """Step-fused segment store: A same-shape SoA groups, ONE launch."""
-    from repro.kernels import ops
-    return ops.interleave_many([list(g) for g in groups],
-                               impl=impl or default_impl())
+    _warn("interleave_many", "vx.scatter_many(vx.Segment(...), groups)")
+    nf = len(groups[0])
+    spec = vx.Segment(n=nf * groups[0][0].shape[-1], fields=nf)
+    return vx.scatter_many(spec, [list(g) for g in groups],
+                           policy=impl)
 
 
 def compact_rows(rows: jax.Array, mask: jax.Array, *,
                  impl: Impl | None = None) -> tuple[jax.Array, jax.Array]:
-    """Pack masked (n, d) rows to the front, order preserved.
-
-    Returns (packed_rows, packed_valid). The EARTH gather network with
-    prefix-sum SCG — the MoE dispatch primitive."""
-    from repro.kernels import ops
-    return ops.compact_rows(rows, mask, impl=impl or default_impl())
+    """Pack masked (n, d) rows to the front, order preserved."""
+    _warn("compact_rows", "vx.compact(vx.Compact(...), mask, rows)")
+    return vx.compact(vx.Compact(n=rows.shape[0]), mask, rows,
+                      policy=impl)
 
 
 def expand_rows(packed: jax.Array, mask: jax.Array, *,
                 impl: Impl | None = None) -> jax.Array:
-    """Inverse of compact_rows: scatter packed rows back to mask positions
-    (zeros elsewhere)."""
-    from repro.kernels import ops
-    return ops.expand_rows(packed, mask, impl=impl or default_impl())
+    """Inverse of compact_rows: scatter packed rows back to mask positions."""
+    _warn("expand_rows", "vx.scatter(vx.Compact(...), mask, packed)")
+    return vx.scatter(vx.Compact(n=mask.shape[0]), mask, packed,
+                      policy=impl)

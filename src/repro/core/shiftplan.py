@@ -28,6 +28,10 @@ Three plan families:
 
 The dynamic-count network remains the runtime-stride fallback and the
 property-test oracle (tests/test_property_shiftnet.py).
+
+Every plan constructor is memoized in the unified spec-keyed LRU
+(``repro.vx.cache.PLANS``) — one cache for shift plans, the runtime-stride
+bank, and vx dispatch executors.
 """
 from __future__ import annotations
 
@@ -36,6 +40,8 @@ import functools
 import math
 
 import numpy as np
+
+from repro.vx.cache import memoize as _memoize
 
 
 def num_layers(n: int) -> int:
@@ -172,7 +178,7 @@ def _monotone_plan(shift, valid, *, kind: str, toward_zero: bool,
     return ShiftPlan(n, kind, tuple(layers), out_valid, source, conflict)
 
 
-@functools.lru_cache(maxsize=None)
+@_memoize("plan.gather")
 def gather_plan(n: int, stride: int, offset: int, vl: int) -> ShiftPlan:
     """Compiled GSN for a strided load window (§4.2 closed form)."""
     shift, valid = gather_counts_np(n, stride, offset, vl)
@@ -180,7 +186,7 @@ def gather_plan(n: int, stride: int, offset: int, vl: int) -> ShiftPlan:
                           lsb_first=True)
 
 
-@functools.lru_cache(maxsize=None)
+@_memoize("plan.scatter")
 def scatter_plan(n: int, stride: int, offset: int, vl: int) -> ShiftPlan:
     """Compiled SSN for a strided store window."""
     shift, valid = scatter_counts_np(n, stride, offset, vl)
@@ -188,7 +194,7 @@ def scatter_plan(n: int, stride: int, offset: int, vl: int) -> ShiftPlan:
                           lsb_first=False)
 
 
-@functools.lru_cache(maxsize=None)
+@_memoize("plan.counts")
 def counts_plan(shift: tuple, valid: tuple, *, gather: bool) -> ShiftPlan:
     """Compiled network for arbitrary *static* per-lane counts (the
     shift_gather/shift_scatter fast path when the SCG output is host data)."""
@@ -235,7 +241,7 @@ def _batched_plan(count_fn, n: int, rows: tuple, *, kind: str,
     return ShiftPlan(n, kind, tuple(layers), valid, source, conflict)
 
 
-@functools.lru_cache(maxsize=None)
+@_memoize("plan.batched_gather")
 def batched_gather_plan(n: int, stride: int, offsets: tuple,
                         counts: tuple) -> ShiftPlan:
     rows = tuple((stride, o, c) for o, c in zip(offsets, counts))
@@ -243,7 +249,7 @@ def batched_gather_plan(n: int, stride: int, offsets: tuple,
                          kind="gather", toward_zero=True, lsb_first=True)
 
 
-@functools.lru_cache(maxsize=None)
+@_memoize("plan.batched_scatter")
 def batched_scatter_plan(n: int, stride: int, offsets: tuple,
                          counts: tuple) -> ShiftPlan:
     rows = tuple((stride, o, c) for o, c in zip(offsets, counts))
@@ -251,7 +257,7 @@ def batched_scatter_plan(n: int, stride: int, offsets: tuple,
                          kind="scatter", toward_zero=False, lsb_first=False)
 
 
-@functools.lru_cache(maxsize=None)
+@_memoize("plan.multi_gather")
 def multi_gather_plan(n: int, rows: tuple) -> ShiftPlan:
     """Whole-step super-transaction plan: one (T, n) batched plan whose rows
     are the concatenated transactions of SEVERAL accesses — each row its
@@ -261,7 +267,7 @@ def multi_gather_plan(n: int, rows: tuple) -> ShiftPlan:
                          kind="gather", toward_zero=True, lsb_first=True)
 
 
-@functools.lru_cache(maxsize=None)
+@_memoize("plan.multi_scatter")
 def multi_scatter_plan(n: int, rows: tuple) -> ShiftPlan:
     """Scatter twin of :func:`multi_gather_plan`."""
     return _batched_plan(scatter_counts_np, n, rows,
@@ -402,7 +408,7 @@ def _checked(plan: ShiftPlan) -> ShiftPlan:
     return plan
 
 
-@functools.lru_cache(maxsize=None)
+@_memoize("plan.permutation")
 def permutation_plan(dest: tuple) -> ShiftPlan:
     """Plan routing input slot p to slot dest[p] (-1 = don't-care lane).
 
@@ -474,7 +480,7 @@ def _permute_penalty() -> int:
     return 2 if platform == "tpu" else 6
 
 
-@functools.lru_cache(maxsize=None)
+@_memoize("plan.segment_deint")
 def segment_deinterleave_plans(n: int, fields: int
                                ) -> tuple[str, tuple[ShiftPlan, ...]]:
     """Cost-modeled segment-load routing: ('fused', (permutation_plan,)) —
@@ -494,7 +500,7 @@ def segment_deinterleave_plans(n: int, fields: int
     return "per_field", per
 
 
-@functools.lru_cache(maxsize=None)
+@_memoize("plan.segment_int")
 def segment_interleave_plans(n: int, fields: int
                              ) -> tuple[str, tuple[ShiftPlan, ...]]:
     """Segment-store twin of :func:`segment_deinterleave_plans` (per-field
@@ -508,7 +514,7 @@ def segment_interleave_plans(n: int, fields: int
     return "per_field", per
 
 
-@functools.lru_cache(maxsize=None)
+@_memoize("plan.deinterleave")
 def deinterleave_plan(n: int, fields: int) -> ShiftPlan:
     """AoS (f0 f1 .. f0 f1 ..) -> concatenated SoA fields, one fused pass."""
     assert n % fields == 0
@@ -518,7 +524,7 @@ def deinterleave_plan(n: int, fields: int) -> ShiftPlan:
     return permutation_plan(tuple(int(x) for x in dest))
 
 
-@functools.lru_cache(maxsize=None)
+@_memoize("plan.interleave")
 def interleave_plan(n: int, fields: int) -> ShiftPlan:
     """Concatenated SoA fields -> AoS beat (inverse fused transposition)."""
     assert n % fields == 0

@@ -4,31 +4,33 @@ A record packs FIELDS=4 int32 fields per token position, interleaved
 (Array-of-Structures):  [token, label, weight_q, doc_id] x S.
 One record is therefore a single contiguous (4*S,) buffer: writing it is one
 sequential transaction (the coalescing win), and unpacking to SoA batch
-arrays is a FIELD=4 segment load (core/drom.deinterleave).
+arrays is a FIELD=4 segment load (``vx.transpose`` with a Segment spec).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import drom
+from repro import vx
 
 FIELDS = 4
 WEIGHT_SCALE = 1024  # loss weights quantized to int32 / WEIGHT_SCALE
 
 
 def pack_records(tokens: jax.Array, labels: jax.Array, weights: jax.Array,
-                 doc_ids: jax.Array, *, impl: str = "ref") -> jax.Array:
+                 doc_ids: jax.Array, *, policy=None) -> jax.Array:
     """(B,S) x4 -> (B, 4S) interleaved AoS buffer (segment store)."""
     wq = jnp.round(weights * WEIGHT_SCALE).astype(jnp.int32)
-    return drom.interleave(
-        [tokens.astype(jnp.int32), labels.astype(jnp.int32), wq,
-         doc_ids.astype(jnp.int32)], impl=impl)
+    spec = vx.Segment(n=FIELDS * tokens.shape[-1], fields=FIELDS)
+    return vx.transpose(
+        spec, [tokens.astype(jnp.int32), labels.astype(jnp.int32), wq,
+               doc_ids.astype(jnp.int32)], policy=policy)
 
 
-def unpack_records(aos: jax.Array, *, impl: str = "ref") -> dict:
+def unpack_records(aos: jax.Array, *, policy=None) -> dict:
     """(B, 4S) AoS -> SoA batch dict (segment load)."""
-    tokens, labels, wq, doc_ids = drom.deinterleave(aos, FIELDS, impl=impl)
+    tokens, labels, wq, doc_ids = vx.transpose(
+        vx.Segment(n=aos.shape[-1], fields=FIELDS), aos, policy=policy)
     return {
         "tokens": tokens,
         "labels": labels,

@@ -6,7 +6,8 @@ checkpoint/restore and elastic rescale (different host count on restart)
 are exact — property-tested in tests/test_data.py.
 
 Records flow through the AoS format (data/aos.py): the loader materializes
-the interleaved buffer, the model side performs the EARTH segment load.
+the interleaved buffer, the model side performs the EARTH segment load via
+the vx API (lowering picked by the active vx.Policy).
 """
 from __future__ import annotations
 
@@ -82,20 +83,21 @@ class SyntheticAoSPipeline:
         self.state.step += 1
         return shard
 
-    def next_batch(self, *, fused: bool = True) -> dict:
+    def next_batch(self, *, fused: bool = True, policy=None) -> dict:
         """SoA batch dict for this host; advances state.
 
         ``fused=True`` routes through the step scheduler's pack+unpack
         elision (data/aos.pack_unpack_fused): the producer-side segment
         store and the consumer-side segment load of the SAME step cancel
         (inverse permutation plans), skipping the AoS materialization
-        entirely.  Bit-exact with ``fused=False`` (the AoS interface,
+        entirely — no segment op runs, so ``policy`` only affects the
+        ``fused=False`` path.  Bit-exact with ``fused=False`` (the AoS interface,
         unchanged, still backs `next_host_aos` for checkpoint/restore
         determinism) — property-tested in tests/test_step_fusion.py.
         """
         if not fused:
             shard = jnp.asarray(self.next_host_aos())
-            batch = aos.unpack_records(shard)
+            batch = aos.unpack_records(shard, policy=policy)
             batch.pop("doc_id")
             return batch
         toks, labels, weights, docs = self._global_fields_np(self.state.step)

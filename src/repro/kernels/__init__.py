@@ -1,7 +1,8 @@
 """EARTH Pallas TPU kernels: shift-network gather/scatter, segment
 (AoS<->SoA), LSDO strided load/store, MoE compaction, interleaved KV cache.
 
-Each kernel has a pure-jnp oracle in ref.py and a jit-friendly wrapper in
-ops.py; tests sweep shapes/dtypes and assert allclose against the oracle.
+Each kernel has a pure-jnp oracle in ref.py; dispatch happens in the
+declarative ``repro.vx`` API (spec + verb + policy).  ``ops.py`` survives
+only as a deprecated delegating shim.
 """
 from repro.kernels import ops, ref  # noqa: F401

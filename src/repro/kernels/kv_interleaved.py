@@ -3,54 +3,53 @@
 Layout: cache[..., t, 2*d] holds [k0, v0, k1, v1, ...] per token — K and V
 of a token are ONE contiguous beat, so a decode-step append is a single
 coalesced write (the paper's one-transaction-per-segment), and attention-time
-splitting is a FIELD=2 segment load.  With impl="pallas" the split/pack go
-through the FUSED segment kernel: one compiled-permutation pass (static
-shifts + constant masks, core/shiftplan.py) produces both K and V — not two
-sequential gather networks.
+splitting is a FIELD=2 segment load.  All routing goes through the
+declarative vx API: a ``Segment(fields=2)`` spec, a policy (the model's
+``cfg.vx_policy``) picking the lowering — under ``pallas`` the split/pack
+run the FUSED segment kernel (one compiled-permutation pass producing both
+K and V, core/shiftplan.py), never two sequential gather networks.
 """
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
-from repro.kernels import ref as _ref
-from repro.kernels import segment as _segment
+from repro import vx
 
 
-def interleave_kv(k: jax.Array, v: jax.Array, *, impl: str = "ref") -> jax.Array:
+def _spec(n: int) -> vx.Segment:
+    return vx.Segment(n=n, fields=2)
+
+
+def interleave_kv(k: jax.Array, v: jax.Array, *, policy=None) -> jax.Array:
     """(..., d) x2 -> (..., 2d) AoS beat."""
-    if impl == "pallas":
-        return _segment.interleave([k, v])
-    return _ref.kv_interleave(k, v)
+    return vx.transpose(_spec(2 * k.shape[-1]), [k, v], policy=policy)
 
 
-def split_kv(kv: jax.Array, *, impl: str = "ref") -> tuple[jax.Array, jax.Array]:
+def split_kv(kv: jax.Array, *, policy=None) -> tuple[jax.Array, jax.Array]:
     """(..., 2d) -> (k, v)."""
-    if impl == "pallas":
-        k, v = _segment.deinterleave(kv, 2)
-        return k, v
-    return _ref.kv_split(kv)
+    k, v = vx.transpose(_spec(kv.shape[-1]), kv, policy=policy)
+    return k, v
 
 
-def split_kv_step(kvs: list[jax.Array], *, impl: str = "ref"
+def split_kv_step(kvs: list[jax.Array], *, policy=None
                   ) -> list[tuple[jax.Array, jax.Array]]:
     """Whole-step KV split: EVERY layer's (…, 2d) cache in one fused
     FIELD=2 segment load — one kernel launch and one mask upload per decode
     step instead of one per layer (core/accessfuse.py groups same-shape
     caches; mixed window sizes form one group per shape)."""
     from repro.core import accessfuse
-    return accessfuse.fuse_split_kv(kvs, impl=impl)
+    return accessfuse.fuse_split_kv(kvs, policy=vx.resolve(policy))
 
 
 def append_token(cache: jax.Array, k: jax.Array, v: jax.Array, pos,
-                 *, impl: str = "ref") -> jax.Array:
+                 *, policy=None) -> jax.Array:
     """Write one token's interleaved KV beat at position ``pos``.
 
     cache: (B, S, H, 2d); k, v: (B, H, d); pos: scalar int (same for batch).
     One dynamic_update_slice per layer instead of two (K and V) — the
     coalescing win, measured in benchmarks/bench_segment.py.
     """
-    beat = interleave_kv(k, v, impl=impl)                 # (B, H, 2d)
+    beat = interleave_kv(k, v, policy=policy)             # (B, H, 2d)
     beat = beat[:, None]                                  # (B, 1, H, 2d)
     return jax.lax.dynamic_update_slice_in_dim(cache, beat.astype(cache.dtype),
                                                pos, axis=1)

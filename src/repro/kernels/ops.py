@@ -1,170 +1,139 @@
-"""Public wrappers for the EARTH kernels with impl dispatch.
+"""DEPRECATED — legacy impl-string wrappers, superseded by ``repro.vx``.
 
-impl="ref"            -> pure-jnp oracle (XLA path; the dry-run lowering)
-impl="pallas"         -> Pallas TPU kernel routed by a COMPILED ShiftPlan
-                         (constant masks, pruned layers; interpret off-TPU)
-impl="pallas_dynamic" -> Pallas kernel with the dynamic-count network in
-                         the body (the runtime-stride fallback; kept as the
-                         in-kernel oracle for the compiled path)
+Every function here delegates to the declarative vx API (one spec type,
+four verbs, policy-driven dispatch — see ``src/repro/vx/__init__.py`` and
+DESIGN.md §9) and emits a :class:`DeprecationWarning`.  Internal code
+(src/, examples/, benchmarks/) must call ``vx`` directly; CI escalates
+these shim warnings to errors (``-W "error:repro.:DeprecationWarning"``)
+to keep it that way.
 
-Strides / offsets / field counts are static Python ints (they parameterize
-shift plans and block shapes); callers jit around these wrappers.
+Migration map (old -> new):
+
+    gather_strided(w, s, o, vl, impl=i)   vx.gather(vx.Strided(n, s, vl, o), w, policy=i)
+    scatter_strided(w, v, s, o, impl=i)   vx.scatter(vx.Strided(n, s, vl, o), w, v, policy=i)
+    gather_strided_rt(w, s, o, vl)        vx.gather(vx.Strided(n, vx.BANK, vl, o), w, stride=s)
+    scatter_strided_rt(w, v, s, o)        vx.scatter(vx.Strided(n, vx.BANK, vl, o), w, v, stride=s)
+    gather_strided_many(ws, specs, vl)    vx.gather_many([vx.Strided(...)], ws)
+    deinterleave(a, f, impl=i)            vx.transpose(vx.Segment(n, f), a, policy=i)
+    interleave(soa, impl=i)               vx.transpose(vx.Segment(n, f), soa, policy=i)
+    deinterleave_many(aos_list, f)        vx.gather_many(vx.Segment(n, f), aos_list)
+    interleave_many(groups)               vx.scatter_many(vx.Segment(n, f), groups)
+    compact_rows(rows, mask, impl=i)      vx.compact(vx.Compact(n), mask, rows, policy=i)
+    expand_rows(packed, mask, impl=i)     vx.scatter(vx.Compact(n), mask, packed, policy=i)
+    shift_gather(x, shift, valid)         vx.gather(vx.Indexed(n), x, shift=.., valid=..)
+    shift_scatter(x, shift, valid)        vx.scatter(vx.Indexed(n), None, x, shift=.., valid=..)
 """
 from __future__ import annotations
 
+import warnings
 from typing import Sequence
 
 import jax
 
-from repro.kernels import ref as _ref
-
-_IMPLS = ("ref", "pallas", "pallas_dynamic")
+from repro import vx
 
 
-def _check_impl(impl: str) -> None:
-    if impl not in _IMPLS:
-        raise ValueError(f"unknown impl {impl!r} (want one of {_IMPLS})")
-
-
-def _pick(impl: str, ref_fn, pallas_fn):
-    _check_impl(impl)
-    return ref_fn if impl == "ref" else pallas_fn
+def _warn(name: str, repl: str) -> None:
+    warnings.warn(
+        f"repro.kernels.ops.{name} is deprecated; use {repl} "
+        f"(see DESIGN.md §9)", DeprecationWarning, stacklevel=3)
 
 
 def gather_strided(window: jax.Array, stride: int, offset: int, vl: int,
                    *, impl: str = "ref") -> jax.Array:
-    _check_impl(impl)
-    if impl == "ref":
-        return _ref.gather_strided(window, stride, offset, vl)
-    from repro.kernels import strided as _strided
-    return _strided.gather_strided(window, stride, offset, vl,
-                                   compiled=impl == "pallas")
+    _warn("gather_strided", "vx.gather(vx.Strided(...), window)")
+    spec = vx.Strided(n=window.shape[-1], stride=stride, vl=vl,
+                      offset=offset)
+    return vx.gather(spec, window, policy=impl)
 
 
 def scatter_strided(window: jax.Array, values: jax.Array, stride: int,
                     offset: int, *, impl: str = "ref") -> jax.Array:
-    _check_impl(impl)
-    if impl == "ref":
-        return _ref.scatter_strided(window, values, stride, offset)
-    from repro.kernels import strided as _strided
-    return _strided.scatter_strided(window, values, stride, offset,
-                                    compiled=impl == "pallas")
+    _warn("scatter_strided", "vx.scatter(vx.Strided(...), window, values)")
+    spec = vx.Strided(n=window.shape[-1], stride=stride,
+                      vl=values.shape[-1], offset=offset)
+    return vx.scatter(spec, window, values, policy=impl)
 
 
 def gather_strided_rt(window: jax.Array, stride, offset: int, vl: int,
                       *, impl: str = "ref") -> jax.Array:
-    """Runtime-stride gather: static Python strides take the normal impl
-    dispatch; TRACED strides dispatch through the plan bank's ``lax.switch``
-    (core/accessfuse.py) — compiled constant masks for banked strides
-    (±1..8), dynamic-count network otherwise.  Either sign engages the
-    Reverser."""
-    import numpy as _np
-    if isinstance(stride, (int, _np.integer)) and int(stride) > 0:
-        return gather_strided(window, int(stride), offset, vl, impl=impl)
-    from repro.core import accessfuse
-    return accessfuse.bank_gather_strided(window, stride, offset, vl)
+    _warn("gather_strided_rt",
+          "vx.gather(vx.Strided(stride=vx.BANK, ...), window, stride=s)")
+    spec = vx.Strided(n=window.shape[-1], stride=vx.BANK, vl=vl,
+                      offset=offset)
+    return vx.gather(spec, window, stride=stride, policy=impl)
 
 
 def scatter_strided_rt(window: jax.Array, values: jax.Array, stride,
                        offset: int, *, impl: str = "ref") -> jax.Array:
-    """Runtime-stride scatter twin of :func:`gather_strided_rt`."""
-    import numpy as _np
-    if isinstance(stride, (int, _np.integer)) and int(stride) > 0:
-        return scatter_strided(window, values, int(stride), offset,
-                               impl=impl)
-    from repro.core import accessfuse
-    return accessfuse.bank_scatter_strided(window, values, stride, offset)
+    _warn("scatter_strided_rt",
+          "vx.scatter(vx.Strided(stride=vx.BANK, ...), window, values, "
+          "stride=s)")
+    spec = vx.Strided(n=window.shape[-1], stride=vx.BANK,
+                      vl=values.shape[-1], offset=offset)
+    return vx.scatter(spec, window, values, stride=stride, policy=impl)
 
 
 def gather_strided_many(windows: jax.Array, specs, vl: int,
                         *, impl: str = "ref") -> jax.Array:
-    """A same-shape gathers with per-access (stride, offset) specs in ONE
-    launch with one concatenated mask operand.  windows: (A, ..., n)."""
-    _check_impl(impl)
-    if impl == "ref":
-        import jax.numpy as jnp
-        return jnp.stack([_ref.gather_strided(windows[a], s, o, vl)
-                          for a, (s, o) in enumerate(specs)])
-    from repro.kernels import strided as _strided
-    return _strided.gather_strided_fused(windows, tuple(specs), vl,
-                                         compiled=impl == "pallas")
+    _warn("gather_strided_many", "vx.gather_many([vx.Strided(...)], windows)")
+    n = windows.shape[-1]
+    vspecs = [vx.Strided(n=n, stride=s, vl=vl, offset=o) for s, o in specs]
+    return vx.gather_many(vspecs, windows, policy=impl)
 
 
 def deinterleave_many(aos_list: Sequence[jax.Array], fields: int, *,
                       impl: str = "ref") -> list[list[jax.Array]]:
-    """A same-shape segment loads in ONE launch (stacked leading axis)."""
-    _check_impl(impl)
-    if impl != "ref":
-        from repro.kernels import segment as _segment
-        return _segment.deinterleave_many(list(aos_list), fields,
-                                          fused=impl == "pallas")
-    import jax.numpy as jnp
-    outs = deinterleave(jnp.stack(list(aos_list)), fields, impl="ref")
-    return [[o[a] for o in outs] for a in range(len(aos_list))]
+    _warn("deinterleave_many", "vx.gather_many(vx.Segment(...), aos_list)")
+    spec = vx.Segment(n=aos_list[0].shape[-1], fields=fields)
+    return vx.gather_many(spec, list(aos_list), policy=impl)
 
 
 def interleave_many(groups: Sequence[Sequence[jax.Array]], *,
                     impl: str = "ref") -> list[jax.Array]:
-    """A same-shape segment stores in ONE launch (stacked leading axis)."""
-    _check_impl(impl)
-    import jax.numpy as jnp
+    _warn("interleave_many", "vx.scatter_many(vx.Segment(...), groups)")
     nf = len(groups[0])
-    stacked = [jnp.stack([g[f] for g in groups]) for f in range(nf)]
-    out = interleave(stacked, impl=impl)
-    return [out[a] for a in range(len(groups))]
+    spec = vx.Segment(n=nf * groups[0][0].shape[-1], fields=nf)
+    return vx.scatter_many(spec, [list(g) for g in groups], policy=impl)
 
 
 def deinterleave(aos: jax.Array, fields: int, *, impl: str = "ref"
                  ) -> list[jax.Array]:
-    _check_impl(impl)
-    if impl == "ref":
-        return _ref.deinterleave(aos, fields)
-    from repro.kernels import segment as _segment
-    return _segment.deinterleave(aos, fields, fused=impl == "pallas")
+    _warn("deinterleave", "vx.transpose(vx.Segment(...), aos)")
+    return vx.transpose(vx.Segment(n=aos.shape[-1], fields=fields), aos,
+                        policy=impl)
 
 
 def interleave(soa: Sequence[jax.Array], *, impl: str = "ref") -> jax.Array:
-    _check_impl(impl)
-    if impl == "ref":
-        return _ref.interleave(list(soa))
-    from repro.kernels import segment as _segment
-    return _segment.interleave(list(soa), fused=impl == "pallas")
+    _warn("interleave", "vx.transpose(vx.Segment(...), [fields...])")
+    parts = list(soa)
+    spec = vx.Segment(n=len(parts) * parts[0].shape[-1], fields=len(parts))
+    return vx.transpose(spec, parts, policy=impl)
 
 
 def compact_rows(rows: jax.Array, mask: jax.Array, *, impl: str = "ref"
                  ) -> tuple[jax.Array, jax.Array]:
-    from repro.kernels import moe_compact as _mc
-    fn = _pick(impl, _ref.compact_rows, _mc.compact_rows)
-    return fn(rows, mask)
+    _warn("compact_rows", "vx.compact(vx.Compact(...), mask, rows)")
+    return vx.compact(vx.Compact(n=rows.shape[0]), mask, rows, policy=impl)
 
 
 def expand_rows(packed: jax.Array, mask: jax.Array, *, impl: str = "ref"
                 ) -> jax.Array:
-    from repro.kernels import moe_compact as _mc
-    fn = _pick(impl, _ref.expand_rows, _mc.expand_rows)
-    return fn(packed, mask)
+    _warn("expand_rows", "vx.scatter(vx.Compact(...), mask, packed)")
+    return vx.scatter(vx.Compact(n=mask.shape[0]), mask, packed,
+                      policy=impl)
 
 
 def shift_gather(x: jax.Array, shift: jax.Array, valid: jax.Array,
                  *, impl: str = "pallas") -> jax.Array:
-    """Raw DROM gather (no closed-form SCG) — pallas-only primitive."""
-    from repro.kernels import shift_gather as _sg
-    from repro.core import shiftnet
-    if impl == "pallas":
-        return _sg.shift_gather(x, shift, valid)
-    res = shiftnet.gather_network(x, shift, valid, axis=-1)
-    import jax.numpy as jnp
-    return jnp.where(res.valid, res.payload, jnp.zeros_like(res.payload))
+    _warn("shift_gather", "vx.gather(vx.Indexed(...), x, shift=, valid=)")
+    return vx.gather(vx.Indexed(n=x.shape[-1]), x, shift=shift,
+                     valid=valid, policy=impl)
 
 
 def shift_scatter(x: jax.Array, shift: jax.Array, valid: jax.Array,
                   *, impl: str = "pallas") -> tuple[jax.Array, jax.Array]:
-    """Raw DROM scatter — returns (payload, occupancy mask)."""
-    from repro.kernels import shift_scatter as _ss
-    from repro.core import shiftnet
-    if impl == "pallas":
-        return _ss.shift_scatter(x, shift, valid)
-    res = shiftnet.scatter_network(x, shift, valid, axis=-1)
-    import jax.numpy as jnp
-    return (jnp.where(res.valid, res.payload, jnp.zeros_like(res.payload)),
-            jnp.broadcast_to(res.valid, x.shape))
+    _warn("shift_scatter", "vx.scatter(vx.Indexed(...), None, x, shift=, "
+          "valid=)")
+    return vx.scatter(vx.Indexed(n=x.shape[-1]), None, x, shift=shift,
+                      valid=valid, policy=impl)

@@ -18,7 +18,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import drom
+from repro import vx
 from repro.models import layers
 
 NEG_INF = -1e30
@@ -54,7 +54,7 @@ def init_attention(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
 
 def qkv_project(params, x: jax.Array, n_heads: int, n_kv: int, head_dim: int,
                 positions: jax.Array, rope_theta: float, *,
-                impl: str = "ref"):
+                policy=None):
     """x: (B, S, d) -> q (B,S,H,D), and the interleaved kv beat (B,S,K,2D).
 
     The kv beat is cache-layout-ready (AoS); splitting for use in attention
@@ -63,13 +63,15 @@ def qkv_project(params, x: jax.Array, n_heads: int, n_kv: int, head_dim: int,
     B, S, _ = x.shape
     q = (x @ params["wq"]).reshape(B, S, n_heads, head_dim)
     kv = (x @ params["wkv"]).reshape(B, S, n_kv, 2 * head_dim)
-    k, v = drom.deinterleave(kv, 2, impl=impl)
+    k, v = vx.transpose(vx.Segment(n=kv.shape[-1], fields=2), kv,
+                        policy=policy)
     if params.get("q_norm") is not None:
         q = layers.rms_norm(q, params["q_norm"])
         k = layers.rms_norm(k, params["k_norm"])
     q = layers.rope(q, positions, rope_theta)
     k = layers.rope(k, positions, rope_theta)
-    kv = drom.interleave([k, v], impl=impl)  # re-pack post-RoPE beat
+    kv = vx.transpose(vx.Segment(n=kv.shape[-1], fields=2), [k, v],
+                      policy=policy)  # re-pack post-RoPE beat
     return q, k, v, kv
 
 
@@ -342,9 +344,10 @@ def init_cross_attention(key, d_model, n_heads, n_kv, head_dim, dtype) -> dict:
 
 
 def encoder_kv(params, enc_out: jax.Array, n_kv: int, head_dim: int,
-               *, impl: str = "ref"):
+               *, policy=None):
     """Project encoder output once per decode session (whisper)."""
     B, S, _ = enc_out.shape
     kv = (enc_out @ params["wkv"]).reshape(B, S, n_kv, 2 * head_dim)
-    k, v = drom.deinterleave(kv, 2, impl=impl)
+    k, v = vx.transpose(vx.Segment(n=kv.shape[-1], fields=2), kv,
+                        policy=policy)
     return k, v

@@ -16,7 +16,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.core import accessfuse, drom
+from repro import vx
 from repro.kernels import kv_interleaved
 from repro.models import attention, layers
 from repro.models.ssm import init_mamba_cache, mamba_decode_step
@@ -97,6 +97,7 @@ def decode_step(params, cache: dict, token: jax.Array, cfg: ModelConfig,
         from repro.models import encdec
         return encdec.decode_step(params, cache, token, cfg, ctx)
     fuse = cfg.step_fusion if fuse is None else fuse
+    pol = cfg.vx_policy
     B = token.shape[0]
     pos = cache["len"]
     x = layers.embed(token, params["embed"]).astype(cfg.cdtype)
@@ -108,13 +109,13 @@ def decode_step(params, cache: dict, token: jax.Array, cfg: ModelConfig,
         # superblocks ((NS, B, Sc, K, 2D)), so this single call covers the
         # full depth; same-shape positions share one launch.
         leaves = [cache["blocks"][f"pos{i}"] for i in attn_pos]
-        splits = kv_interleaved.split_kv_step(leaves, impl=cfg.kernel_impl)
+        splits = kv_interleaved.split_kv_step(leaves, policy=pol)
         pre_split = {f"pos{i}": splits[j] for j, i in enumerate(attn_pos)}
-    beat_impl = (accessfuse.pick_impl(B * cfg.n_kv_heads * 2 * cfg.hd,
-                                      cfg.kernel_impl)
-                 if fuse else cfg.kernel_impl)
-    ffn_impl = (accessfuse.pick_impl(B * 2 * cfg.d_ff, cfg.kernel_impl)
-                if fuse else cfg.kernel_impl)
+    # single-token reorganizations (QKV beat split, GLU field split) ride
+    # the XLA path below the policy's fusion threshold during fused decode
+    beat_pol = (pol.for_elems(B * cfg.n_kv_heads * 2 * cfg.hd)
+                if fuse else pol)
+    ffn_pol = pol.for_elems(B * 2 * cfg.d_ff) if fuse else pol
 
     def sb_step(x, inp):
         sb_p, sb_c, sb_pre = inp
@@ -126,7 +127,7 @@ def decode_step(params, cache: dict, token: jax.Array, cfg: ModelConfig,
                 positions = jnp.broadcast_to(pos, (B, 1))
                 q, k, v, kv = attention.qkv_project(
                     p["attn"], h[:, None], cfg.n_heads, cfg.n_kv_heads,
-                    cfg.hd, positions, cfg.rope_theta, impl=beat_impl)
+                    cfg.hd, positions, cfg.rope_theta, policy=beat_pol)
                 kvc = sb_c[f"pos{i}"]                      # (B, Sc, K, 2D)
                 sc = kvc.shape[1]
                 slot = jax.lax.rem(pos, sc)
@@ -139,8 +140,9 @@ def decode_step(params, cache: dict, token: jax.Array, cfg: ModelConfig,
                     v_all = jax.lax.dynamic_update_slice_in_dim(
                         v_pre, v.astype(kvc.dtype), slot, axis=1)
                 else:
-                    k_all, v_all = drom.deinterleave(kvc, 2,
-                                                     impl=cfg.kernel_impl)
+                    k_all, v_all = vx.transpose(
+                        vx.Segment(n=kvc.shape[-1], fields=2), kvc,
+                        policy=pol)
                 eff_len = jnp.minimum(pos + 1, sc)
                 out = attention.decode_attention(
                     q[:, 0], k_all, v_all, eff_len, window=None)
@@ -171,7 +173,7 @@ def decode_step(params, cache: dict, token: jax.Array, cfg: ModelConfig,
                 new_c[f"pos{i}"] = st
             if cfg.pos_has_ffn(i):
                 x2, _ = _ffn_apply(p, x[:, None], cfg, ctx, i,
-                                   impl=ffn_impl)
+                                   policy=ffn_pol)
                 x = x2[:, 0]
         return x, new_c
 

@@ -12,7 +12,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.core import drom
+from repro import vx
 from repro.models import attention, layers
 
 
@@ -71,7 +71,8 @@ def encode(params, frames: jax.Array, cfg, ctx) -> jax.Array:
         q = (h @ blk["attn"]["wq"]).reshape(B, F, cfg.n_heads, cfg.hd)
         kv = (h @ blk["attn"]["wkv"]).reshape(B, F, cfg.n_kv_heads,
                                               2 * cfg.hd)
-        k, v = drom.deinterleave(kv, 2, impl=cfg.kernel_impl)
+        k, v = vx.transpose(vx.Segment(n=kv.shape[-1], fields=2), kv,
+                            policy=cfg.vx_policy)
         out = attention.flash_attention(q, k, v, causal=False, window=None,
                                         q_chunk=min(512, F),
                                         kv_chunk=min(512, F), ctx=ctx)
@@ -97,7 +98,8 @@ def _decoder_self_and_cross(sb_p, cross_p, x, cfg, ctx, positions, enc_kv,
     h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
     q, k, v, kv = attention.qkv_project(p["attn"], h, cfg.n_heads,
                                         cfg.n_kv_heads, cfg.hd, positions,
-                                        cfg.rope_theta, impl=cfg.kernel_impl)
+                                        cfg.rope_theta,
+                                        policy=cfg.vx_policy)
     out = attention.flash_attention(q, k, v, causal=True, window=None,
                                     q_chunk=min(512, S), kv_chunk=min(512, S),
                                     ctx=ctx)
@@ -126,7 +128,7 @@ def forward(params, batch, cfg, ctx, *, mode: str = "train"):
         sb_p, cross_p = inp
         ck, cv = attention.encoder_kv(cross_p["xattn"], enc_out,
                                       cfg.n_kv_heads, cfg.hd,
-                                      impl=cfg.kernel_impl)
+                                      policy=cfg.vx_policy)
         x, kv = _decoder_self_and_cross(sb_p, cross_p, x, cfg, ctx,
                                         positions, (ck, cv), mode)
         return x, (kv if mode == "prefill" else 0)
@@ -195,17 +197,20 @@ def decode_step(params, cache, token, cfg, ctx):
         positions = jnp.broadcast_to(pos, (B, 1))
         q, _, _, kv = attention.qkv_project(p["attn"], h[:, None],
                                             cfg.n_heads, cfg.n_kv_heads,
-                                            cfg.hd, positions, cfg.rope_theta,
-                                            impl=cfg.kernel_impl)
+                                            cfg.hd, positions,
+                                            cfg.rope_theta,
+                                            policy=cfg.vx_policy)
         sc = kvc.shape[1]
         kvc = jax.lax.dynamic_update_slice_in_dim(
             kvc, kv.astype(kvc.dtype), jax.lax.rem(pos, sc), axis=1)
-        k_all, v_all = drom.deinterleave(kvc, 2, impl="ref")
+        k_all, v_all = vx.transpose(
+            vx.Segment(n=kvc.shape[-1], fields=2), kvc, policy="ref")
         out = attention.decode_attention(q[:, 0], k_all, v_all,
                                          jnp.minimum(pos + 1, sc))
         x = x + (out.reshape(B, -1) @ p["attn"]["wo"]).astype(x.dtype)
         # cross attention against cached encoder K/V
-        ek, ev = drom.deinterleave(enc_kv, 2, impl="ref")
+        ek, ev = vx.transpose(
+            vx.Segment(n=enc_kv.shape[-1], fields=2), enc_kv, policy="ref")
         hx = layers.rms_norm(x, cross_p["ln"], cfg.norm_eps)
         qx = (hx @ cross_p["xattn"]["wq"]).reshape(B, cfg.n_heads, cfg.hd)
         xo = attention.decode_attention(qx, ek, ev, ek.shape[1])

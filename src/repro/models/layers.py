@@ -5,7 +5,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import drom
+from repro import vx
 
 
 def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
@@ -55,11 +55,12 @@ def unembed(x: jax.Array, table: jax.Array) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def glu_ffn(params, x: jax.Array, *, fused: bool = False,
-            impl: str = "ref") -> jax.Array:
+            policy=None) -> jax.Array:
     """SwiGLU. params: {'wi': (d, 2f) or {'wg','wu'}: (d, f), 'wo': (f, d)}."""
     if fused:
         gu = x @ params["wi"]               # (..., 2f) interleaved AoS
-        gate, up = drom.deinterleave(gu, 2, impl=impl)
+        gate, up = vx.transpose(vx.Segment(n=gu.shape[-1], fields=2), gu,
+                                policy=policy)
     else:
         gate = x @ params["wg"]
         up = x @ params["wu"]

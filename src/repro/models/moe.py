@@ -24,7 +24,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import accessfuse
+from repro import vx
 
 
 class MoESpec(NamedTuple):
@@ -61,7 +61,7 @@ def _compact_ids(mine: jax.Array, cap: int, dispatch: str) -> tuple[jax.Array, j
         # runtime-count member of the plan bank (core/accessfuse.py):
         # take-masks derived once from the prefix-sum counts, ids pay one
         # shift+select per layer, no conflict reductions
-        packed = accessfuse.compact_indices(mine, cap)
+        packed = vx.compact(vx.Compact(n=n, cap=cap), mine)
     else:  # argsort baseline (the XLA-native path)
         order = jnp.argsort(~mine, stable=True)
         packed = order[:cap].astype(jnp.int32)

@@ -67,7 +67,10 @@ class ModelConfig:
     compute_dtype: str = "float32"
     remat: str = "full"                    # "none" | "full" | "dots"
     scan_layers: bool = True
-    kernel_impl: str = "ref"               # EARTH op impl in-model
+    # EARTH access lowering in-model: an impl string pins it; None defers
+    # to vx.Policy.default() (REPRO_VX_IMPL env var, else platform) — ONE
+    # knob for the whole stack (see repro/vx/policy.py).
+    kernel_impl: str | None = None
     step_fusion: bool = True               # whole-step access fusion (decode)
     ssm_chunk: int = 128
 
@@ -92,6 +95,13 @@ class ModelConfig:
     @property
     def cdtype(self):
         return jnp.dtype(self.compute_dtype)
+
+    @property
+    def vx_policy(self):
+        """The access policy this model lowers through (vx.resolve of
+        ``kernel_impl``: a pinned impl, or the ambient policy)."""
+        from repro import vx
+        return vx.resolve(self.kernel_impl)
 
     def pos_has_ffn(self, i: int) -> bool:
         kind = self.block_pattern[i]
@@ -176,8 +186,8 @@ def param_count(params) -> int:
 # Superblock application (train / prefill / decode)
 # ---------------------------------------------------------------------------
 
-def _ffn_apply(p, x, cfg: ModelConfig, ctx, i: int, *, impl: str | None = None):
-    """``impl`` overrides cfg.kernel_impl for the GLU field split — the
+def _ffn_apply(p, x, cfg: ModelConfig, ctx, i: int, *, policy=None):
+    """``policy`` overrides cfg.vx_policy for the GLU field split — the
     step scheduler (core/accessfuse.py) inlines single-token splits on the
     XLA path during fused decode instead of paying a kernel launch."""
     aux = jnp.zeros((), jnp.float32)
@@ -188,7 +198,8 @@ def _ffn_apply(p, x, cfg: ModelConfig, ctx, i: int, *, impl: str | None = None):
         y, aux = moe_layer(p["moe"], h, cfg.moe, ctx)
     elif cfg.mlp == "swiglu":
         y = layers.glu_ffn(p["ffn"], h, fused=cfg.fused_glu,
-                           impl=impl or cfg.kernel_impl)
+                           policy=policy if policy is not None
+                           else cfg.vx_policy)
     else:
         y = layers.mlp_ffn(p["mlp"], h)
     return x + y, aux
@@ -200,7 +211,7 @@ def _attn_apply(p, x, cfg: ModelConfig, ctx, i: int, positions,
     h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
     q, k, v, kv = attention.qkv_project(
         p["attn"], h, cfg.n_heads, cfg.n_kv_heads, cfg.hd, positions,
-        cfg.rope_theta, impl=cfg.kernel_impl)
+        cfg.rope_theta, policy=cfg.vx_policy)
     B, S = x.shape[:2]
     window = cfg.window_pattern[i]
     out = attention.flash_attention(q, k, v, causal=True, window=window,

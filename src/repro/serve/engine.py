@@ -109,10 +109,10 @@ def jit_decode_step(cfg: ModelConfig, ctx: ShardCtx, scfg: ServeConfig,
     models (Jamba-398B) shard weights 2D over (data x model) even though
     the serving batch only uses the model axis (weights are gathered
     layer-by-layer under the superblock scan)."""
-    from repro.core import accessfuse
+    from repro import vx
     # one-time host compile of the FIELD=2 segment plans the fused KV
     # split consults (decode takes no runtime-stride path: skip those)
-    accessfuse.warm(2 * cfg.hd, strided=False, fields=(2,))
+    vx.warm(2 * cfg.hd, strided=False, fields=(2,))
 
     if cfg.encoder is not None:
         def serve_step(params, cache, token):

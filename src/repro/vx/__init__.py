@@ -1,0 +1,56 @@
+"""repro.vx — the declarative vector-access API (EARTH's one datapath).
+
+The paper's core claim is a *single* architectural path for all vector
+memory access: strided gather/scatter, segment transposition, and
+compaction all route through one coalescer + shift network.  ``vx`` is
+that claim as an API — one spec type, four verbs, one policy:
+
+    from repro import vx
+
+    spec = vx.Strided(n=64, stride=4, offset=2, vl=8)
+    dense = vx.gather(spec, window)                    # strided load
+    win2  = vx.scatter(spec, window, dense)            # strided store
+
+    k, v  = vx.transpose(vx.Segment(n=2 * d, fields=2), kv_beat)
+    beat  = vx.transpose(vx.Segment(n=2 * d, fields=2), [k, v])
+
+    packed, pv = vx.compact(vx.Compact(n=T), mask, rows)
+    ids        = vx.compact(vx.Compact(n=T, cap=C), mask)   # MoE dispatch
+
+    # runtime (traced) stride -> plan-bank lax.switch dispatch
+    out = vx.gather(vx.Strided(n=64, stride=vx.BANK, vl=8), win, stride=s)
+
+    # whole-step batched forms (one launch, one mask operand)
+    outs = vx.gather_many([spec_a, spec_b], windows)
+    kvs  = vx.gather_many(vx.Segment(n=2 * d, fields=2), kv_caches)
+
+Lowering is policy-driven, never a per-call ``impl=`` string:
+
+    with vx.use("pallas"):          # or vx.use(Policy(...)) / env default
+        ...                         # every verb in scope lowers to Pallas
+
+Resolution order: explicit ``policy=`` arg > innermost ``vx.use`` scope >
+``vx.Policy.default()`` (the ``REPRO_VX_IMPL`` env var, else platform).
+Plans and lowered executors are memoized in ONE spec-keyed LRU
+(:data:`vx.PLANS`) whose keys include dtype and vl.
+
+The legacy entry points (``kernels/ops.py``, ``core/drom.py``) survive as
+deprecated shims delegating here; internal code must not use them (CI
+escalates the shims' DeprecationWarnings to errors).
+"""
+from repro.vx._dispatch import (compact, gather, gather_many, scatter,
+                                scatter_many, transpose, warm)
+from repro.vx.cache import PLANS, PlanCache
+from repro.vx.policy import (BANK_FIELDS, BANK_STRIDES, IMPLS,
+                             MIN_FUSED_ELEMS, Policy, current, resolve, use)
+from repro.vx.spec import (BANK, AccessSpec, Compact, Indexed, Segment,
+                           Strided)
+
+__all__ = [
+    "AccessSpec", "Strided", "Segment", "Indexed", "Compact", "BANK",
+    "gather", "scatter", "transpose", "compact", "gather_many",
+    "scatter_many", "warm",
+    "Policy", "use", "current", "resolve",
+    "PLANS", "PlanCache",
+    "MIN_FUSED_ELEMS", "BANK_STRIDES", "BANK_FIELDS", "IMPLS",
+]

@@ -1,0 +1,335 @@
+"""Policy-driven lowering of vx verbs onto the EARTH kernel stack.
+
+This is the ONE routing layer between the declarative API
+(``spec + verb + policy``) and the mechanism modules:
+
+* ``kernels/ref.py``       — pure-jnp oracles (impl="ref", the XLA path),
+* ``kernels/strided.py``   — compiled-plan / dynamic-count Pallas kernels,
+* ``kernels/segment.py``   — fused segment-transposition kernels,
+* ``kernels/moe_compact.py`` and ``kernels/shift_{gather,scatter}.py``,
+* ``core/accessfuse.py``   — runtime-stride plan bank + compaction counts.
+
+Every static-pattern verb resolves through an *executor* memoized in the
+unified plan cache (``repro.vx.cache.PLANS``) under the spec's full key —
+which includes dtype and vl — so plans and lowered closures are compiled
+once per (spec, impl) and can never collide across element types.
+
+Nothing here imports ``kernels/ops.py`` or ``core/drom.py``: those are the
+deprecated shims, and they delegate *to* this module.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.vx.cache import PLANS
+from repro.vx.policy import Policy, resolve
+from repro.vx.spec import (BANK, AccessSpec, Compact, Indexed, Segment,
+                           Strided)
+
+
+def _is_static(stride) -> bool:
+    return isinstance(stride, (int, np.integer))
+
+
+def _executor(tag: str, spec: AccessSpec, impl: str, builder):
+    return PLANS.get(("exec", tag, *spec.key(), impl), builder)
+
+
+# ---------------------------------------------------------------------------
+# gather / scatter (Strided, Indexed)
+# ---------------------------------------------------------------------------
+
+def _static_strided(spec: Strided, stride) -> Strided | None:
+    """The spec with a compile-time stride folded in, or None if the
+    stride is runtime (traced)."""
+    if not spec.runtime:
+        if stride is not None:
+            raise ValueError(
+                f"stride= was passed but {spec} already pins stride="
+                f"{spec.stride}; use stride=vx.BANK in the spec for "
+                f"call-time strides")
+        return spec
+    if stride is None:
+        raise ValueError(
+            "spec has stride=vx.BANK: pass the runtime stride as stride=")
+    if _is_static(stride):
+        return dataclasses.replace(spec, stride=int(stride))
+    return None
+
+
+def _gather_strided_exec(spec: Strided, impl: str):
+    s, o, vl = spec.stride, spec.offset, spec.vl
+
+    def build():
+        if s < 0:
+            from repro.core import accessfuse
+            return lambda w: accessfuse.bank_gather_strided(w, s, o, vl)
+        if impl == "ref":
+            from repro.kernels import ref
+            return lambda w: ref.gather_strided(w, s, o, vl)
+        from repro.kernels import strided
+        return lambda w: strided.gather_strided(w, s, o, vl,
+                                                compiled=impl == "pallas")
+
+    return _executor("gather", spec, impl if s > 0 else "bank", build)
+
+
+def _scatter_strided_exec(spec: Strided, impl: str):
+    s, o = spec.stride, spec.offset
+
+    def build():
+        if s < 0:
+            from repro.core import accessfuse
+            return lambda w, v: accessfuse.bank_scatter_strided(w, v, s, o)
+        if impl == "ref":
+            from repro.kernels import ref
+            return lambda w, v: ref.scatter_strided(w, v, s, o)
+        from repro.kernels import strided
+        return lambda w, v: strided.scatter_strided(
+            w, v, s, o, compiled=impl == "pallas")
+
+    return _executor("scatter", spec, impl if s > 0 else "bank", build)
+
+
+def gather(spec: AccessSpec, buf: jax.Array, *, stride=None, shift=None,
+           valid=None, policy: Policy | str | None = None) -> jax.Array:
+    """Dense read through the access described by ``spec``.
+
+    * :class:`Strided` — ``(..., n) -> (..., vl)``; a ``stride=vx.BANK``
+      spec takes the runtime stride via ``stride=`` and dispatches through
+      the plan bank's ``lax.switch`` (compiled masks for banked strides,
+      dynamic-count network otherwise; either sign engages the Reverser).
+    * :class:`Indexed` — raw DROM gather with explicit per-lane ``shift``
+      and ``valid`` operands.
+    """
+    pol = resolve(policy)
+    if isinstance(spec, Strided):
+        spec = spec.bind(buf.dtype)
+        static = _static_strided(spec, stride)
+        if static is not None:
+            return _gather_strided_exec(static, pol.impl)(buf)
+        from repro.core import accessfuse
+        return accessfuse.bank_gather_strided(buf, stride, spec.offset,
+                                              spec.vl)
+    if isinstance(spec, Indexed):
+        if shift is None or valid is None:
+            raise ValueError("Indexed gather needs shift= and valid=")
+        if pol.impl == "ref":
+            from repro.core import shiftnet
+            res = shiftnet.gather_network(buf, shift, valid, axis=-1)
+            return jnp.where(res.valid, res.payload,
+                             jnp.zeros_like(res.payload))
+        from repro.kernels import shift_gather as _sg
+        return _sg.shift_gather(buf, shift, valid)
+    raise TypeError(f"gather does not accept {type(spec).__name__} specs")
+
+
+def scatter(spec: AccessSpec, buf: jax.Array, values: jax.Array, *,
+            stride=None, shift=None, valid=None,
+            policy: Policy | str | None = None):
+    """Write/merge through the access described by ``spec``.
+
+    * :class:`Strided` — merge dense ``values`` into strided positions of
+      ``buf`` (read-modify-write; returns the updated window).
+    * :class:`Indexed` — raw DROM scatter of ``values`` (``buf`` is unused;
+      pass None); returns ``(payload, occupancy)``.
+    * :class:`Compact` — expansion (the compaction inverse): ``buf`` is the
+      boolean mask, ``values`` the packed rows; returns rows scattered back
+      to the mask positions, zeros elsewhere.
+    """
+    pol = resolve(policy)
+    if isinstance(spec, Strided):
+        spec = spec.bind(buf.dtype)
+        static = _static_strided(spec, stride)
+        if static is not None:
+            return _scatter_strided_exec(static, pol.impl)(buf, values)
+        from repro.core import accessfuse
+        return accessfuse.bank_scatter_strided(buf, values, stride,
+                                               spec.offset)
+    if isinstance(spec, Indexed):
+        if shift is None or valid is None:
+            raise ValueError("Indexed scatter needs shift= and valid=")
+        if pol.impl == "ref":
+            from repro.core import shiftnet
+            res = shiftnet.scatter_network(values, shift, valid, axis=-1)
+            return (jnp.where(res.valid, res.payload,
+                              jnp.zeros_like(res.payload)),
+                    jnp.broadcast_to(res.valid, values.shape))
+        from repro.kernels import shift_scatter as _ss
+        return _ss.shift_scatter(values, shift, valid)
+    if isinstance(spec, Compact):
+        if pol.impl == "ref":
+            from repro.kernels import ref
+            return ref.expand_rows(values, buf)
+        from repro.kernels import moe_compact
+        return moe_compact.expand_rows(values, buf)
+    raise TypeError(f"scatter does not accept {type(spec).__name__} specs")
+
+
+# ---------------------------------------------------------------------------
+# transpose (Segment): AoS <-> SoA
+# ---------------------------------------------------------------------------
+
+def _deinterleave_exec(spec: Segment, impl: str):
+    fields = spec.fields
+
+    def build():
+        if impl == "ref":
+            from repro.kernels import ref
+            return lambda a: ref.deinterleave(a, fields)
+        from repro.kernels import segment
+        return lambda a: segment.deinterleave(a, fields,
+                                              fused=impl == "pallas")
+
+    return _executor("deint", spec, impl, build)
+
+
+def _interleave_exec(spec: Segment, impl: str):
+    def build():
+        if impl == "ref":
+            from repro.kernels import ref
+            return lambda parts: ref.interleave(parts)
+        from repro.kernels import segment
+        return lambda parts: segment.interleave(parts,
+                                                fused=impl == "pallas")
+
+    return _executor("int", spec, impl, build)
+
+
+def transpose(spec: Segment, x, *, policy: Policy | str | None = None):
+    """Segment transposition, direction inferred from the operand:
+
+    * a single AoS array ``(..., n)`` -> list of ``fields`` SoA arrays
+      ``(..., n/fields)`` (segment load / deinterleave),
+    * a sequence of ``fields`` SoA arrays -> one AoS array (segment store /
+      interleave).
+    """
+    if not isinstance(spec, Segment):
+        raise TypeError(f"transpose needs a Segment spec, got "
+                        f"{type(spec).__name__}")
+    pol = resolve(policy)
+    if isinstance(x, (list, tuple)):
+        parts = list(x)
+        if len(parts) != spec.fields:
+            raise ValueError(f"expected {spec.fields} fields, "
+                             f"got {len(parts)}")
+        spec = spec.bind(parts[0].dtype)
+        return _interleave_exec(spec, pol.impl)(parts)
+    if x.shape[-1] != spec.n:
+        raise ValueError(f"AoS beat has {x.shape[-1]} lanes, spec.n is "
+                         f"{spec.n}")
+    spec = spec.bind(x.dtype)
+    return _deinterleave_exec(spec, pol.impl)(x)
+
+
+# ---------------------------------------------------------------------------
+# compact (Compact): masked compaction / packed indices
+# ---------------------------------------------------------------------------
+
+def compact(spec: Compact, mask: jax.Array, rows: jax.Array | None = None,
+            *, policy: Policy | str | None = None):
+    """Order-preserving masked compaction.
+
+    With ``rows`` — pack the masked rows to the front; returns
+    ``(packed_rows, packed_valid)``, truncated to ``spec.capacity`` rows
+    when ``cap`` is set.  Without ``rows`` — return the packed *indices*
+    of set mask bits (first ``spec.capacity`` kept), the MoE dispatch
+    primitive (runtime-count plan-bank member; no conflict reductions)."""
+    if not isinstance(spec, Compact):
+        raise TypeError(f"compact needs a Compact spec, got "
+                        f"{type(spec).__name__}")
+    pol = resolve(policy)  # validate even on the impl-independent path
+    if rows is None:
+        from repro.core import accessfuse
+        return accessfuse.compact_indices(mask, spec.capacity)
+    if pol.impl == "ref":
+        from repro.kernels import ref
+        packed, valid = ref.compact_rows(rows, mask)
+    else:
+        from repro.kernels import moe_compact
+        packed, valid = moe_compact.compact_rows(rows, mask)
+    cap = spec.capacity
+    if cap < packed.shape[0]:
+        packed = jax.lax.slice_in_dim(packed, 0, cap, axis=0)
+        valid = jax.lax.slice_in_dim(valid, 0, cap, axis=0)
+    return packed, valid
+
+
+# ---------------------------------------------------------------------------
+# batched forms: one launch for a whole step's same-shape accesses
+# ---------------------------------------------------------------------------
+
+def gather_many(specs, bufs, *, policy: Policy | str | None = None):
+    """Whole-step batched gather — ONE kernel launch, one mask operand.
+
+    * ``specs`` a sequence of :class:`Strided` sharing (n, vl) with
+      per-access (stride, offset), ``bufs`` the matching windows (a
+      sequence, or an already-stacked ``(A, ..., n)`` array): the fused
+      concatenated-mask kernel.  Returns the stacked ``(A, ..., vl)``.
+    * ``specs`` a single :class:`Segment`, ``bufs`` a sequence of
+      same-shape AoS arrays: the step-fused segment load.  Returns one
+      field list per input array.
+    """
+    pol = resolve(policy)
+    if isinstance(specs, Segment):
+        aos_list = list(bufs)
+        spec = specs.bind(aos_list[0].dtype)
+        if pol.impl != "ref":
+            from repro.kernels import segment
+            return segment.deinterleave_many(aos_list, spec.fields,
+                                             fused=pol.impl == "pallas")
+        outs = transpose(spec, jnp.stack(aos_list), policy=pol)
+        return [[o[a] for o in outs] for a in range(len(aos_list))]
+    specs = list(specs)
+    if not specs or not all(isinstance(s, Strided) for s in specs):
+        raise TypeError("gather_many needs Strided specs or one Segment")
+    vls = {s.vl for s in specs}
+    if len(vls) != 1 or len({s.n for s in specs}) != 1:
+        raise ValueError("fused gather needs one shared (n, vl)")
+    vl = vls.pop()
+    windows = bufs if isinstance(bufs, jax.Array) else jnp.stack(list(bufs))
+    pairs = tuple((s.stride, s.offset) for s in specs)
+    if pol.impl == "ref":
+        from repro.kernels import ref
+        return jnp.stack([ref.gather_strided(windows[a], s, o, vl)
+                          for a, (s, o) in enumerate(pairs)])
+    from repro.kernels import strided
+    return strided.gather_strided_fused(windows, pairs, vl,
+                                        compiled=pol.impl == "pallas")
+
+
+def scatter_many(spec: Segment, groups: Sequence[Sequence[jax.Array]], *,
+                 policy: Policy | str | None = None) -> list[jax.Array]:
+    """Step-fused segment store: A same-shape SoA groups, ONE launch.
+    Returns one AoS array per group."""
+    if not isinstance(spec, Segment):
+        raise TypeError("scatter_many needs a Segment spec")
+    pol = resolve(policy)
+    groups = [list(g) for g in groups]
+    nf = spec.fields
+    if len(groups) == 1:
+        return [transpose(spec, groups[0], policy=pol)]
+    stacked = [jnp.stack([g[f] for g in groups]) for f in range(nf)]
+    out = transpose(spec.bind(stacked[0].dtype), stacked, policy=pol)
+    return [out[a] for a in range(len(groups))]
+
+
+# ---------------------------------------------------------------------------
+# warm-up: precompile the plan bank for a window width
+# ---------------------------------------------------------------------------
+
+def warm(n: int, *, offset: int = 0, vl: int | None = None,
+         strided: bool = True, fields: tuple | None = None) -> None:
+    """Precompile runtime-stride bank plans and segment plans for a window
+    width (one-time host cost, so the first step never pays plan
+    compilation).  ``strided=False`` skips the +-stride slots — serving
+    only consults the segment plans (the KV FIELD=2 split)."""
+    from repro.core import accessfuse
+    from repro.vx.policy import BANK_FIELDS
+    accessfuse.warm(n, offset=offset, vl=vl, strided=strided,
+                    fields=BANK_FIELDS if fields is None else fields)

@@ -1,0 +1,168 @@
+"""AccessSpec — the frozen, hashable sum type describing a vector access.
+
+One spec fully determines a memory-access *pattern*: window width, stride
+(static Python int or the runtime :data:`BANK` sentinel), offset, vector
+length, field count, and element dtype.  Specs are pure data — hashable,
+comparable, and usable as plan-cache keys — so the dispatch layer
+(``repro.vx._dispatch``) can compile/look up a routing plan once per spec
+and the policy layer can pick a lowering without inspecting arrays.
+
+Four constructors (EARTH's four access archetypes):
+
+* :class:`Strided`  — ``out[i] = window[offset + i*stride]`` (LSDO / DROM
+  strided gather-scatter; ``stride=BANK`` defers the stride to call time
+  and routes through the runtime-stride plan bank).
+* :class:`Segment`  — AoS <-> SoA field transposition over an ``n``-lane
+  beat with ``fields`` interleaved fields (RCVRF segment access).
+* :class:`Indexed`  — raw shift-network access driven by explicit per-lane
+  (shift, valid) operands (the DROM primitive under everything else).
+* :class:`Compact`  — order-preserving masked compaction (the MoE dispatch
+  primitive) and its expansion inverse.
+
+``dtype`` and ``vl`` participate in ``key()`` — plan-cache entries can
+therefore never collide across element types or vector lengths (the PR 3
+cache-collision fix; regression-tested in tests/test_vx_api.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+
+class _Bank:
+    """Singleton marker: stride is a runtime (possibly traced) value."""
+
+    _instance: "_Bank | None" = None
+
+    def __new__(cls) -> "_Bank":
+        if cls._instance is None:
+            cls._instance = super().__new__(cls)
+        return cls._instance
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return "vx.BANK"
+
+
+#: Pass as ``Strided.stride`` to defer the stride to call time.  Static
+#: in-bank strides compile to constant-mask plans behind one ``lax.switch``;
+#: everything else takes the dynamic-count network (bit-exact).
+BANK = _Bank()
+
+
+def _dtype_str(dtype: Any) -> str | None:
+    if dtype is None:
+        return None
+    import numpy as np
+
+    return str(np.dtype(dtype))
+
+
+class AccessSpec:
+    """Mixin shared by the four spec dataclasses (not instantiable)."""
+
+    def key(self) -> tuple:
+        """Hashable cache key: class name + every field, BANK normalized."""
+        vals = []
+        for f in dataclasses.fields(self):  # type: ignore[arg-type]
+            v = getattr(self, f.name)
+            vals.append("bank" if v is BANK else v)
+        return (type(self).__name__, *vals)
+
+    def bind(self, dtype: Any) -> "AccessSpec":
+        """Spec with the element dtype filled in (no-op if already set).
+
+        Dispatch binds the payload's dtype before any cache lookup, so two
+        accesses that differ only in element type can never share a plan
+        entry."""
+        if getattr(self, "dtype", None) is not None:
+            return self
+        return dataclasses.replace(self, dtype=_dtype_str(dtype))
+
+
+@dataclasses.dataclass(frozen=True)
+class Strided(AccessSpec):
+    """``out[..., i] = window[..., offset + i*stride]`` for i < vl.
+
+    ``stride`` is a static Python int (either sign; negative engages the
+    §3.2.2 Reverser) or :data:`BANK` (runtime stride, supplied to the verb
+    as ``stride=``).
+    """
+
+    n: int
+    stride: Any                 # int | BANK
+    vl: int
+    offset: int = 0
+    dtype: str | None = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "dtype", _dtype_str(self.dtype))
+        if self.vl < 0:
+            raise ValueError(f"vl must be >= 0, got {self.vl}")
+        s = self.stride
+        if s is BANK:
+            return
+        s = int(s)
+        object.__setattr__(self, "stride", s)
+        if s == 0:
+            raise ValueError("stride 0 is a broadcast, not a strided access")
+        if self.vl == 0:
+            return
+        last = self.offset + (self.vl - 1) * s
+        lo, hi = (last, self.offset) if s < 0 else (self.offset, last)
+        if lo < 0 or hi >= self.n:
+            raise ValueError(
+                f"strided access [{lo}, {hi}] leaves the {self.n}-lane "
+                f"window: {self}")
+
+    @property
+    def runtime(self) -> bool:
+        return self.stride is BANK
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment(AccessSpec):
+    """AoS beat of ``n`` lanes <-> ``fields`` SoA fields of ``n/fields``."""
+
+    n: int
+    fields: int
+    dtype: str | None = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "dtype", _dtype_str(self.dtype))
+        if self.fields < 1 or self.n % self.fields:
+            raise ValueError(
+                f"segment needs n divisible by fields, got {self}")
+
+    @property
+    def field_len(self) -> int:
+        return self.n // self.fields
+
+
+@dataclasses.dataclass(frozen=True)
+class Indexed(AccessSpec):
+    """Raw DROM access over ``n`` lanes: routing is given explicitly as
+    per-lane (shift, valid) operands at call time (no closed-form SCG)."""
+
+    n: int
+    dtype: str | None = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "dtype", _dtype_str(self.dtype))
+
+
+@dataclasses.dataclass(frozen=True)
+class Compact(AccessSpec):
+    """Order-preserving masked compaction over ``n`` rows (MoE dispatch).
+
+    ``cap`` bounds the packed output length (defaults to ``n``)."""
+
+    n: int
+    cap: int | None = None
+    dtype: str | None = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "dtype", _dtype_str(self.dtype))
+
+    @property
+    def capacity(self) -> int:
+        return self.n if self.cap is None else min(self.cap, self.n)

@@ -25,9 +25,9 @@ def test_aos_roundtrip():
     w = jnp.ones((B, S), jnp.float32).at[:, -1].set(0.0)
     docs = jnp.full((B, S), 7, jnp.int32)
     for impl in ("ref", "pallas"):
-        aos = pack_records(toks, labels, w, docs, impl=impl)
+        aos = pack_records(toks, labels, w, docs, policy=impl)
         assert aos.shape == (B, FIELDS * S)
-        out = unpack_records(aos, impl=impl)
+        out = unpack_records(aos, policy=impl)
         np.testing.assert_array_equal(np.asarray(out["tokens"]),
                                       np.asarray(toks))
         np.testing.assert_array_equal(np.asarray(out["labels"]),

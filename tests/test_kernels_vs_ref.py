@@ -1,10 +1,14 @@
-"""Per-kernel Pallas (interpret) vs pure-jnp oracle, sweeping shapes/dtypes."""
+"""Per-kernel Pallas (interpret) vs pure-jnp oracle, sweeping shapes/dtypes.
+
+All access goes through the declarative vx API (spec + verb + policy);
+the legacy-shim equivalence sweep lives in tests/test_vx_api.py.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import ops, ref
+from repro import vx
 
 DTYPES = [jnp.float32, jnp.bfloat16, jnp.int32]
 
@@ -22,9 +26,10 @@ def rand(key, shape, dtype):
                                            (1, 0), (16, 3)])
 def test_gather_strided(dtype, lead, n, stride, offset):
     vl = (n - 1 - offset) // stride + 1
+    spec = vx.Strided(n=n, stride=stride, offset=offset, vl=vl)
     win = rand(jax.random.key(0), lead + (n,), dtype)
-    got = ops.gather_strided(win, stride, offset, vl, impl="pallas")
-    want = ops.gather_strided(win, stride, offset, vl, impl="ref")
+    got = vx.gather(spec, win, policy="pallas")
+    want = vx.gather(spec, win, policy="ref")
     np.testing.assert_allclose(np.asarray(got, np.float64),
                                np.asarray(want, np.float64))
 
@@ -34,10 +39,11 @@ def test_gather_strided(dtype, lead, n, stride, offset):
 @pytest.mark.parametrize("stride,offset", [(2, 0), (3, 1), (5, 4), (1, 0)])
 def test_scatter_strided(dtype, lead, n, stride, offset):
     vl = (n - 1 - offset) // stride + 1
+    spec = vx.Strided(n=n, stride=stride, offset=offset, vl=vl)
     win = rand(jax.random.key(1), lead + (n,), dtype)
     vals = rand(jax.random.key(2), lead + (vl,), dtype)
-    got = ops.scatter_strided(win, vals, stride, offset, impl="pallas")
-    want = ops.scatter_strided(win, vals, stride, offset, impl="ref")
+    got = vx.scatter(spec, win, vals, policy="pallas")
+    want = vx.scatter(spec, win, vals, policy="ref")
     np.testing.assert_allclose(np.asarray(got, np.float64),
                                np.asarray(want, np.float64))
 
@@ -46,9 +52,10 @@ def test_scatter_strided(dtype, lead, n, stride, offset):
 @pytest.mark.parametrize("fields", [2, 3, 4, 5, 8])
 @pytest.mark.parametrize("lead,m", [((), 64), ((4,), 32), ((2, 2), 128)])
 def test_deinterleave(dtype, fields, lead, m):
+    spec = vx.Segment(n=fields * m, fields=fields)
     aos = rand(jax.random.key(3), lead + (fields * m,), dtype)
-    got = ops.deinterleave(aos, fields, impl="pallas")
-    want = ops.deinterleave(aos, fields, impl="ref")
+    got = vx.transpose(spec, aos, policy="pallas")
+    want = vx.transpose(spec, aos, policy="ref")
     assert len(got) == fields
     for g, w in zip(got, want):
         np.testing.assert_allclose(np.asarray(g, np.float64),
@@ -59,19 +66,22 @@ def test_deinterleave(dtype, fields, lead, m):
 @pytest.mark.parametrize("fields", [2, 3, 4, 8])
 @pytest.mark.parametrize("lead,m", [((), 64), ((4,), 32), ((2, 2), 128)])
 def test_interleave(dtype, fields, lead, m):
+    spec = vx.Segment(n=fields * m, fields=fields)
     soa = [rand(jax.random.key(10 + f), lead + (m,), dtype)
            for f in range(fields)]
-    got = ops.interleave(soa, impl="pallas")
-    want = ops.interleave(soa, impl="ref")
+    got = vx.transpose(spec, soa, policy="pallas")
+    want = vx.transpose(spec, soa, policy="ref")
     np.testing.assert_allclose(np.asarray(got, np.float64),
                                np.asarray(want, np.float64))
 
 
 @pytest.mark.parametrize("fields", [2, 3, 4, 8])
 def test_segment_roundtrip(fields):
+    spec = vx.Segment(n=fields * 48, fields=fields)
     aos = rand(jax.random.key(4), (6, fields * 48), jnp.float32)
-    parts = ops.deinterleave(aos, fields, impl="pallas")
-    back = ops.interleave(parts, impl="pallas")
+    with vx.use("pallas"):
+        parts = vx.transpose(spec, aos)
+        back = vx.transpose(spec, parts)
     np.testing.assert_allclose(np.asarray(back), np.asarray(aos))
 
 
@@ -82,8 +92,8 @@ def test_compact_rows(dtype, n, d, density):
     key = jax.random.key(5)
     rows = rand(key, (n, d), dtype)
     mask = jax.random.uniform(jax.random.key(6), (n,)) < density
-    got, gv = ops.compact_rows(rows, mask, impl="pallas")
-    want, wv = ops.compact_rows(rows, mask, impl="ref")
+    got, gv = vx.compact(vx.Compact(n=n), mask, rows, policy="pallas")
+    want, wv = vx.compact(vx.Compact(n=n), mask, rows, policy="ref")
     np.testing.assert_array_equal(np.asarray(gv), np.asarray(wv))
     np.testing.assert_allclose(np.asarray(got, np.float64),
                                np.asarray(want, np.float64))
@@ -94,11 +104,11 @@ def test_compact_rows(dtype, n, d, density):
 def test_expand_rows(n, d, density):
     mask = jax.random.uniform(jax.random.key(7), (n,)) < density
     packed = rand(jax.random.key(8), (n, d), jnp.float32)
-    # zero out rows beyond the packed count, as compact_rows would produce
+    # zero out rows beyond the packed count, as compaction would produce
     total = int(jnp.sum(mask.astype(jnp.int32)))
     packed = packed.at[total:].set(0.0)
-    got = ops.expand_rows(packed, mask, impl="pallas")
-    want = ops.expand_rows(packed, mask, impl="ref")
+    got = vx.scatter(vx.Compact(n=n), mask, packed, policy="pallas")
+    want = vx.scatter(vx.Compact(n=n), mask, packed, policy="ref")
     np.testing.assert_allclose(np.asarray(got), np.asarray(want))
 
 
@@ -106,8 +116,9 @@ def test_expand_rows(n, d, density):
 def test_compact_expand_roundtrip(n, d):
     rows = rand(jax.random.key(9), (n, d), jnp.float32)
     mask = jax.random.uniform(jax.random.key(11), (n,)) < 0.5
-    packed, _ = ops.compact_rows(rows, mask, impl="pallas")
-    back = ops.expand_rows(packed, mask, impl="pallas")
+    with vx.use("pallas"):
+        packed, _ = vx.compact(vx.Compact(n=n), mask, rows)
+        back = vx.scatter(vx.Compact(n=n), mask, packed)
     want = jnp.where(mask[:, None], rows, 0.0)
     np.testing.assert_allclose(np.asarray(back), np.asarray(want))
 
@@ -117,8 +128,10 @@ def test_raw_shift_gather_matches_ref():
     n = 128
     x = rand(jax.random.key(12), (3, n), jnp.float32)
     shift, valid = scg.gather_counts(n, 5, 2, (n - 3) // 5 + 1)
-    got = ops.shift_gather(x, shift, valid, impl="pallas")
-    want = ops.shift_gather(x, shift, valid, impl="ref")
+    got = vx.gather(vx.Indexed(n=n), x, shift=shift, valid=valid,
+                    policy="pallas")
+    want = vx.gather(vx.Indexed(n=n), x, shift=shift, valid=valid,
+                     policy="ref")
     np.testing.assert_allclose(np.asarray(got), np.asarray(want))
 
 
@@ -127,8 +140,10 @@ def test_raw_shift_scatter_matches_ref():
     n = 128
     x = rand(jax.random.key(13), (3, n), jnp.float32)
     shift, valid = scg.scatter_counts(n, 5, 2, 25)
-    gp, gv = ops.shift_scatter(x, shift, valid, impl="pallas")
-    wp, wv = ops.shift_scatter(x, shift, valid, impl="ref")
+    gp, gv = vx.scatter(vx.Indexed(n=n), None, x, shift=shift, valid=valid,
+                        policy="pallas")
+    wp, wv = vx.scatter(vx.Indexed(n=n), None, x, shift=shift, valid=valid,
+                        policy="ref")
     np.testing.assert_array_equal(np.asarray(gv), np.asarray(wv))
     np.testing.assert_allclose(np.asarray(gp), np.asarray(wp))
 
@@ -138,8 +153,8 @@ def test_kv_interleaved_roundtrip():
     k = rand(jax.random.key(14), (2, 4, 64), jnp.float32)
     v = rand(jax.random.key(15), (2, 4, 64), jnp.float32)
     for impl in ("ref", "pallas"):
-        kv = kvi.interleave_kv(k, v, impl=impl)
-        k2, v2 = kvi.split_kv(kv, impl=impl)
+        kv = kvi.interleave_kv(k, v, policy=impl)
+        k2, v2 = kvi.split_kv(kv, policy=impl)
         np.testing.assert_allclose(np.asarray(k2), np.asarray(k))
         np.testing.assert_allclose(np.asarray(v2), np.asarray(v))
 
@@ -157,10 +172,13 @@ def test_kv_append_token():
     assert float(jnp.sum(jnp.abs(out[:, 4:]))) == 0.0
 
 
-def test_ops_jit_compatible():
+def test_vx_jit_compatible():
+    spec = vx.Segment(n=256, fields=2)
+
     @jax.jit
     def f(x):
-        parts = ops.deinterleave(x, 2, impl="pallas")
-        return ops.interleave(parts, impl="pallas")
+        with vx.use("pallas"):
+            return vx.transpose(spec, vx.transpose(spec, x))
+
     x = rand(jax.random.key(16), (4, 256), jnp.float32)
     np.testing.assert_allclose(np.asarray(f(x)), np.asarray(x))

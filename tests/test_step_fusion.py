@@ -10,8 +10,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import accessfuse, drom, scg, shiftnet
-from repro.kernels import ops
+from repro import vx
+from repro.core import accessfuse, scg, shiftnet
 from repro.models import decode as dec
 from repro.models.transformer import ModelConfig, init_params
 
@@ -41,14 +41,17 @@ def test_scheduler_merges_same_shape_group_into_one_launch():
 
     def per_access(*xs):
         return [f for x in xs
-                for f in ops.deinterleave(x, 2, impl="pallas")]
+                for f in vx.transpose(vx.Segment(n=x.shape[-1], fields=2),
+                                      x, policy="pallas")]
 
     lf, mf = accessfuse.jaxpr_access_counts(fused, *arrays)
     lp, mp = accessfuse.jaxpr_access_counts(per_access, *arrays)
     assert lf == 1 and lp == 4, (lf, lp)
     assert mf == 1 and mp == 4, (mf, mp)
     got = jax.jit(fused)(*arrays)
-    want = [f for x in arrays for f in ops.deinterleave(x, 2, impl="ref")]
+    want = [f for x in arrays
+            for f in vx.transpose(vx.Segment(n=x.shape[-1], fields=2), x,
+                                  policy="ref")]
     for g, w in zip(got, want):
         np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
 
@@ -68,7 +71,8 @@ def test_scheduler_interleave_and_heterogeneous_gather():
              for a in range(3)]
     outs = accessfuse.fuse_interleave(parts, impl="ref")
     for a, out in enumerate(outs):
-        want = ops.interleave(parts[a], impl="ref")
+        want = vx.transpose(vx.Segment(n=64, fields=2), parts[a],
+                            policy="ref")
         np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
 
     # same (shape, vl), different (stride, offset): single fused kernel
@@ -80,7 +84,8 @@ def test_scheduler_interleave_and_heterogeneous_gather():
           for w, (s, o) in zip(wins, specs)]
     sched.flush()
     for h, w, (s, o) in zip(hs, wins, specs):
-        want = ops.gather_strided(w, s, o, 16, impl="ref")
+        want = vx.gather(vx.Strided(n=64, stride=s, offset=o, vl=16), w,
+                         policy="ref")
         np.testing.assert_array_equal(np.asarray(h.value), np.asarray(want))
 
 

@@ -1,0 +1,322 @@
+"""repro.vx — API contract tests.
+
+1. Every vx verb is bit-exact with the legacy ``kernels/ops.py`` path
+   across impls (``ref``, ``pallas``, ``pallas_dynamic``) and through the
+   runtime-stride bank.
+2. ``with vx.use(...)`` nests and restores the active policy (including
+   under exceptions).
+3. Plan-cache keys include dtype and vl — the int8-vs-float32 collision
+   regression.
+4. ``vx.Policy.default()`` is the ONE resolution point: the env var,
+   ``drom.default_impl`` and ``ModelConfig.kernel_impl=None`` all agree.
+5. The legacy shims still answer correctly but warn.
+"""
+import contextlib
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import vx
+
+IMPLS = ("ref", "pallas", "pallas_dynamic")
+
+
+@contextlib.contextmanager
+def legacy():
+    """Call deprecated shims without tripping the CI deprecation gate."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        yield
+
+
+# ---------------------------------------------------------------------------
+# 1. verb <-> legacy equivalence
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize("stride,offset", [(1, 0), (3, 2), (8, 5)])
+def test_gather_scatter_strided_match_legacy(impl, stride, offset):
+    from repro.kernels import ops
+    n = 128
+    vl = (n - 1 - offset) // stride + 1
+    win = jax.random.normal(jax.random.key(0), (3, n))
+    vals = jax.random.normal(jax.random.key(1), (3, vl))
+    spec = vx.Strided(n=n, stride=stride, offset=offset, vl=vl)
+    with legacy():
+        want_g = ops.gather_strided(win, stride, offset, vl, impl=impl)
+        want_s = ops.scatter_strided(win, vals, stride, offset, impl=impl)
+    np.testing.assert_array_equal(
+        np.asarray(vx.gather(spec, win, policy=impl)), np.asarray(want_g))
+    np.testing.assert_array_equal(
+        np.asarray(vx.scatter(spec, win, vals, policy=impl)),
+        np.asarray(want_s))
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize("fields", [2, 4])
+def test_transpose_matches_legacy(impl, fields):
+    from repro.kernels import ops
+    m = 32
+    spec = vx.Segment(n=fields * m, fields=fields)
+    aos = jax.random.normal(jax.random.key(2), (4, fields * m))
+    with legacy():
+        want = ops.deinterleave(aos, fields, impl=impl)
+    got = vx.transpose(spec, aos, policy=impl)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+    with legacy():
+        want_b = ops.interleave(got, impl=impl)
+    back = vx.transpose(spec, got, policy=impl)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(want_b))
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(aos))
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+def test_compact_expand_match_legacy(impl):
+    from repro.kernels import ops
+    n, d = 64, 16
+    rows = jax.random.normal(jax.random.key(3), (n, d))
+    mask = jax.random.uniform(jax.random.key(4), (n,)) < 0.4
+    with legacy():
+        want_p, want_v = ops.compact_rows(rows, mask, impl=impl)
+    got_p, got_v = vx.compact(vx.Compact(n=n), mask, rows, policy=impl)
+    np.testing.assert_array_equal(np.asarray(got_v), np.asarray(want_v))
+    np.testing.assert_array_equal(np.asarray(got_p), np.asarray(want_p))
+    with legacy():
+        want_e = ops.expand_rows(got_p, mask, impl=impl)
+    got_e = vx.scatter(vx.Compact(n=n), mask, got_p, policy=impl)
+    np.testing.assert_array_equal(np.asarray(got_e), np.asarray(want_e))
+
+
+@pytest.mark.parametrize("impl", ("ref", "pallas"))
+def test_compact_cap_truncates_rows(impl):
+    n, d, cap = 32, 8, 4
+    rows = jax.random.normal(jax.random.key(20), (n, d))
+    mask = jnp.arange(n) % 3 == 0            # 11 set bits > cap
+    packed, valid = vx.compact(vx.Compact(n=n, cap=cap), mask, rows,
+                               policy=impl)
+    assert packed.shape == (cap, d) and valid.shape == (cap,)
+    full, fv = vx.compact(vx.Compact(n=n), mask, rows, policy=impl)
+    assert full.shape == (n, d)
+    np.testing.assert_array_equal(np.asarray(packed),
+                                  np.asarray(full[:cap]))
+    np.testing.assert_array_equal(np.asarray(valid), np.asarray(fv[:cap]))
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+def test_gather_many_matches_legacy(impl):
+    from repro.kernels import ops
+    n, vl, A = 64, 16, 3
+    wins = jnp.stack([jax.random.normal(jax.random.key(5 + a), (4, n))
+                      for a in range(A)])
+    pairs = [(2, 0), (3, 1), (1, 5)]
+    specs = [vx.Strided(n=n, stride=s, offset=o, vl=vl) for s, o in pairs]
+    with legacy():
+        want = ops.gather_strided_many(wins, pairs, vl, impl=impl)
+    got = vx.gather_many(specs, wins, policy=impl)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+def test_segment_many_match_legacy(impl):
+    from repro.kernels import ops
+    fields, m, A = 2, 32, 3
+    spec = vx.Segment(n=fields * m, fields=fields)
+    aos_list = [jax.random.normal(jax.random.key(10 + a), (4, fields * m))
+                for a in range(A)]
+    with legacy():
+        want = ops.deinterleave_many(aos_list, fields, impl=impl)
+    got = vx.gather_many(spec, aos_list, policy=impl)
+    for gg, ww in zip(got, want):
+        for g, w in zip(gg, ww):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+    groups = got
+    with legacy():
+        want_b = ops.interleave_many(groups, impl=impl)
+    back = vx.scatter_many(spec, groups, policy=impl)
+    for g, w in zip(back, want_b):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+@pytest.mark.parametrize("stride", [-3, -1, 2, 5, 11])
+def test_bank_gather_matches_legacy_rt(stride):
+    from repro.kernels import ops
+    n, offset0, vl = 128, 0, 8
+    offset = offset0 + (0 if stride > 0 else n - 1)
+    win = jax.random.normal(jax.random.key(6), (2, n))
+    spec = vx.Strided(n=n, stride=vx.BANK, offset=offset, vl=vl)
+    with legacy():
+        want = ops.gather_strided_rt(win, stride, offset, vl)
+    # static stride through the BANK spec
+    got = vx.gather(spec, win, stride=stride)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # traced stride through the lax.switch dispatch
+    traced = jax.jit(lambda w, s: vx.gather(spec, w, stride=s))(
+        win, jnp.int32(stride))
+    np.testing.assert_array_equal(np.asarray(traced), np.asarray(want))
+
+
+def test_bank_scatter_traced_matches_static():
+    n, vl = 64, 8
+    win = jax.random.normal(jax.random.key(7), (2, n))
+    vals = jax.random.normal(jax.random.key(8), (2, vl))
+    spec = vx.Strided(n=n, stride=vx.BANK, offset=3, vl=vl)
+    static = vx.scatter(spec, win, vals, stride=4)
+    traced = jax.jit(lambda w, v, s: vx.scatter(spec, w, v, stride=s))(
+        win, vals, jnp.int32(4))
+    np.testing.assert_array_equal(np.asarray(traced), np.asarray(static))
+    want = win.at[:, 3:3 + 4 * vl:4].set(vals)
+    np.testing.assert_array_equal(np.asarray(static), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# 2. policy scoping
+# ---------------------------------------------------------------------------
+
+def test_use_nesting_restores_policy():
+    base = vx.current()
+    with vx.use("pallas") as outer:
+        assert vx.current().impl == "pallas"
+        with vx.use(impl="ref", fusion_threshold=0) as inner:
+            assert vx.current() is inner
+            assert inner.impl == "ref" and inner.fusion_threshold == 0
+            # inner scope inherits everything else from the outer scope
+            assert inner.bank_strides == outer.bank_strides
+        assert vx.current() is outer
+    assert vx.current() == base
+
+
+def test_use_restores_on_exception():
+    before = vx.current()
+    with pytest.raises(RuntimeError):
+        with vx.use("pallas"):
+            raise RuntimeError("boom")
+    assert vx.current() == before
+
+
+def test_policy_arg_beats_scope():
+    spec = vx.Segment(n=8, fields=2)
+    aos = jnp.arange(8.0)[None]
+    with vx.use("pallas"):
+        # explicit arg wins over the scope
+        a = vx.transpose(spec, aos, policy="ref")
+        b = vx.transpose(spec, aos)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_static_spec_rejects_stride_operand():
+    w = jnp.arange(64.0)[None]
+    spec = vx.Strided(n=64, stride=2, vl=8)
+    with pytest.raises(ValueError, match="already pins stride"):
+        vx.gather(spec, w, stride=5)
+    with pytest.raises(ValueError, match="stride=vx.BANK"):
+        vx.gather(vx.Strided(n=64, stride=vx.BANK, vl=8), w)
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError):
+        vx.Policy(impl="mosaic")
+    with pytest.raises(TypeError):
+        vx.resolve(3.14)
+
+
+# ---------------------------------------------------------------------------
+# 3. plan-cache keys include dtype and vl (collision regression)
+# ---------------------------------------------------------------------------
+
+def test_plan_cache_distinguishes_dtypes():
+    n, stride, vl = 64, 2, 16
+    w8 = jnp.arange(n, dtype=jnp.int8)[None] % 100
+    w32 = jnp.arange(n, dtype=jnp.float32)[None]
+    spec = vx.Strided(n=n, stride=stride, vl=vl, offset=11)
+    got8 = vx.gather(spec, w8, policy="pallas")
+    got32 = vx.gather(spec, w32, policy="pallas")
+    assert got8.dtype == jnp.int8 and got32.dtype == jnp.float32
+    np.testing.assert_array_equal(
+        np.asarray(got8), np.asarray(w8[:, 11:11 + stride * vl:stride]))
+    np.testing.assert_array_equal(
+        np.asarray(got32), np.asarray(w32[:, 11:11 + stride * vl:stride]))
+    # the two accesses may never share an executor entry: one per dtype
+    keys = [k for k in vx.PLANS.keys()
+            if k[:2] == ("exec", "gather") and n in k and 11 in k]
+    dtypes = {f for k in keys for f in k if f in ("int8", "float32")}
+    assert {"int8", "float32"} <= dtypes, keys
+
+
+def test_plan_cache_distinguishes_vl():
+    n = 64
+    w = jnp.arange(n, dtype=jnp.float32)[None]
+    a = vx.gather(vx.Strided(n=n, stride=2, vl=8, offset=0), w)
+    b = vx.gather(vx.Strided(n=n, stride=2, vl=16, offset=0), w)
+    assert a.shape == (1, 8) and b.shape == (1, 16)
+    assert vx.Strided(n=n, stride=2, vl=8).key() != \
+        vx.Strided(n=n, stride=2, vl=16).key()
+
+
+def test_spec_hashable_and_frozen():
+    s = vx.Strided(n=32, stride=4, vl=8, dtype=jnp.float32)
+    assert s == vx.Strided(n=32, stride=4, vl=8, dtype="float32")
+    assert hash(s) == hash(vx.Strided(n=32, stride=4, vl=8, dtype="float32"))
+    with pytest.raises(Exception):
+        s.n = 64  # frozen
+    assert {s: 1}[s] == 1
+    b = vx.Strided(n=32, stride=vx.BANK, vl=8)
+    assert b.runtime and "bank" in b.key()
+    with pytest.raises(ValueError):
+        vx.Strided(n=32, stride=8, vl=8)      # leaves the window
+    with pytest.raises(ValueError):
+        vx.Segment(n=33, fields=2)            # not divisible
+
+
+# ---------------------------------------------------------------------------
+# 4. one knob: env var -> Policy.default -> drom/default + ModelConfig
+# ---------------------------------------------------------------------------
+
+def test_default_policy_resolves_env(monkeypatch):
+    monkeypatch.setenv(vx.policy.ENV_VAR, "pallas")
+    assert vx.Policy.default().impl == "pallas"
+    from repro.core import drom
+    with legacy():
+        assert drom.default_impl() == "pallas"
+    from repro.models.transformer import ModelConfig
+    cfg = ModelConfig(name="t", d_model=8, n_layers=1, n_heads=1,
+                      n_kv_heads=1, d_ff=16, vocab=11)
+    assert cfg.kernel_impl is None
+    assert cfg.vx_policy.impl == "pallas"
+    monkeypatch.delenv(vx.policy.ENV_VAR)
+    assert cfg.vx_policy.impl == vx.Policy.default().impl
+    # a pinned impl string still wins
+    import dataclasses
+    pinned = dataclasses.replace(cfg, kernel_impl="ref")
+    assert pinned.vx_policy.impl == "ref"
+
+
+# ---------------------------------------------------------------------------
+# 5. shims warn (and only the shims)
+# ---------------------------------------------------------------------------
+
+def test_shims_emit_deprecation_warnings():
+    from repro.core import drom
+    from repro.kernels import ops
+    aos = jnp.arange(8.0)[None]
+    with pytest.warns(DeprecationWarning):
+        ops.deinterleave(aos, 2)
+    with pytest.warns(DeprecationWarning):
+        drom.deinterleave(aos, 2)
+    with pytest.warns(DeprecationWarning):
+        drom.default_impl()
+
+
+def test_vx_verbs_do_not_warn():
+    spec = vx.Segment(n=8, fields=2)
+    aos = jnp.arange(8.0)[None]
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        vx.transpose(spec, aos)
+        vx.gather(vx.Strided(n=8, stride=2, vl=4), aos)
+        vx.compact(vx.Compact(n=8), jnp.ones(8, bool),
+                   jnp.ones((8, 4)))

@@ -1,0 +1,102 @@
+"""Child process for the long-context serving row of bench_step.py.
+
+Runs under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the
+parent sets it before spawning): a seq-sharded (B=1-style) decode step,
+FUSED (shard-local KV split through the PR 4 sharding-aware vx lowering)
+vs PER-ACCESS (the path long_context was pinned to before), same-run
+medians plus the jaxpr-level launch/mask counts.  Prints ONE JSON line on
+stdout; the parent parses it and emits the ``step/decode_longctx`` record.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+if "--xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+
+def _median_us(step, args, iters: int) -> float:
+    jax.block_until_ready(step(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(step(*args))
+        times.append((time.perf_counter() - t0) * 1e6)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    from jax.sharding import PartitionSpec as P
+    from repro import vx
+    from repro.configs import get_arch
+    from repro.configs.base import decode_inputs
+    from repro.core import accessfuse
+    from repro.launch.mesh import make_ctx, make_test_mesh
+    from repro.models import decode as dec
+    from repro.models.transformer import init_params
+    from repro.serve.engine import ServeConfig, cache_specs
+
+    cfg = get_arch("qwen3-0.6b").smoke
+    params = init_params(cfg, jax.random.key(0))
+    # B=1 (the long_500k cell shape); seq keeps the merged KV split above
+    # the fusion threshold so the fused group stays a kernel transaction
+    seq = 128 if quick else 512
+    cache, token = decode_inputs(cfg, seq=seq, batch=1, specs=False,
+                                 cache_dtype=jnp.float32)
+    cache["len"] = jnp.asarray(seq // 2, jnp.int32)
+    mesh = make_test_mesh((2, 4), ("data", "model"))
+    ctx = make_ctx(mesh, long_context=True)
+    shard = ctx.vx_seq_shard(-3)
+
+    # identical placement for BOTH paths: the serve-path cache shardings
+    # (seq-parallel leaves), params/token replicated — so the comparison
+    # is fused-vs-per-access under the same SPMD program, not
+    # single-device vs 8-device
+    scfg = ServeConfig(max_len=seq, long_context=True)
+    cspecs = cache_specs(cfg, ctx, scfg, cache)
+    csh = jax.tree.map(lambda s: ctx.sharding(s), cspecs,
+                       is_leaf=lambda x: isinstance(x, P))
+    cache = jax.tree.map(jax.device_put, cache, csh)
+    params = jax.tree.map(lambda a: jax.device_put(a, ctx.sharding(P())),
+                          params)
+    token = jax.device_put(token, ctx.sharding(P()))
+
+    def fused(p, c, t):
+        return dec.decode_step(p, c, t, cfg, ctx, fuse=True,
+                               kv_shard=shard)
+
+    def per_access(p, c, t):
+        return dec.decode_step(p, c, t, cfg, ctx, fuse=False)
+
+    iters = 5 if quick else 20
+    t_f = _median_us(jax.jit(fused), (params, cache, token), iters)
+    t_p = _median_us(jax.jit(per_access), (params, cache, token), iters)
+    with vx.use("pallas"), accessfuse.pinned_kernel_lowering():
+        lf, mf = accessfuse.jaxpr_access_counts(fused, params, cache, token)
+    with vx.use("pallas"):
+        lp, mp = accessfuse.jaxpr_access_counts(per_access, params, cache,
+                                                token)
+    # 8 fake devices on one host serialize every shard: wall time here is
+    # SPMD-simulation-bound, not a dispatch claim (same caveat as the
+    # lsdo_many row) — the tracked metrics are the launch/mask counts
+    print(json.dumps({
+        "fused_us": round(t_f, 2), "per_access_us": round(t_p, 2),
+        "seq": seq, "nshards": shard.nshards, "spmd_sim_bound": True,
+        "launches_fused": lf, "launches_per_access": lp,
+        "mask_ops_fused": mf, "mask_ops_per_access": mp,
+    }))
+
+
+if __name__ == "__main__":
+    main()

@@ -7,6 +7,11 @@ Three measurements, all same-run (relative, XLA CPU):
     inlined) vs PER-ACCESS (every layer launches its own kernels, the PR 1
     path).  Also reports the jaxpr-level kernel-launch and mask-operand
     counts (jax.make_jaxpr — no timing in the regression-gated numbers).
+  * ``step/decode_longctx`` — the PR 4 newly-unlocked path: a seq-sharded
+    long-context (B=1) decode step, FUSED via the sharding-aware vx
+    lowering (shard-local KV split under shard_map) vs PER-ACCESS, run on
+    8 fake devices in a subprocess.  Wall time there is SPMD-simulation
+    bound; the tracked claim is the jaxpr launch/mask-operand drop.
   * ``step/pipeline`` — input pipeline with the pack+unpack segment round
     trip elided by plan composition vs materializing the AoS buffer.
   * ``step/bank_s{±k}`` — runtime-stride dispatch through the plan bank's
@@ -66,6 +71,41 @@ def _bench_decode() -> None:
          speedup=round(t_p / max(t_f, 1e-9), 3),
          launches_fused=lf, launches_per_access=lp,
          mask_ops_fused=mf, mask_ops_per_access=mp)
+
+
+def _bench_decode_long_context() -> None:
+    """The PR 4 newly-unlocked path: seq-sharded (long-context) decode
+    with step fusion vs the per-access path it was pinned to before.
+
+    Runs in a subprocess on 8 fake devices (this process must keep seeing
+    1 device — the dry-run contract); same-run medians plus jaxpr-level
+    launch/mask counts, all measured INSIDE the one child."""
+    import json
+    import os
+    import subprocess
+    import sys
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(root, "src") + os.pathsep + root
+    cmd = [sys.executable,
+           os.path.join(root, "benchmarks", "_bench_longctx.py")]
+    if common.QUICK:
+        cmd.append("--quick")
+    r = subprocess.run(cmd, capture_output=True, text=True, timeout=900,
+                       env=env, cwd=root)
+    if r.returncode != 0:
+        raise RuntimeError(f"longctx child failed:\n{r.stdout[-2000:]}\n"
+                           f"{r.stderr[-3000:]}")
+    rec = json.loads(r.stdout.strip().splitlines()[-1])
+    t_f, t_p = rec.pop("fused_us"), rec["per_access_us"]
+    emit("step/decode_longctx", t_f,
+         f"per_access_us={t_p:.1f} speedup={t_p / max(t_f, 1e-9):.2f}x "
+         f"launches={rec['launches_fused']}vs{rec['launches_per_access']} "
+         f"mask_ops={rec['mask_ops_fused']}vs{rec['mask_ops_per_access']} "
+         f"nshards={rec['nshards']} seq={rec['seq']} spmd_sim_bound=true",
+         speedup=round(t_p / max(t_f, 1e-9), 3), **rec)
 
 
 def _bench_pipeline() -> None:
@@ -185,6 +225,7 @@ def _bench_lsdo_many() -> None:
 
 def run() -> None:
     _bench_decode()
+    _bench_decode_long_context()
     _bench_pipeline()
     _bench_bank()
     _bench_lsdo_many()

@@ -125,11 +125,19 @@ class _Req:
 class StepScheduler:
     """Collects a step's shift-routed accesses and executes them merged.
 
-    Same-key accesses (op kind x shape x dtype x static params) are stacked
-    along a new leading axis and routed by ONE kernel launch whose mask
-    operand is the single plan (shared) or the concatenation of the group's
-    plans (heterogeneous strided specs) — the whole-step analogue of
-    LSDO's batched (T, mlen) transaction block.
+    Since PR 4 the scheduler is a PROGRAM-LEVEL FUSION PASS over the one
+    vx pipeline (spec -> plan -> program): each registered access lowers
+    to a single-transaction program, same-key programs are merged by
+    ``vx.program.fuse`` into ONE wide transaction (payloads stacked along
+    a new leading axis; one kernel launch whose mask operand is the single
+    shared plan or the concatenation of the group's plans), and the fused
+    program executes through ``vx.lower.executor`` — the whole-step
+    analogue of LSDO's batched (T, mlen) transaction block, with no
+    parallel execution path.
+
+    Grouping keys include the access PLACEMENT: a ``vx.Shard``-annotated
+    deinterleave lowers shard-locally under ``shard_map`` and never merges
+    with a replicated one.
 
     Lowering is governed by ONE ``vx.Policy``: ``policy`` (or the ambient
     one) with ``impl`` pinned on top when given — an explicitly passed
@@ -155,17 +163,22 @@ class StepScheduler:
                              self.policy)
 
     # -- access registration ------------------------------------------------
-    def deinterleave(self, aos: jax.Array, fields: int) -> Handle:
+    def deinterleave(self, aos: jax.Array, fields: int,
+                     shard=None) -> Handle:
         h = Handle()
-        self._reqs.append(_Req(("deint", fields, aos.shape, str(aos.dtype)),
-                               aos, h))
+        from repro.vx.program import layout_of
+        self._reqs.append(_Req(("deint", fields, aos.shape, str(aos.dtype),
+                                layout_of(shard)), (aos, shard), h))
         return h
 
-    def interleave(self, parts: Sequence[jax.Array]) -> Handle:
+    def interleave(self, parts: Sequence[jax.Array],
+                   shard=None) -> Handle:
         parts = list(parts)
         h = Handle()
-        key = ("int", len(parts), parts[0].shape, str(parts[0].dtype))
-        self._reqs.append(_Req(key, parts, h))
+        from repro.vx.program import layout_of
+        key = ("int", len(parts), parts[0].shape, str(parts[0].dtype),
+               layout_of(shard))
+        self._reqs.append(_Req(key, (parts, shard), h))
         return h
 
     def gather_strided(self, window: jax.Array, stride: int, offset: int,
@@ -184,53 +197,57 @@ class StepScheduler:
             self._run_group(key, reqs)
         self._reqs = []
 
+    def _fused(self, op: str, specs: list, impl: str, shard=None):
+        """lower each access -> fuse the programs -> compile ONE executor."""
+        from repro.vx import lower as vxlower
+        from repro.vx import program as vxprogram
+        progs = [vxlower.lower(op, s, impl, shard) for s in specs]
+        prog = progs[0] if len(progs) == 1 else vxprogram.fuse(progs)
+        return vxlower.executor(prog, tuple(specs), shard)
+
     def _run_group(self, key: tuple, reqs: list[_Req]) -> None:
         from repro import vx
         pol = self.policy
         kind = key[0]
         if kind == "deint":
             fields = key[1]
-            stack = (reqs[0].payload if len(reqs) == 1
-                     else jnp.stack([r.payload for r in reqs]))
+            shard = reqs[0].payload[1]
+            stack = (reqs[0].payload[0] if len(reqs) == 1
+                     else jnp.stack([r.payload[0] for r in reqs]))
             impl = self._impl_for(stack.size)
-            spec = vx.Segment(n=stack.shape[-1], fields=fields)
-            outs = vx.transpose(spec, stack, policy=pol.with_impl(impl))
+            spec = vx.Segment(n=stack.shape[-1],
+                              fields=fields).bind(stack.dtype)
+            outs = self._fused("seg.deint", [spec] * len(reqs), impl,
+                               shard)(stack)
             for a, r in enumerate(reqs):
                 r.handle.value = (list(outs) if len(reqs) == 1
                                   else [o[a] for o in outs])
         elif kind == "int":
             nf = key[1]
+            shard = reqs[0].payload[1]
             if len(reqs) == 1:
-                fields = list(reqs[0].payload)
+                parts = list(reqs[0].payload[0])
             else:
-                fields = [jnp.stack([r.payload[f] for r in reqs])
-                          for f in range(nf)]
-            impl = self._impl_for(fields[0].size * nf)
-            spec = vx.Segment(n=nf * fields[0].shape[-1], fields=nf)
-            out = vx.transpose(spec, fields, policy=pol.with_impl(impl))
+                parts = [jnp.stack([r.payload[0][f] for r in reqs])
+                         for f in range(nf)]
+            impl = self._impl_for(parts[0].size * nf)
+            spec = vx.Segment(n=nf * parts[0].shape[-1],
+                              fields=nf).bind(parts[0].dtype)
+            out = self._fused("seg.int", [spec] * len(reqs), impl,
+                              shard)(parts)
             for a, r in enumerate(reqs):
                 r.handle.value = out if len(reqs) == 1 else out[a]
         elif kind == "gather":
             vl = key[3]
             n = key[1][-1]
-            specs = [vx.Strided(n=n, stride=r.payload[1],
-                                offset=r.payload[2], vl=vl) for r in reqs]
             stack = (reqs[0].payload[0] if len(reqs) == 1
                      else jnp.stack([r.payload[0] for r in reqs]))
+            specs = [vx.Strided(n=n, stride=r.payload[1], offset=r.payload[2],
+                                vl=vl).bind(stack.dtype) for r in reqs]
             impl = self._impl_for(stack.size)
-            if len(set(s.key() for s in specs)) == 1:  # one shared plan
-                out = vx.gather(specs[0], stack, policy=pol.with_impl(impl))
-                for a, r in enumerate(reqs):
-                    r.handle.value = out if len(reqs) == 1 else out[a]
-            elif impl == "ref":
-                for r, spec in zip(reqs, specs):
-                    r.handle.value = vx.gather(spec, r.payload[0],
-                                               policy=pol.with_impl("ref"))
-            else:                              # concatenated-mask kernel
-                out = vx.gather_many(specs, stack,
-                                     policy=pol.with_impl(impl))
-                for a, r in enumerate(reqs):
-                    r.handle.value = out[a]
+            out = self._fused("gather.plan", specs, impl)(stack)
+            for a, r in enumerate(reqs):
+                r.handle.value = out if len(reqs) == 1 else out[a]
         else:  # pragma: no cover
             raise ValueError(kind)
 
@@ -240,25 +257,29 @@ class StepScheduler:
 def fuse_deinterleave(arrays: Sequence[jax.Array], fields: int, *,
                       impl: str | None = None,
                       platform_policy: bool = True,
-                      policy: "vxpolicy.Policy | None" = None
-                      ) -> list[list[jax.Array]]:
-    """One fused segment load for a whole step's same-shape AoS arrays."""
+                      policy: "vxpolicy.Policy | None" = None,
+                      shard=None) -> list[list[jax.Array]]:
+    """One fused segment load for a whole step's same-shape AoS arrays.
+
+    ``shard`` (a ``vx.Shard`` on an outer axis) executes the merged
+    transaction shard-locally — seq-sharded serving caches split in place
+    instead of being sliced globally."""
     sched = StepScheduler(impl=impl, platform_policy=platform_policy,
                           policy=policy)
-    hs = [sched.deinterleave(a, fields) for a in arrays]
+    hs = [sched.deinterleave(a, fields, shard=shard) for a in arrays]
     sched.flush()
     return [h.value for h in hs]
 
 
 def fuse_split_kv(kvs: Sequence[jax.Array], *, impl: str | None = None,
                   platform_policy: bool = True,
-                  policy: "vxpolicy.Policy | None" = None
-                  ) -> list[tuple[jax.Array, jax.Array]]:
+                  policy: "vxpolicy.Policy | None" = None,
+                  shard=None) -> list[tuple[jax.Array, jax.Array]]:
     """All layers' (…, 2d) KV-cache splits in one launch (FIELD=2)."""
     return [tuple(pair) for pair in
             fuse_deinterleave(kvs, 2, impl=impl,
                               platform_policy=platform_policy,
-                              policy=policy)]
+                              policy=policy, shard=shard)]
 
 
 def fuse_interleave(groups: Sequence[Sequence[jax.Array]], *,

@@ -6,7 +6,7 @@ now belongs to ``vx.Policy`` (explicit arg > ``with vx.use(...)`` scope >
 ``REPRO_VX_IMPL`` env var > platform default).  Each wrapper below emits a
 :class:`DeprecationWarning` and delegates to the vx verbs; internal code
 must call ``vx`` directly (CI escalates the shim warnings to errors).
-See DESIGN.md §9 for the migration map.
+See DESIGN.md §10 for the migration map.
 """
 from __future__ import annotations
 
@@ -23,7 +23,7 @@ Impl = Literal["ref", "pallas"]
 def _warn(name: str, repl: str) -> None:
     warnings.warn(
         f"repro.core.drom.{name} is deprecated; use {repl} "
-        f"(see DESIGN.md §9)", DeprecationWarning, stacklevel=3)
+        f"(see DESIGN.md §10)", DeprecationWarning, stacklevel=3)
 
 
 def default_impl() -> Impl:

@@ -532,3 +532,43 @@ def interleave_plan(n: int, fields: int) -> ShiftPlan:
     p = np.arange(n)
     dest = (p % m) * fields + p // m
     return permutation_plan(tuple(int(x) for x in dest))
+
+
+# ---------------------------------------------------------------------------
+# Shard-local rebasing (the SPMD arm of the plan layer)
+# ---------------------------------------------------------------------------
+
+@_memoize("plan.shard_rows")
+def shard_strided_rows(n: int, stride: int, offset: int, vl: int,
+                       nshards: int) -> tuple:
+    """Per-shard rebased sub-accesses of a strided pattern over a window
+    sharded into ``nshards`` contiguous equal blocks.
+
+    For shard ``r`` owning global lanes ``[r*nl, (r+1)*nl)`` (with
+    ``nl = n // nshards``), returns ``(out_lo, count, local_offset)``:
+    output lanes ``[out_lo, out_lo + count)`` of the global access land in
+    shard ``r``, and inside the shard they are the plain strided pattern
+    ``local[local_offset + i*stride]`` — i.e. the shard-local program is
+    the SAME plan family with a rebased offset, so sharded lowering reuses
+    the unsharded plan compiler per shard.  ``count == 0`` marks a shard
+    the access never touches (its branch is dead).
+
+    Requires ``stride > 0`` (callers normalize negative strides with the
+    Reverser first) and ``n % nshards == 0``.
+    """
+    if stride <= 0:
+        raise ValueError(f"shard rebasing needs stride > 0, got {stride}")
+    if nshards <= 0 or n % nshards:
+        raise ValueError(f"window of {n} lanes does not split into "
+                         f"{nshards} equal shards")
+    nl = n // nshards
+    rows = []
+    for r in range(nshards):
+        lo_lane, hi_lane = r * nl, (r + 1) * nl
+        i_lo = max(0, -(-(lo_lane - offset) // stride))     # ceil div
+        i_hi = min(vl, (hi_lane - 1 - offset) // stride + 1)
+        if i_hi <= i_lo:
+            rows.append((0, 0, 0))
+            continue
+        rows.append((i_lo, i_hi - i_lo, offset + i_lo * stride - lo_lane))
+    return tuple(rows)

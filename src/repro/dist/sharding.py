@@ -112,6 +112,23 @@ class ShardCtx:
             return x
         return jax.lax.with_sharding_constraint(x, self.sharding(spec))
 
+    def vx_seq_shard(self, axis: int = -3):
+        """``vx.Shard`` placement annotation for a buffer axis sharded
+        over this context's sequence axes (long-context serving: B=1, the
+        KV sequence dim takes every axis).  ``axis`` counts from the end
+        (the default -3 is the sequence dim of an (NS, B, Sc, K, 2D)
+        cache leaf).  None when mesh-less or no axis plays the sequence
+        role — callers then take the replicated lowering."""
+        if self.mesh is None:
+            return None
+        axes = self.seq_axes or (self.data_axes
+                                 + ((self.model_axis,)
+                                    if self.model_axis else ()))
+        if not axes:
+            return None
+        from repro.vx.program import Shard
+        return Shard(axes=tuple(axes), axis=axis, mesh=self.mesh)
+
 
 def local_ctx() -> ShardCtx:
     """Single-process / single-device context (mesh-less no-op specs)."""

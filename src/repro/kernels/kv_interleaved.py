@@ -31,14 +31,20 @@ def split_kv(kv: jax.Array, *, policy=None) -> tuple[jax.Array, jax.Array]:
     return k, v
 
 
-def split_kv_step(kvs: list[jax.Array], *, policy=None
+def split_kv_step(kvs: list[jax.Array], *, policy=None, shard=None
                   ) -> list[tuple[jax.Array, jax.Array]]:
     """Whole-step KV split: EVERY layer's (…, 2d) cache in one fused
     FIELD=2 segment load — one kernel launch and one mask upload per decode
     step instead of one per layer (core/accessfuse.py groups same-shape
-    caches; mixed window sizes form one group per shape)."""
+    caches; mixed window sizes form one group per shape).
+
+    ``shard`` (a ``vx.Shard`` on the cache's sequence axis) lowers the
+    merged split shard-locally under ``shard_map`` — the seq-parallel
+    long-context cache transposes in place, never gathered or sliced
+    globally (the PR 4 sharding-aware lowering)."""
     from repro.core import accessfuse
-    return accessfuse.fuse_split_kv(kvs, policy=vx.resolve(policy))
+    return accessfuse.fuse_split_kv(kvs, policy=vx.resolve(policy),
+                                    shard=shard)
 
 
 def append_token(cache: jax.Array, k: jax.Array, v: jax.Array, pos,

@@ -2,7 +2,7 @@
 
 Every function here delegates to the declarative vx API (one spec type,
 four verbs, policy-driven dispatch — see ``src/repro/vx/__init__.py`` and
-DESIGN.md §9) and emits a :class:`DeprecationWarning`.  Internal code
+DESIGN.md §10) and emits a :class:`DeprecationWarning`.  Internal code
 (src/, examples/, benchmarks/) must call ``vx`` directly; CI escalates
 these shim warnings to errors (``-W "error:repro.:DeprecationWarning"``)
 to keep it that way.
@@ -36,7 +36,7 @@ from repro import vx
 def _warn(name: str, repl: str) -> None:
     warnings.warn(
         f"repro.kernels.ops.{name} is deprecated; use {repl} "
-        f"(see DESIGN.md §9)", DeprecationWarning, stacklevel=3)
+        f"(see DESIGN.md §10)", DeprecationWarning, stacklevel=3)
 
 
 def gather_strided(window: jax.Array, stride: int, offset: int, vl: int,

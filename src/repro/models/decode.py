@@ -75,7 +75,8 @@ def cache_from_prefill(cfg: ModelConfig, cache_states, seq_len: int,
 
 
 def decode_step(params, cache: dict, token: jax.Array, cfg: ModelConfig,
-                ctx, *, fuse: bool | None = None) -> tuple[jax.Array, dict]:
+                ctx, *, fuse: bool | None = None,
+                kv_shard=None) -> tuple[jax.Array, dict]:
     """token: (B,) int32. Returns (logits (B, V), updated cache).
 
     ``fuse`` (default cfg.step_fusion) enables whole-step access fusion:
@@ -90,6 +91,15 @@ def decode_step(params, cache: dict, token: jax.Array, cfg: ModelConfig,
     Single-token reorganizations (QKV beat pack/split, GLU field split)
     are inlined on the XLA path by the scheduler's launch policy.
     ``fuse=False`` keeps the per-access path (the equivalence oracle).
+
+    ``kv_shard`` (a ``vx.Shard`` with ``axis=-3``, the cache sequence
+    axis) marks the KV leaves as sequence-sharded: the fused split then
+    lowers SHARD-LOCALLY under ``shard_map`` (repro.vx.lower), which is
+    what lets long-context seq-parallel serving keep step fusion — the
+    global split of a sharded leaf that used to force SPMD
+    rematerialization is gone.  Leaves whose sequence extent does not
+    divide across the shards (short sliding windows) fall back to the
+    replicated lowering, each group still one fused launch.
     """
     from repro.models.transformer import cast_params
     params = cast_params(params, cfg)
@@ -107,10 +117,24 @@ def decode_step(params, cache: dict, token: jax.Array, cfg: ModelConfig,
     if fuse and attn_pos:
         # One fused split for all layers: leaves are stacked over
         # superblocks ((NS, B, Sc, K, 2D)), so this single call covers the
-        # full depth; same-shape positions share one launch.
-        leaves = [cache["blocks"][f"pos{i}"] for i in attn_pos]
-        splits = kv_interleaved.split_kv_step(leaves, policy=pol)
-        pre_split = {f"pos{i}": splits[j] for j, i in enumerate(attn_pos)}
+        # full depth; same-shape positions share one launch.  Sharded and
+        # replicated leaves lower separately (the scheduler groups by
+        # placement as well as shape).
+        leaves = {i: cache["blocks"][f"pos{i}"] for i in attn_pos}
+        sharded = [i for i, leaf in leaves.items()
+                   if kv_shard is not None
+                   and kv_shard.divides(leaf.shape[-3])]
+        local = [i for i in attn_pos if i not in sharded]
+        splits: dict[int, Any] = {}
+        if sharded:
+            outs = kv_interleaved.split_kv_step(
+                [leaves[i] for i in sharded], policy=pol, shard=kv_shard)
+            splits.update(dict(zip(sharded, outs)))
+        if local:
+            outs = kv_interleaved.split_kv_step(
+                [leaves[i] for i in local], policy=pol)
+            splits.update(dict(zip(local, outs)))
+        pre_split = {f"pos{i}": splits[i] for i in attn_pos}
     # single-token reorganizations (QKV beat split, GLU field split) ride
     # the XLA path below the policy's fusion threshold during fused decode
     beat_pol = (pol.for_elems(B * cfg.n_kv_heads * 2 * cfg.hd)

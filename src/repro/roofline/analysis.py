@@ -6,7 +6,7 @@ Three terms per (arch x shape x mesh), in seconds-per-step per chip:
     memory     = HLO_bytes / hbm_bandwidth
     collective = wire_bytes / ici_link_bandwidth      (assignment formula)
 
-Corrections applied (measured on this repo's JAX/XLA, see DESIGN.md §10):
+Corrections applied (measured on this repo's JAX/XLA, see DESIGN.md §11):
 
 * ``cost_analysis()`` counts a scanned loop body ONCE, not x trip-count.
   We therefore lower the model UNROLLED with 1 and 2 superblocks (D1, D2):

@@ -32,8 +32,9 @@ class ServeConfig:
     # Whole-step access fusion (core/accessfuse.py): one fused KV split
     # per decode step.  Costs one transient cache-sized pre-split copy
     # (k_pre/v_pre live across the step, ~+1x KV memory at peak); set
-    # False when the cache is the memory ceiling.  Auto-disabled for
-    # long_context (seq-parallel leaves would reshard per superblock).
+    # False when the cache is the memory ceiling.  Applies to long_context
+    # too (PR 4): seq-parallel caches split SHARD-LOCALLY through the vx
+    # sharding-aware lowering instead of being sliced globally.
     step_fusion: bool = True
 
 
@@ -111,24 +112,30 @@ def jit_decode_step(cfg: ModelConfig, ctx: ShardCtx, scfg: ServeConfig,
     layer-by-layer under the superblock scan)."""
     from repro import vx
     # one-time host compile of the FIELD=2 segment plans the fused KV
-    # split consults (decode takes no runtime-stride path: skip those)
-    vx.warm(2 * cfg.hd, strided=False, fields=(2,))
+    # split consults (decode takes no runtime-stride path: skip those).
+    # Resolved through the model's policy so prewarming compiles exactly
+    # the plans the serve path will hit (nothing under impl="ref").
+    vx.warm(2 * cfg.hd, strided=False, fields=(2,), policy=cfg.vx_policy)
 
     if cfg.encoder is not None:
         def serve_step(params, cache, token):
             return encdec.decode_step(params, cache, token, cfg, ctx)
     else:
-        # long_500k seq-parallel caches keep the per-access path: the
-        # fused pre-split leaves ride the superblock scan as xs, and
-        # slicing a seq-sharded (NS, B, Sc, K, D) leaf per superblock
-        # forces an involuntary full rematerialization in SPMD (XLA
-        # partitioner warning, measured on the 8-device dry run)
-        fuse = scfg.step_fusion and not scfg.long_context
+        # Step fusion holds for long_500k too (PR 4): the seq-sharded
+        # cache leaves are annotated with their placement and the fused
+        # FIELD=2 split lowers shard-locally under shard_map (offset
+        # space is untouched — the lane permutation is elementwise over
+        # the sequence), so SPMD never rematerializes the pre-split
+        # leaves the way the old global slice did.
+        fuse = scfg.step_fusion
+        # axis=-3: the sequence dim of the (NS, B, Sc, K, 2D) leaves,
+        # counted from the end (stack-stable)
+        kv_shard = ctx.vx_seq_shard(-3) if scfg.long_context else None
 
         def serve_step(params, cache, token):
             # one fused append/split for all layers per decode step
             return dec.decode_step(params, cache, token, cfg, ctx,
-                                   fuse=fuse)
+                                   fuse=fuse, kv_shard=kv_shard)
 
     if ctx.mesh is None:
         return jax.jit(serve_step, donate_argnums=1)

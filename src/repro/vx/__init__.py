@@ -34,15 +34,27 @@ Resolution order: explicit ``policy=`` arg > innermost ``vx.use`` scope >
 Plans and lowered executors are memoized in ONE spec-keyed LRU
 (:data:`vx.PLANS`) whose keys include dtype and vl.
 
+Every verb lowers through ONE explicit pipeline (PR 4):
+**spec** (frozen AccessSpec) -> **plan** (compiled shift plans,
+core/shiftplan.py) -> **program** (routed transactions with placement
+annotations, ``vx.program``).  Passing ``shard=vx.Shard(axes, axis,
+mesh)`` lowers the access shard-locally under ``shard_map`` — per-shard
+offset-rebased plans for strided patterns, local lane permutation for
+segment transposition — so a sharded buffer is never sliced globally.
+Compiled programs are memoized in ``vx.PLANS`` under keys that include
+dtype, vl, impl AND the shard layout.
+
 The legacy entry points (``kernels/ops.py``, ``core/drom.py``) survive as
 deprecated shims delegating here; internal code must not use them (CI
 escalates the shims' DeprecationWarnings to errors).
 """
+from repro.vx import lower, program
 from repro.vx._dispatch import (compact, gather, gather_many, scatter,
                                 scatter_many, transpose, warm)
 from repro.vx.cache import PLANS, PlanCache
 from repro.vx.policy import (BANK_FIELDS, BANK_STRIDES, IMPLS,
                              MIN_FUSED_ELEMS, Policy, current, resolve, use)
+from repro.vx.program import Program, Shard, Txn
 from repro.vx.spec import (BANK, AccessSpec, Compact, Indexed, Segment,
                            Strided)
 
@@ -52,5 +64,6 @@ __all__ = [
     "scatter_many", "warm",
     "Policy", "use", "current", "resolve",
     "PLANS", "PlanCache",
+    "Shard", "Program", "Txn", "program", "lower",
     "MIN_FUSED_ELEMS", "BANK_STRIDES", "BANK_FIELDS", "IMPLS",
 ]

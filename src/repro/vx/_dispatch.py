@@ -1,21 +1,20 @@
-"""Policy-driven lowering of vx verbs onto the EARTH kernel stack.
+"""vx verbs — argument normalization over the spec→plan→program pipeline.
 
-This is the ONE routing layer between the declarative API
-(``spec + verb + policy``) and the mechanism modules:
+Since PR 4 this module contains NO executor closures: every verb (and
+both ``_many`` forms) normalizes its operands, resolves the policy, and
+then lowers through the ONE pipeline in ``repro.vx.lower``:
 
-* ``kernels/ref.py``       — pure-jnp oracles (impl="ref", the XLA path),
-* ``kernels/strided.py``   — compiled-plan / dynamic-count Pallas kernels,
-* ``kernels/segment.py``   — fused segment-transposition kernels,
-* ``kernels/moe_compact.py`` and ``kernels/shift_{gather,scatter}.py``,
-* ``core/accessfuse.py``   — runtime-stride plan bank + compaction counts.
+    spec  -> lower.lower(op, specs, impl, shard)   # a Program (vx/program.py)
+          -> lower.executor(program, specs, shard) # compiled, PLANS-cached
+          -> executor(*operands)
 
-Every static-pattern verb resolves through an *executor* memoized in the
-unified plan cache (``repro.vx.cache.PLANS``) under the spec's full key —
-which includes dtype and vl — so plans and lowered closures are compiled
-once per (spec, impl) and can never collide across element types.
-
-Nothing here imports ``kernels/ops.py`` or ``core/drom.py``: those are the
-deprecated shims, and they delegate *to* this module.
+Programs are keyed by spec (dtype + vl included), resolved impl, and the
+SHARD LAYOUT: passing ``shard=vx.Shard(axes, axis, mesh)`` lowers the
+access shard-locally under ``shard_map`` (offset-rebased per-shard plans
+for strided patterns, local lane permutation for segment transposition)
+instead of slicing a sharded leaf globally.  ``core/accessfuse.py``'s
+StepScheduler rides the same pipeline — its merge is the program-level
+``vx.program.fuse`` pass.
 """
 from __future__ import annotations
 
@@ -26,18 +25,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.vx.cache import PLANS
+from repro.vx import lower as _lower
+from repro.vx import program as _program
 from repro.vx.policy import Policy, resolve
 from repro.vx.spec import (BANK, AccessSpec, Compact, Indexed, Segment,
                            Strided)
 
+Shard = _program.Shard
+
 
 def _is_static(stride) -> bool:
     return isinstance(stride, (int, np.integer))
-
-
-def _executor(tag: str, spec: AccessSpec, impl: str, builder):
-    return PLANS.get(("exec", tag, *spec.key(), impl), builder)
 
 
 # ---------------------------------------------------------------------------
@@ -62,42 +60,9 @@ def _static_strided(spec: Strided, stride) -> Strided | None:
     return None
 
 
-def _gather_strided_exec(spec: Strided, impl: str):
-    s, o, vl = spec.stride, spec.offset, spec.vl
-
-    def build():
-        if s < 0:
-            from repro.core import accessfuse
-            return lambda w: accessfuse.bank_gather_strided(w, s, o, vl)
-        if impl == "ref":
-            from repro.kernels import ref
-            return lambda w: ref.gather_strided(w, s, o, vl)
-        from repro.kernels import strided
-        return lambda w: strided.gather_strided(w, s, o, vl,
-                                                compiled=impl == "pallas")
-
-    return _executor("gather", spec, impl if s > 0 else "bank", build)
-
-
-def _scatter_strided_exec(spec: Strided, impl: str):
-    s, o = spec.stride, spec.offset
-
-    def build():
-        if s < 0:
-            from repro.core import accessfuse
-            return lambda w, v: accessfuse.bank_scatter_strided(w, v, s, o)
-        if impl == "ref":
-            from repro.kernels import ref
-            return lambda w, v: ref.scatter_strided(w, v, s, o)
-        from repro.kernels import strided
-        return lambda w, v: strided.scatter_strided(
-            w, v, s, o, compiled=impl == "pallas")
-
-    return _executor("scatter", spec, impl if s > 0 else "bank", build)
-
-
 def gather(spec: AccessSpec, buf: jax.Array, *, stride=None, shift=None,
-           valid=None, policy: Policy | str | None = None) -> jax.Array:
+           valid=None, policy: Policy | str | None = None,
+           shard: Shard | None = None) -> jax.Array:
     """Dense read through the access described by ``spec``.
 
     * :class:`Strided` — ``(..., n) -> (..., vl)``; a ``stride=vx.BANK``
@@ -106,36 +71,38 @@ def gather(spec: AccessSpec, buf: jax.Array, *, stride=None, shift=None,
       dynamic-count network otherwise; either sign engages the Reverser).
     * :class:`Indexed` — raw DROM gather with explicit per-lane ``shift``
       and ``valid`` operands.
+
+    ``shard=`` marks ``buf``'s lane axis as sharded: the access lowers to
+    shard-local offset-rebased plans under ``shard_map`` (replicated
+    output), never a global slice of the sharded leaf.
     """
     pol = resolve(policy)
     if isinstance(spec, Strided):
         spec = spec.bind(buf.dtype)
         static = _static_strided(spec, stride)
         if static is not None:
-            return _gather_strided_exec(static, pol.impl)(buf)
-        from repro.core import accessfuse
-        return accessfuse.bank_gather_strided(buf, stride, spec.offset,
-                                              spec.vl)
+            return _lower.run("gather.plan", static, pol.impl, buf,
+                              shard=shard)
+        return _lower.run("bank.gather", spec, pol.impl, buf, stride,
+                          shard=shard)
     if isinstance(spec, Indexed):
         if shift is None or valid is None:
             raise ValueError("Indexed gather needs shift= and valid=")
-        if pol.impl == "ref":
-            from repro.core import shiftnet
-            res = shiftnet.gather_network(buf, shift, valid, axis=-1)
-            return jnp.where(res.valid, res.payload,
-                             jnp.zeros_like(res.payload))
-        from repro.kernels import shift_gather as _sg
-        return _sg.shift_gather(buf, shift, valid)
+        return _lower.run("idx.gather", spec.bind(buf.dtype), pol.impl,
+                          buf, shift, valid, shard=shard)
     raise TypeError(f"gather does not accept {type(spec).__name__} specs")
 
 
 def scatter(spec: AccessSpec, buf: jax.Array, values: jax.Array, *,
             stride=None, shift=None, valid=None,
-            policy: Policy | str | None = None):
+            policy: Policy | str | None = None,
+            shard: Shard | None = None):
     """Write/merge through the access described by ``spec``.
 
     * :class:`Strided` — merge dense ``values`` into strided positions of
-      ``buf`` (read-modify-write; returns the updated window).
+      ``buf`` (read-modify-write; returns the updated window).  With
+      ``shard=`` the window stays sharded: each shard merges only the
+      value lanes it owns (rebased plan), no collective.
     * :class:`Indexed` — raw DROM scatter of ``values`` (``buf`` is unused;
       pass None); returns ``(payload, occupancy)``.
     * :class:`Compact` — expansion (the compaction inverse): ``buf`` is the
@@ -147,27 +114,18 @@ def scatter(spec: AccessSpec, buf: jax.Array, values: jax.Array, *,
         spec = spec.bind(buf.dtype)
         static = _static_strided(spec, stride)
         if static is not None:
-            return _scatter_strided_exec(static, pol.impl)(buf, values)
-        from repro.core import accessfuse
-        return accessfuse.bank_scatter_strided(buf, values, stride,
-                                               spec.offset)
+            return _lower.run("scatter.plan", static, pol.impl, buf, values,
+                              shard=shard)
+        return _lower.run("bank.scatter", spec, pol.impl, buf, values,
+                          stride, shard=shard)
     if isinstance(spec, Indexed):
         if shift is None or valid is None:
             raise ValueError("Indexed scatter needs shift= and valid=")
-        if pol.impl == "ref":
-            from repro.core import shiftnet
-            res = shiftnet.scatter_network(values, shift, valid, axis=-1)
-            return (jnp.where(res.valid, res.payload,
-                              jnp.zeros_like(res.payload)),
-                    jnp.broadcast_to(res.valid, values.shape))
-        from repro.kernels import shift_scatter as _ss
-        return _ss.shift_scatter(values, shift, valid)
+        return _lower.run("idx.scatter", spec.bind(values.dtype), pol.impl,
+                          values, shift, valid, shard=shard)
     if isinstance(spec, Compact):
-        if pol.impl == "ref":
-            from repro.kernels import ref
-            return ref.expand_rows(values, buf)
-        from repro.kernels import moe_compact
-        return moe_compact.expand_rows(values, buf)
+        return _lower.run("compact.expand", spec.bind(values.dtype),
+                          pol.impl, values, buf, shard=shard)
     raise TypeError(f"scatter does not accept {type(spec).__name__} specs")
 
 
@@ -175,39 +133,18 @@ def scatter(spec: AccessSpec, buf: jax.Array, values: jax.Array, *,
 # transpose (Segment): AoS <-> SoA
 # ---------------------------------------------------------------------------
 
-def _deinterleave_exec(spec: Segment, impl: str):
-    fields = spec.fields
-
-    def build():
-        if impl == "ref":
-            from repro.kernels import ref
-            return lambda a: ref.deinterleave(a, fields)
-        from repro.kernels import segment
-        return lambda a: segment.deinterleave(a, fields,
-                                              fused=impl == "pallas")
-
-    return _executor("deint", spec, impl, build)
-
-
-def _interleave_exec(spec: Segment, impl: str):
-    def build():
-        if impl == "ref":
-            from repro.kernels import ref
-            return lambda parts: ref.interleave(parts)
-        from repro.kernels import segment
-        return lambda parts: segment.interleave(parts,
-                                                fused=impl == "pallas")
-
-    return _executor("int", spec, impl, build)
-
-
-def transpose(spec: Segment, x, *, policy: Policy | str | None = None):
+def transpose(spec: Segment, x, *, policy: Policy | str | None = None,
+              shard: Shard | None = None):
     """Segment transposition, direction inferred from the operand:
 
     * a single AoS array ``(..., n)`` -> list of ``fields`` SoA arrays
       ``(..., n/fields)`` (segment load / deinterleave),
     * a sequence of ``fields`` SoA arrays -> one AoS array (segment store /
       interleave).
+
+    ``shard=`` (an OUTER axis, ``Shard.axis <= -2``) executes the lane
+    permutation shard-locally under ``shard_map`` — the sharded operand is
+    never gathered.
     """
     if not isinstance(spec, Segment):
         raise TypeError(f"transpose needs a Segment spec, got "
@@ -218,13 +155,13 @@ def transpose(spec: Segment, x, *, policy: Policy | str | None = None):
         if len(parts) != spec.fields:
             raise ValueError(f"expected {spec.fields} fields, "
                              f"got {len(parts)}")
-        spec = spec.bind(parts[0].dtype)
-        return _interleave_exec(spec, pol.impl)(parts)
+        return _lower.run("seg.int", spec.bind(parts[0].dtype), pol.impl,
+                          parts, shard=shard)
     if x.shape[-1] != spec.n:
         raise ValueError(f"AoS beat has {x.shape[-1]} lanes, spec.n is "
                          f"{spec.n}")
-    spec = spec.bind(x.dtype)
-    return _deinterleave_exec(spec, pol.impl)(x)
+    return _lower.run("seg.deint", spec.bind(x.dtype), pol.impl, x,
+                      shard=shard)
 
 
 # ---------------------------------------------------------------------------
@@ -245,66 +182,55 @@ def compact(spec: Compact, mask: jax.Array, rows: jax.Array | None = None,
                         f"{type(spec).__name__}")
     pol = resolve(policy)  # validate even on the impl-independent path
     if rows is None:
-        from repro.core import accessfuse
-        return accessfuse.compact_indices(mask, spec.capacity)
-    if pol.impl == "ref":
-        from repro.kernels import ref
-        packed, valid = ref.compact_rows(rows, mask)
-    else:
-        from repro.kernels import moe_compact
-        packed, valid = moe_compact.compact_rows(rows, mask)
-    cap = spec.capacity
-    if cap < packed.shape[0]:
-        packed = jax.lax.slice_in_dim(packed, 0, cap, axis=0)
-        valid = jax.lax.slice_in_dim(valid, 0, cap, axis=0)
-    return packed, valid
+        return _lower.run("compact.ids", spec, pol.impl, mask)
+    return _lower.run("compact.rows", spec.bind(rows.dtype), pol.impl,
+                      rows, mask)
 
 
 # ---------------------------------------------------------------------------
 # batched forms: one launch for a whole step's same-shape accesses
 # ---------------------------------------------------------------------------
 
-def gather_many(specs, bufs, *, policy: Policy | str | None = None):
+def gather_many(specs, bufs, *, policy: Policy | str | None = None,
+                shard: Shard | None = None):
     """Whole-step batched gather — ONE kernel launch, one mask operand.
 
     * ``specs`` a sequence of :class:`Strided` sharing (n, vl) with
       per-access (stride, offset), ``bufs`` the matching windows (a
       sequence, or an already-stacked ``(A, ..., n)`` array): the fused
-      concatenated-mask kernel.  Returns the stacked ``(A, ..., vl)``.
+      concatenated-mask transaction.  Returns the stacked ``(A, ..., vl)``.
     * ``specs`` a single :class:`Segment`, ``bufs`` a sequence of
-      same-shape AoS arrays: the step-fused segment load.  Returns one
+      same-shape AoS arrays: the step-fused segment load (``shard=``
+      supported: the stacked group transposes shard-locally).  Returns one
       field list per input array.
     """
     pol = resolve(policy)
     if isinstance(specs, Segment):
         aos_list = list(bufs)
         spec = specs.bind(aos_list[0].dtype)
-        if pol.impl != "ref":
-            from repro.kernels import segment
-            return segment.deinterleave_many(aos_list, spec.fields,
-                                             fused=pol.impl == "pallas")
-        outs = transpose(spec, jnp.stack(aos_list), policy=pol)
+        prog = _program.fuse([_lower.lower("seg.deint", spec, pol.impl,
+                                           shard)] * len(aos_list))
+        stacked = (aos_list[0] if len(aos_list) == 1
+                   else jnp.stack(aos_list))
+        outs = _lower.executor(prog, (spec,) * len(aos_list), shard)(stacked)
+        if len(aos_list) == 1:
+            return [list(outs)]
         return [[o[a] for o in outs] for a in range(len(aos_list))]
     specs = list(specs)
     if not specs or not all(isinstance(s, Strided) for s in specs):
         raise TypeError("gather_many needs Strided specs or one Segment")
-    vls = {s.vl for s in specs}
-    if len(vls) != 1 or len({s.n for s in specs}) != 1:
+    if len({s.vl for s in specs}) != 1 or len({s.n for s in specs}) != 1:
         raise ValueError("fused gather needs one shared (n, vl)")
-    vl = vls.pop()
     windows = bufs if isinstance(bufs, jax.Array) else jnp.stack(list(bufs))
-    pairs = tuple((s.stride, s.offset) for s in specs)
-    if pol.impl == "ref":
-        from repro.kernels import ref
-        return jnp.stack([ref.gather_strided(windows[a], s, o, vl)
-                          for a, (s, o) in enumerate(pairs)])
-    from repro.kernels import strided
-    return strided.gather_strided_fused(windows, pairs, vl,
-                                        compiled=pol.impl == "pallas")
+    specs = tuple(s.bind(windows.dtype) for s in specs)
+    prog = _program.fuse([_lower.lower("gather.plan", s, pol.impl, shard)
+                          for s in specs])
+    return _lower.executor(prog, specs, shard)(windows)
 
 
 def scatter_many(spec: Segment, groups: Sequence[Sequence[jax.Array]], *,
-                 policy: Policy | str | None = None) -> list[jax.Array]:
+                 policy: Policy | str | None = None,
+                 shard: Shard | None = None) -> list[jax.Array]:
     """Step-fused segment store: A same-shape SoA groups, ONE launch.
     Returns one AoS array per group."""
     if not isinstance(spec, Segment):
@@ -312,10 +238,14 @@ def scatter_many(spec: Segment, groups: Sequence[Sequence[jax.Array]], *,
     pol = resolve(policy)
     groups = [list(g) for g in groups]
     nf = spec.fields
+    spec = spec.bind(groups[0][0].dtype)
+    prog = _program.fuse([_lower.lower("seg.int", spec, pol.impl,
+                                       shard)] * len(groups))
+    fn = _lower.executor(prog, (spec,) * len(groups), shard)
     if len(groups) == 1:
-        return [transpose(spec, groups[0], policy=pol)]
+        return [fn(groups[0])]
     stacked = [jnp.stack([g[f] for g in groups]) for f in range(nf)]
-    out = transpose(spec.bind(stacked[0].dtype), stacked, policy=pol)
+    out = fn(stacked)
     return [out[a] for a in range(len(groups))]
 
 
@@ -324,12 +254,27 @@ def scatter_many(spec: Segment, groups: Sequence[Sequence[jax.Array]], *,
 # ---------------------------------------------------------------------------
 
 def warm(n: int, *, offset: int = 0, vl: int | None = None,
-         strided: bool = True, fields: tuple | None = None) -> None:
+         strided: bool = True, fields: tuple | None = None,
+         policy: Policy | str | None = None) -> None:
     """Precompile runtime-stride bank plans and segment plans for a window
     width (one-time host cost, so the first step never pays plan
     compilation).  ``strided=False`` skips the +-stride slots — serving
-    only consults the segment plans (the KV FIELD=2 split)."""
+    only consults the segment plans (the KV FIELD=2 split).
+
+    Resolves ``policy`` exactly like the verbs (explicit arg > innermost
+    ``vx.use`` scope > env/platform default), so prewarming compiles the
+    plans the governing policy will actually hit: bank slots are warmed
+    only when the policy carries a non-empty ``bank_strides`` set (the
+    bank itself always compiles the full :data:`~repro.vx.policy.
+    BANK_STRIDES` slot layout — its ``lax.switch`` shape is fixed), and
+    segment plans are skipped entirely under ``impl="ref"`` (the XLA path
+    never consults them)."""
     from repro.core import accessfuse
     from repro.vx.policy import BANK_FIELDS
-    accessfuse.warm(n, offset=offset, vl=vl, strided=strided,
-                    fields=BANK_FIELDS if fields is None else fields)
+    pol = resolve(policy)
+    fields = BANK_FIELDS if fields is None else fields
+    if pol.impl == "ref":
+        fields = ()
+    accessfuse.warm(n, offset=offset, vl=vl,
+                    strided=strided and bool(pol.bank_strides),
+                    fields=fields)

@@ -37,6 +37,7 @@ class PlanCache:
         self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
 
     def get(self, key: tuple, builder: Callable[[], Any]) -> Any:
         with self._lock:
@@ -53,6 +54,7 @@ class PlanCache:
             self._data[key] = value
             while len(self._data) > self.maxsize:
                 self._data.popitem(last=False)
+                self.evictions += 1
             return value
 
     def __len__(self) -> int:
@@ -69,12 +71,17 @@ class PlanCache:
     def clear(self) -> None:
         with self._lock:
             self._data.clear()
-            self.hits = self.misses = 0
+            self.hits = self.misses = self.evictions = 0
 
     def stats(self) -> dict:
+        """Hit/miss/evict counters — the steady-state health check: a
+        serving loop that keeps missing after warmup is recompiling plans
+        every step (an unstable cache key), which tests/test_serve.py
+        asserts against."""
         with self._lock:
             return {"size": len(self._data), "hits": self.hits,
-                    "misses": self.misses, "maxsize": self.maxsize}
+                    "misses": self.misses, "evictions": self.evictions,
+                    "maxsize": self.maxsize}
 
 
 #: The process-wide plan cache: shift plans, plan banks, segment strategy

@@ -1,0 +1,198 @@
+"""The access-program IR — stage three of the vx pipeline.
+
+Since PR 4 every vx verb lowers through an explicit three-stage pipeline:
+
+    spec     (vx/spec.py)     WHAT is accessed — the frozen AccessSpec,
+    plan     (core/shiftplan) HOW lanes route — compiled shift plans /
+                              runtime plan banks,
+    program  (this module)    WHAT EXECUTES, AND WHERE — a small list of
+                              routed transactions with placement
+                              annotations.
+
+A :class:`Program` is pure data: a tuple of :class:`Txn` (routed
+transactions).  Each Txn names the executing operation (``op``), the spec
+keys it serves (``specs`` — more than one when a step-level fusion pass
+merged accesses into one super-transaction), the resolved lowering
+(``impl``), and a placement (``layout`` — ``None`` for replicated
+execution, or a :meth:`Shard.layout` tuple for shard-local execution under
+``shard_map``).
+
+Programs are hashable and feed the unified plan cache: the compiled
+executor for a program is memoized in ``vx.PLANS`` under
+``Program.key()``, which therefore includes the SHARD LAYOUT — the same
+spec lowered against two different placements yields two distinct cached
+programs (regression-tested in tests/test_vx_api.py).  This is the SPMD
+analogue of Ara's register-file-aware memory datapath: the lowering is
+co-designed with how the buffer is physically distributed, instead of
+slicing a sharded leaf globally and letting the partitioner rematerialize.
+
+The fusion pass (:func:`fuse`) is how ``accessfuse.StepScheduler``
+participates: it merges single-transaction programs over same-shape
+accesses into ONE wide transaction (width = number of merged accesses)
+instead of maintaining a parallel execution path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Sequence
+
+from repro.vx.spec import AccessSpec
+
+
+# ---------------------------------------------------------------------------
+# Placement
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Shard:
+    """Operand placement: buffer axis ``axis`` is sharded over mesh
+    ``axes`` (contiguous equal blocks, first axis major — the
+    ``PartitionSpec`` split order).
+
+    ``axis`` counts from the END (must be negative) so the annotation
+    stays valid when a fusion pass stacks accesses along a new leading
+    dim.  ``axis == -1`` shards the ACCESSED lane axis itself — strided
+    programs then rebase offsets per shard; any other axis is elementwise
+    for lane-permutation programs, which execute shard-locally with the
+    unmodified plan.
+
+    ``mesh`` is excluded from dataclass equality/hashing but IS part of
+    :meth:`layout` (the cache key): two meshes with the same axis names
+    and shard count but different shapes or device assignments must not
+    share a compiled executor — the executor closes over the mesh (its
+    ``shard_map`` and shard-index flattening), so a shared entry would
+    silently execute on the first mesh seen.  ``jax.sharding.Mesh`` is
+    hashable and compares by devices + axis names, so equal meshes still
+    share one entry.
+    """
+
+    axes: tuple
+    axis: int
+    mesh: Any = dataclasses.field(default=None, compare=False)
+
+    def __post_init__(self):
+        object.__setattr__(self, "axes", tuple(self.axes))
+        if not self.axes:
+            raise ValueError("Shard needs at least one mesh axis")
+        if self.axis >= 0:
+            raise ValueError(
+                f"Shard.axis counts from the end (negative), got "
+                f"{self.axis} — a leading-axis index would silently point "
+                f"at a different dim once a fusion pass stacks operands")
+        if self.mesh is None:
+            raise ValueError("Shard needs the executing mesh")
+
+    @property
+    def nshards(self) -> int:
+        return math.prod(self.mesh.shape[a] for a in self.axes)
+
+    def layout(self) -> tuple:
+        """The hashable placement key: (axis names, buffer axis, count,
+        mesh) — see the class docstring for why the mesh is included."""
+        return (self.axes, self.axis, self.nshards, self.mesh)
+
+    def divides(self, dim: int) -> bool:
+        return dim % self.nshards == 0
+
+
+def layout_of(shard: "Shard | None") -> tuple | None:
+    return None if shard is None else shard.layout()
+
+
+# ---------------------------------------------------------------------------
+# Transactions and programs
+# ---------------------------------------------------------------------------
+
+#: Ops a Txn may name.  ``*.plan`` ops consume compiled shift plans;
+#: ``bank.*`` dispatch a runtime stride over the plan bank's lax.switch;
+#: ``idx.*`` are the raw DROM network; ``compact.*`` the MoE primitives.
+OPS = (
+    "gather.plan", "scatter.plan", "bank.gather", "bank.scatter",
+    "seg.deint", "seg.int", "idx.gather", "idx.scatter",
+    "compact.rows", "compact.ids", "compact.expand",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Txn:
+    """One routed transaction: op x specs x lowering x placement."""
+
+    op: str
+    specs: tuple                  # tuple of AccessSpec.key() tuples
+    impl: str
+    layout: tuple | None = None   # Shard.layout() | None (replicated)
+
+    def __post_init__(self):
+        if self.op not in OPS:
+            raise ValueError(f"unknown txn op {self.op!r}")
+        object.__setattr__(self, "specs", tuple(self.specs))
+
+    @property
+    def width(self) -> int:
+        """Fused arity: how many accesses this transaction serves."""
+        return len(self.specs)
+
+    @property
+    def homogeneous(self) -> bool:
+        return len(set(self.specs)) == 1
+
+
+@dataclasses.dataclass(frozen=True)
+class Program:
+    """A lowered access: the (usually singleton) transaction list."""
+
+    txns: tuple
+
+    def __post_init__(self):
+        object.__setattr__(self, "txns", tuple(self.txns))
+        if not self.txns:
+            raise ValueError("empty program")
+
+    def key(self) -> tuple:
+        """The plan-cache key — includes every txn's specs (hence dtype
+        and vl) AND its shard layout."""
+        return ("prog", self.txns)
+
+    @property
+    def txn(self) -> Txn:
+        """The single transaction of a 1-txn program."""
+        if len(self.txns) != 1:
+            raise ValueError(f"program has {len(self.txns)} txns")
+        return self.txns[0]
+
+    @property
+    def width(self) -> int:
+        return sum(t.width for t in self.txns)
+
+
+def single(op: str, specs: Sequence[AccessSpec] | AccessSpec, impl: str,
+           shard: "Shard | None" = None) -> Program:
+    """A one-transaction program over ``specs`` (spec objects, keyed)."""
+    if isinstance(specs, AccessSpec):
+        specs = (specs,)
+    return Program((Txn(op, tuple(s.key() for s in specs), impl,
+                        layout_of(shard)),))
+
+
+# ---------------------------------------------------------------------------
+# Program-level fusion (the StepScheduler pass)
+# ---------------------------------------------------------------------------
+
+def fuse(programs: Sequence[Program]) -> Program:
+    """Merge single-transaction programs into ONE wide transaction.
+
+    This is the step scheduler's merge expressed at the program level: the
+    N per-access transactions become one transaction of width N (one
+    kernel launch, one concatenated mask operand).  All inputs must agree
+    on (op, impl, layout); spec compatibility (shared (n, vl) for strided,
+    identical specs for segment) is the executor's contract and is
+    enforced at compile time in ``vx/lower.py``.
+    """
+    txns = [p.txn for p in programs]
+    heads = {(t.op, t.impl, t.layout) for t in txns}
+    if len(heads) != 1:
+        raise ValueError(f"cannot fuse mixed transactions: {sorted(heads)}")
+    op, impl, layout = heads.pop()
+    specs = tuple(s for t in txns for s in t.specs)
+    return Program((Txn(op, specs, impl, layout),))

@@ -157,12 +157,169 @@ def check_seq_parallel_decode():
     print("CHECK_OK")
 
 
+def _longctx_setup(seq=32, batch=8):
+    import dataclasses
+    from repro.configs import get_arch
+    from repro.configs.base import decode_inputs
+    from repro.models.transformer import init_params
+
+    cfg = get_arch("qwen3-0.6b").smoke
+    params = init_params(cfg, jax.random.key(0))
+
+    def fresh_cache():
+        cache, token = decode_inputs(cfg, seq=seq, batch=batch, specs=False,
+                                     cache_dtype=jnp.float32)
+        cache["len"] = jnp.asarray(seq // 2, jnp.int32)
+        cache["blocks"] = jax.tree.map(
+            lambda a: jax.random.normal(jax.random.key(2), a.shape, a.dtype)
+            if a.dtype != jnp.int32 else a, cache["blocks"])
+        return cache, token
+
+    return cfg, params, fresh_cache
+
+
+def check_longctx_fused_decode():
+    """PR 4 headline: the seq-sharded long-context decode step runs WITH
+    step fusion — bit-exact vs the per-access oracle on the same
+    placement, close to the unsharded oracle, and the fused path
+    introduces no cache-sized all-gather (the old involuntary SPMD
+    rematerialization)."""
+    import re
+    from repro.launch.mesh import make_ctx, make_test_mesh
+    from repro.models import decode as dec
+    from repro.serve.engine import ServeConfig, jit_decode_step
+
+    cfg, params, fresh_cache = _longctx_setup()
+    cache, token = fresh_cache()
+    logits_ref, _ = jax.jit(
+        lambda p, c, t: dec.decode_step(p, c, t, cfg, None, fuse=False))(
+            params, cache, token)
+
+    mesh = make_test_mesh((2, 4), ("data", "model"))
+    ctx = make_ctx(mesh, long_context=True)
+    texts, logits, caches = {}, {}, {}
+    for fuse in (True, False):
+        scfg = ServeConfig(max_len=32, long_context=True, step_fusion=fuse)
+        cache, token = fresh_cache()
+        step = jit_decode_step(cfg, ctx, scfg, params, cache)
+        texts[fuse] = step.lower(params, cache, token).compile().as_text()
+        logits[fuse], caches[fuse] = step(params, cache, token)
+
+    np.testing.assert_array_equal(np.asarray(logits[True]),
+                                  np.asarray(logits[False]))
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), caches[True], caches[False])
+    np.testing.assert_allclose(np.asarray(logits[True], np.float32),
+                               np.asarray(logits_ref, np.float32),
+                               rtol=3e-3, atol=3e-3)
+
+    # No involuntary full-cache rematerialization: fusion must not add
+    # all-gathers, and none of the fused step's all-gathers may span a
+    # full KV-cache leaf (global slice of the seq-sharded pre-split
+    # leaves — the exact failure mode that forced per-access before).
+    leaf_elems = {int(np.prod(a.shape))
+                  for a in jax.tree.leaves(fresh_cache()[0]["blocks"])}
+    for name, txt in (("fused", texts[True]), ("per", texts[False])):
+        ag = [np.prod([int(d) for d in dims.split(",") if d])
+              for dims in re.findall(r"\S+\[([\d,]*)\][^\n]*all-gather",
+                                     txt)]
+        big = [int(e) for e in ag if e in leaf_elems]
+        assert not big, (name, big)
+    assert texts[True].count("all-gather") <= texts[False].count(
+        "all-gather")
+    print("CHECK_OK")
+
+
+def check_longctx_launch_gate():
+    """Sharded mirror of tests/test_step_fusion.py's jaxpr-level gate:
+    the seq-sharded fused decode step must issue >= 2x fewer kernel
+    launches AND mask operands than the sharded per-access path (counts
+    include shard_map bodies)."""
+    from repro import vx
+    from repro.core import accessfuse
+    from repro.launch.mesh import make_ctx, make_test_mesh
+    from repro.models import decode as dec
+
+    cfg, params, fresh_cache = _longctx_setup()
+    cache, token = fresh_cache()
+    mesh = make_test_mesh((2, 4), ("data", "model"))
+    ctx = make_ctx(mesh, long_context=True)
+    shard = ctx.vx_seq_shard(-3)
+    assert shard is not None and shard.nshards == 8
+
+    def fused(p, c, t):
+        return dec.decode_step(p, c, t, cfg, ctx, fuse=True,
+                               kv_shard=shard)
+
+    def per_access(p, c, t):
+        return dec.decode_step(p, c, t, cfg, ctx, fuse=False)
+
+    with vx.use("pallas"), accessfuse.pinned_kernel_lowering():
+        lf, mf = accessfuse.jaxpr_access_counts(fused, params, cache, token)
+    with vx.use("pallas"):
+        lp, mp = accessfuse.jaxpr_access_counts(per_access, params, cache,
+                                                token)
+    assert lf >= 1 and mf >= 1, (lf, mf)
+    assert 2 * lf <= lp, (lf, lp)
+    assert 2 * mf <= mp, (mf, mp)
+    print("CHECK_OK")
+
+
+def check_sharded_vx_property():
+    """Property sweep: shard-local gather/scatter/transpose match the
+    unsharded oracle bit-exactly across layouts (1- and 2-axis meshes),
+    strides of either sign, offsets, and field counts."""
+    from repro import vx
+    from repro.dist.sharding import make_mesh
+
+    rng = np.random.default_rng(0)
+    layouts = [((8,), ("s",)), ((2, 4), ("a", "b")), ((4, 2), ("a", "b"))]
+    for shape, axes in layouts:
+        mesh = make_mesh(shape, axes)
+        lane = vx.Shard(axes=axes, axis=-1, mesh=mesh)
+        outer = vx.Shard(axes=axes, axis=-2, mesh=mesh)
+        n = 64
+        w = jnp.asarray(rng.normal(size=(3, n)), jnp.float32)
+        for stride, offset in [(1, 0), (2, 3), (3, 1), (5, 2), (7, 1),
+                               (-1, 63), (-2, 50), (-4, 40)]:
+            vl = 8
+            spec = vx.Strided(n=n, stride=stride, offset=offset, vl=vl)
+            want = vx.gather(spec, w, policy="ref")
+            got = jax.jit(lambda x: vx.gather(spec, x, policy="ref",
+                                              shard=lane))(w)
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+            vals = jnp.asarray(rng.normal(size=(3, vl)), jnp.float32)
+            want_s = vx.scatter(spec, w, vals, policy="ref")
+            got_s = jax.jit(lambda x, v: vx.scatter(spec, x, v,
+                                                    policy="ref",
+                                                    shard=lane))(w, vals)
+            np.testing.assert_array_equal(np.asarray(got_s),
+                                          np.asarray(want_s))
+        for fields in (2, 4):
+            aos = jnp.asarray(rng.normal(size=(2, 16, 8 * fields)),
+                              jnp.float32)
+            spec = vx.Segment(n=8 * fields, fields=fields)
+            want = vx.transpose(spec, aos, policy="ref")
+            got = jax.jit(lambda x: vx.transpose(spec, x, policy="ref",
+                                                 shard=outer))(aos)
+            for g, ww in zip(got, want):
+                np.testing.assert_array_equal(np.asarray(g),
+                                              np.asarray(ww))
+            back = jax.jit(lambda parts: vx.transpose(
+                spec, list(parts), policy="ref", shard=outer))(tuple(got))
+            np.testing.assert_array_equal(np.asarray(back), np.asarray(aos))
+    print("CHECK_OK")
+
+
 CHECKS = {
     "moe_ep_equivalence": check_moe_ep_equivalence,
     "sharded_train_step": check_sharded_train_step,
     "pipeline_equivalence": check_pipeline_equivalence,
     "elastic_reshard": check_elastic_reshard,
     "seq_parallel_decode": check_seq_parallel_decode,
+    "longctx_fused_decode": check_longctx_fused_decode,
+    "longctx_launch_gate": check_longctx_launch_gate,
+    "sharded_vx_property": check_sharded_vx_property,
 }
 
 if __name__ == "__main__":

@@ -7,7 +7,9 @@ import sys
 import pytest
 
 CHECKS = ["moe_ep_equivalence", "sharded_train_step",
-          "pipeline_equivalence", "elastic_reshard", "seq_parallel_decode"]
+          "pipeline_equivalence", "elastic_reshard", "seq_parallel_decode",
+          "longctx_fused_decode", "longctx_launch_gate",
+          "sharded_vx_property"]
 
 
 @pytest.mark.parametrize("check", CHECKS)

@@ -64,3 +64,33 @@ def test_cache_len_tracks_steps():
     server.step()
     server.step()
     assert int(server.cache["len"]) == 2
+
+
+def test_plan_cache_zero_steady_state_misses():
+    """Repeated decode steps must never miss the plan cache after warmup:
+    a steady-state miss means an unstable cache key is silently
+    recompiling plans (or re-lowering programs) every step."""
+    from repro import vx
+    cfg, server = _server()
+    server.add_request(5)
+    server.step()                       # warmup: traces + compiles plans
+    warm = vx.PLANS.stats()
+    for _ in range(4):
+        server.step()
+    steady = vx.PLANS.stats()
+    assert steady["misses"] == warm["misses"], (warm, steady)
+    assert steady["evictions"] == warm["evictions"], (warm, steady)
+
+
+def test_plan_cache_stats_counters():
+    from repro import vx
+    c = vx.PlanCache(maxsize=2)
+    assert c.stats() == {"size": 0, "hits": 0, "misses": 0,
+                         "evictions": 0, "maxsize": 2}
+    c.get(("a",), lambda: 1)
+    c.get(("a",), lambda: 1)
+    c.get(("b",), lambda: 2)
+    c.get(("c",), lambda: 3)            # evicts ("a",)
+    s = c.stats()
+    assert s["hits"] == 1 and s["misses"] == 3 and s["evictions"] == 1
+    assert ("a",) not in c and ("c",) in c

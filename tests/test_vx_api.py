@@ -228,6 +228,19 @@ def test_policy_validation():
 # 3. plan-cache keys include dtype and vl (collision regression)
 # ---------------------------------------------------------------------------
 
+def _gather_prog_keys(n: int, offset: int) -> list:
+    """Cached gather programs touching window width n at this offset."""
+    out = []
+    for k in vx.PLANS.keys():
+        if not (isinstance(k, tuple) and k and k[0] == "prog"):
+            continue
+        for txn in k[1]:
+            if txn.op == "gather.plan" and any(
+                    n in sk and offset in sk for sk in txn.specs):
+                out.append(txn)
+    return out
+
+
 def test_plan_cache_distinguishes_dtypes():
     n, stride, vl = 64, 2, 16
     w8 = jnp.arange(n, dtype=jnp.int8)[None] % 100
@@ -240,11 +253,115 @@ def test_plan_cache_distinguishes_dtypes():
         np.asarray(got8), np.asarray(w8[:, 11:11 + stride * vl:stride]))
     np.testing.assert_array_equal(
         np.asarray(got32), np.asarray(w32[:, 11:11 + stride * vl:stride]))
-    # the two accesses may never share an executor entry: one per dtype
-    keys = [k for k in vx.PLANS.keys()
-            if k[:2] == ("exec", "gather") and n in k and 11 in k]
-    dtypes = {f for k in keys for f in k if f in ("int8", "float32")}
-    assert {"int8", "float32"} <= dtypes, keys
+    # the two accesses may never share a program entry: one per dtype
+    txns = _gather_prog_keys(n, 11)
+    dtypes = {f for t in txns for sk in t.specs for f in sk
+              if f in ("int8", "float32")}
+    assert {"int8", "float32"} <= dtypes, txns
+
+
+def test_same_spec_two_layouts_distinct_cached_programs():
+    """PR 4 regression: vx.PLANS keys include the shard layout — the same
+    spec lowered against two placements yields two distinct cached
+    programs (and a third for the replicated lowering)."""
+    from repro.dist.sharding import make_mesh
+    from repro.vx import lower as vxlower
+    mesh_a = make_mesh((1,), ("a",))
+    mesh_b = make_mesh((1,), ("b",))
+    spec = vx.Strided(n=48, stride=3, vl=8, offset=1, dtype="float32")
+    progs = [
+        vxlower.lower("gather.plan", spec, "ref"),
+        vxlower.lower("gather.plan", spec, "ref",
+                      vx.Shard(axes=("a",), axis=-1, mesh=mesh_a)),
+        vxlower.lower("gather.plan", spec, "ref",
+                      vx.Shard(axes=("b",), axis=-1, mesh=mesh_b)),
+    ]
+    keys = {p.key() for p in progs}
+    assert len(keys) == 3, keys
+    # executing all three populates three distinct cache entries, and the
+    # 1-shard shard_map lowerings agree with the replicated one
+    w = jnp.arange(48, dtype=jnp.float32)[None]
+    shards = [None,
+              vx.Shard(axes=("a",), axis=-1, mesh=mesh_a),
+              vx.Shard(axes=("b",), axis=-1, mesh=mesh_b)]
+    outs = [vxlower.executor(p, spec, sh)(w)
+            for p, sh in zip(progs, shards)]
+    for o in outs[1:]:
+        np.testing.assert_array_equal(np.asarray(o), np.asarray(outs[0]))
+    cached = [p.key() for p in progs if p.key() in vx.PLANS]
+    assert len(cached) == 3, cached
+
+
+def test_layout_key_includes_mesh():
+    """The mesh is part of the layout key: the compiled sharded executor
+    closes over its mesh (shard_map + shard-index flattening), so two
+    unequal meshes — even with the same axis names and shard count —
+    must not share an entry (e.g. a (2,4) and a (4,2) mesh over the same
+    axes)."""
+    from repro.dist.sharding import make_mesh
+    from repro.vx import lower as vxlower
+    mesh_ab = make_mesh((1, 1), ("a", "b"))
+    mesh_ba = make_mesh((1, 1), ("b", "a"))   # unequal mesh, same names
+    spec = vx.Strided(n=48, stride=2, vl=8, dtype="float32")
+    p1 = vxlower.lower("gather.plan", spec, "ref",
+                       vx.Shard(axes=("a", "b"), axis=-1, mesh=mesh_ab))
+    p2 = vxlower.lower("gather.plan", spec, "ref",
+                       vx.Shard(axes=("a", "b"), axis=-1, mesh=mesh_ba))
+    assert p1.key() != p2.key()
+    assert p1.key() == vxlower.lower(
+        "gather.plan", spec, "ref",
+        vx.Shard(axes=("a", "b"), axis=-1, mesh=mesh_ab)).key()
+
+
+def test_sharded_gather_many_rejects_heterogeneous_specs():
+    """program.fuse reaches the sharded builder with width > 1; a
+    heterogeneous group must error, never apply spec 0's plan to every
+    stacked row."""
+    from repro.dist.sharding import make_mesh
+    mesh = make_mesh((1,), ("a",))
+    shard = vx.Shard(axes=("a",), axis=-1, mesh=mesh)
+    wins = jnp.stack([jnp.arange(64.0)] * 2)[:, None, :]
+    specs = [vx.Strided(n=64, stride=2, offset=0, vl=8),
+             vx.Strided(n=64, stride=3, offset=1, vl=8)]
+    with pytest.raises(NotImplementedError, match="heterogeneous"):
+        vx.gather_many(specs, wins, policy="ref", shard=shard)
+    # homogeneous fused groups keep their sharded lowering
+    same = [vx.Strided(n=64, stride=2, offset=0, vl=8)] * 2
+    got = vx.gather_many(same, wins, policy="ref", shard=shard)
+    want = vx.gather_many(same, wins, policy="ref")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_sharded_lowering_rejects_bad_placements():
+    from repro.dist.sharding import make_mesh
+    from repro.vx import lower as vxlower
+    mesh = make_mesh((1,), ("a",))
+    sh_lane = vx.Shard(axes=("a",), axis=-1, mesh=mesh)
+    sh_outer = vx.Shard(axes=("a",), axis=-2, mesh=mesh)
+    with pytest.raises(ValueError, match="lane axis"):
+        vxlower.lower("gather.plan", vx.Strided(n=8, stride=2, vl=4),
+                      "ref", sh_outer)
+    with pytest.raises(ValueError, match="permutes the lane axis"):
+        vxlower.lower("seg.deint", vx.Segment(n=8, fields=2), "ref",
+                      sh_lane)
+    with pytest.raises(NotImplementedError):
+        vxlower.lower("compact.rows", vx.Compact(n=8), "ref", sh_lane)
+    with pytest.raises(NotImplementedError, match="runtime-stride"):
+        vxlower.lower("gather.plan", vx.Strided(n=8, stride=vx.BANK, vl=4),
+                      "ref", sh_lane)
+    with pytest.raises(ValueError, match="counts from the end"):
+        vx.Shard(axes=("a",), axis=1, mesh=mesh)
+
+
+def test_verbs_lower_through_programs():
+    """The pipeline is the ONE path: a verb call lands a 'prog'-keyed
+    entry whose transaction carries the spec key (dtype + vl included)."""
+    spec = vx.Strided(n=40, stride=5, vl=8, offset=2)
+    w = jnp.arange(40, dtype=jnp.float16)[None]
+    vx.gather(spec, w, policy="ref")
+    bound = spec.bind(w.dtype)
+    want = vx.program.single("gather.plan", bound, "ref")
+    assert want.key() in vx.PLANS
 
 
 def test_plan_cache_distinguishes_vl():
@@ -293,6 +410,27 @@ def test_default_policy_resolves_env(monkeypatch):
     import dataclasses
     pinned = dataclasses.replace(cfg, kernel_impl="ref")
     assert pinned.vx_policy.impl == "ref"
+
+
+def test_warm_resolves_policy_like_verbs():
+    """vx.warm honors policy= / the vx.use scope / the env default exactly
+    like the verbs, so prewarming compiles the plans the governing policy
+    will actually hit — and nothing under impl='ref', whose XLA path never
+    consults segment plans."""
+    n = 192                      # distinctive width: nothing else warms it
+    key = ("plan.segment_deint", n, 2)
+    assert key not in vx.PLANS
+    with vx.use("ref"):
+        vx.warm(n, strided=False, fields=(2,))
+    assert key not in vx.PLANS
+    with vx.use("pallas"):
+        vx.warm(n, strided=False, fields=(2,))
+    assert key in vx.PLANS
+    # explicit policy= beats the scope, like any verb
+    n2 = 224
+    with vx.use("ref"):
+        vx.warm(n2, strided=False, fields=(2,), policy="pallas")
+    assert ("plan.segment_deint", n2, 2) in vx.PLANS
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,231 @@
+"""Paged serving suite — the continuous-batching runtime's scoreboard.
+
+Two measurements, same-run (relative, XLA CPU):
+
+  * ``serve/step_paged`` — one steady-state decode step, all slots
+    active: the jit'd PAGED step (per-slot positions, page-table reads
+    through ``vx.Paged``, fused page gather + fused FIELD=2 split) vs the
+    jit'd DENSE step (fixed-slot cache, shared position counter — the
+    pre-PR 5 engine).  Wall medians plus the gather-equation drop.
+  * ``serve/trace_mixed`` — a seeded MIXED-LENGTH request trace (varied
+    prompt lengths, varied generation lengths, staggered arrivals) driven
+    through the paged ``Scheduler`` (admission, prefill, active-set
+    batching, reclamation on finish) vs the dense fixed-slot server
+    replayed on the same trace.  Tracked claims: tokens/s parity and PEAK
+    CACHE BYTES — the paged runtime's peak scales with concurrently
+    ACTIVE tokens (pages in use), the dense cache is a constant
+    ``slots * max_len`` allocation regardless of traffic.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from benchmarks.common import emit, time_jit
+from repro.kernels._common import pytree_nbytes
+from repro.models import decode as dec
+from repro.models.transformer import ModelConfig, init_params
+from repro.serve.scheduler import Scheduler
+
+
+def _cfg() -> ModelConfig:
+    # two attn positions x two superblocks, unrolled: the per-access path
+    # pays 4 page gathers per step, the fused path ONE (countable claim).
+    # d_model 256 keeps the step compute-dominant, so the tokens/s
+    # comparison is not a pure dispatch-overhead race.
+    return ModelConfig(
+        name="bench-serve", d_model=256, n_layers=4, n_heads=4,
+        n_kv_heads=2, d_ff=512, vocab=512, head_dim=64, mlp="swiglu",
+        block_pattern=("attn", "attn"), window_pattern=(None, None),
+        moe_pattern=(False, False),
+        scan_layers=False, kernel_impl="ref", remat="none")
+
+
+class _DenseServer:
+    """The pre-PR 5 dense fixed-slot server (shared position counter,
+    single-token admission) — the trace comparator."""
+
+    def __init__(self, cfg, params, *, slots, max_len):
+        self.cfg, self.params = cfg, params
+        self.slots = slots
+        self.cache = dec.init_cache(cfg, slots, max_len, jnp.float32)
+        self.step_fn = jax.jit(
+            lambda p, c, t: dec.decode_step(p, c, t, cfg, None),
+            donate_argnums=1)
+        self.active = [False] * slots
+        self.tokens = [[] for _ in range(slots)]
+
+    def add_request(self, prompt):
+        toks = prompt if isinstance(prompt, list) else [prompt]
+        for s in range(self.slots):
+            if not self.active[s]:
+                self.active[s] = True
+                # dense engine has no prefill path: prompt collapses to
+                # its last token (the old single-token limitation)
+                self.tokens[s] = [toks[-1]]
+                return s
+        raise RuntimeError("no free slot")
+
+    def step(self):
+        cur = jnp.asarray([self.tokens[s][-1] if self.active[s] else 0
+                           for s in range(self.slots)], jnp.int32)
+        logits, self.cache = self.step_fn(self.params, self.cache, cur)
+        nxt = np.asarray(jnp.argmax(logits.astype(jnp.float32), axis=-1))
+        for s in range(self.slots):
+            if self.active[s]:
+                self.tokens[s].append(int(nxt[s]))
+
+    def finish(self, slot):
+        self.active[slot] = False
+        return self.tokens[slot]
+
+
+def _trace(slots: int, n_requests: int, max_len: int, seed: int = 0):
+    """(arrival_step, prompt, gen_len) mixed-length request trace."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for r in range(n_requests):
+        plen = int(rng.integers(1, max(2, max_len // 4)))
+        prompt = rng.integers(0, 500, plen).tolist()
+        gen = int(rng.integers(4, max(5, max_len // 3)))
+        out.append((int(rng.integers(0, 3)) + 2 * r // slots, prompt, gen))
+    return out
+
+
+def _run_trace(server, trace, peak_bytes_fn) -> tuple[float, int, int]:
+    """(wall_s, generated_tokens, peak_cache_bytes) of a trace replay."""
+    pending = sorted(trace, key=lambda t: t[0])
+    live: dict[int, int] = {}          # slot -> remaining tokens
+    done = 0
+    generated = 0
+    peak = 0
+    step_no = 0
+    t0 = time.perf_counter()
+    while done < len(trace):
+        while pending and pending[0][0] <= step_no and \
+                len(live) < server.slots:
+            _, prompt, gen = pending.pop(0)
+            slot = server.add_request(prompt)
+            live[slot] = gen
+        if live:
+            server.step()
+            generated += len(live)
+            for slot in list(live):
+                live[slot] -= 1
+                if live[slot] == 0:
+                    server.finish(slot)
+                    del live[slot]
+                    done += 1
+        peak = max(peak, peak_bytes_fn())
+        step_no += 1
+    return time.perf_counter() - t0, generated, peak
+
+
+def _count_gathers(fn, *args) -> int:
+    def rec(jaxpr):
+        c = 0
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "gather":
+                c += 1
+            for v in eqn.params.values():
+                vs = v if isinstance(v, (list, tuple)) else [v]
+                for x in vs:
+                    sub = x if hasattr(x, "eqns") else (
+                        x.jaxpr if hasattr(x, "jaxpr")
+                        and hasattr(x.jaxpr, "eqns") else None)
+                    if sub is not None:
+                        c += rec(sub)
+        return c
+    return rec(jax.make_jaxpr(lambda *a: fn(*a))(*args).jaxpr)
+
+
+def _bench_step() -> None:
+    cfg = _cfg()
+    params = init_params(cfg, jax.random.key(0))
+    slots, max_len, ps = 4, 128, 16
+    dense = dec.init_cache(cfg, slots, max_len, jnp.float32)
+    paged = dec.init_paged_cache(cfg, slots, max_len, ps, jnp.float32)
+    tok = jnp.arange(slots, dtype=jnp.int32) % cfg.vocab
+
+    def paged_fused(p, c, t):
+        return dec.paged_decode_step(p, c, t, cfg, None, fuse=True)
+
+    def paged_per_access(p, c, t):
+        return dec.paged_decode_step(p, c, t, cfg, None, fuse=False)
+
+    def dense_step(p, c, t):
+        return dec.decode_step(p, c, t, cfg, None, fuse=True)
+
+    t_paged = time_jit(paged_fused, params, paged, tok)
+    t_dense = time_jit(dense_step, params, dense, tok)
+    # the tracked claim is deterministic: the fused paged step collapses
+    # every layer's page-table read into ONE gather program (wall ratios
+    # on shared XLA-CPU runners sit in the dispatch-noise floor)
+    gf = _count_gathers(paged_fused, params, paged, tok)
+    gp = _count_gathers(paged_per_access, params, paged, tok)
+    emit("serve/step_paged", t_paged,
+         f"dense_us={t_dense:.1f} ratio={t_paged / max(t_dense, 1e-9):.2f}x "
+         f"paged_gathers={gf}vs{gp} slots={slots} max_len={max_len} "
+         f"page={ps} dispatch_noise_bound=true",
+         dense_us=round(t_dense, 2),
+         vs_dense=round(t_paged / max(t_dense, 1e-9), 3),
+         gathers_fused=gf, gathers_per_access=gp,
+         dispatch_noise_bound=True,
+         slots=slots, max_len=max_len, page_size=ps)
+
+
+def _bench_trace() -> None:
+    cfg = _cfg()
+    params = init_params(cfg, jax.random.key(0))
+    slots = 4
+    max_len = 64 if common.QUICK else 128
+    n_req = 8 if common.QUICK else 24
+    ps = 16
+    trace = _trace(slots, n_req, max_len)
+
+    # jits are per-instance closures: warm each server by replaying the
+    # whole trace once (drains back to empty — every request finishes),
+    # then time the second replay
+    sched = Scheduler(cfg, params, slots=slots, max_len=max_len,
+                      page_size=ps)
+    _run_trace(sched, trace, sched.cache.used_cache_bytes)
+    wall_p, gen_p, peak_p = _run_trace(
+        sched, trace, sched.cache.used_cache_bytes)
+
+    dense = _DenseServer(cfg, params, slots=slots, max_len=max_len)
+    dense_bytes = pytree_nbytes(dense.cache)
+    _run_trace(dense, trace, lambda: dense_bytes)
+    dense.cache = dec.init_cache(cfg, slots, max_len, jnp.float32)
+    wall_d, gen_d, _ = _run_trace(dense, trace, lambda: dense_bytes)
+
+    tps_p = gen_p / max(wall_p, 1e-9)
+    tps_d = gen_d / max(wall_d, 1e-9)
+    # tracked claim: PEAK CACHE BYTES follow the trace's concurrently
+    # active tokens (pages in use), not the constant slots x max_len
+    # dense allocation; tokens/s is reported for parity but wall time on
+    # shared runners is host-noise bound
+    emit("serve/trace_mixed", wall_p * 1e6 / max(gen_p, 1),
+         f"paged_tok_s={tps_p:.1f} dense_tok_s={tps_d:.1f} "
+         f"peak_paged_bytes={peak_p} dense_bytes={dense_bytes} "
+         f"mem_ratio={dense_bytes / max(peak_p, 1):.2f}x requests={n_req} "
+         f"host_noise_bound=true",
+         paged_tok_s=round(tps_p, 2), dense_tok_s=round(tps_d, 2),
+         tok_s_ratio=round(tps_p / max(tps_d, 1e-9), 3),
+         peak_cache_bytes_paged=int(peak_p),
+         cache_bytes_dense=int(dense_bytes),
+         mem_ratio=round(dense_bytes / max(peak_p, 1), 3),
+         host_noise_bound=True,
+         requests=n_req, slots=slots, max_len=max_len, page_size=ps)
+
+
+def run() -> None:
+    _bench_step()
+    _bench_trace()
+
+
+if __name__ == "__main__":
+    run()

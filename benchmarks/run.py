@@ -27,6 +27,7 @@ BENCH_JSON = {
     "segment/": "BENCH_segment.json",
     "moe/": "BENCH_moe.json",
     "step/": "BENCH_step.json",
+    "serve/": "BENCH_serve.json",
 }
 
 
@@ -50,19 +51,19 @@ def main() -> None:
         __file__)), help="directory for BENCH_*.json artifacts")
     ap.add_argument("--suites", default="all",
                     help="comma list: diverse,strided,segment,hw_cost,"
-                         "moe,step")
+                         "moe,step,serve")
     args = ap.parse_args()
 
     from benchmarks import common
     common.QUICK = args.quick
 
     from benchmarks import (bench_diverse, bench_hw_cost, bench_moe,
-                            bench_segment, bench_step, bench_strided,
-                            roofline_table)
+                            bench_segment, bench_serve, bench_step,
+                            bench_strided, roofline_table)
     suites = {
         "diverse": bench_diverse, "strided": bench_strided,
         "segment": bench_segment, "hw_cost": bench_hw_cost,
-        "moe": bench_moe, "step": bench_step,
+        "moe": bench_moe, "step": bench_step, "serve": bench_serve,
     }
     if args.suites == "all":
         # the whole registry; --quick reduces each suite's sweep via

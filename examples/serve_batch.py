@@ -1,39 +1,47 @@
-"""Serving example: continuous batching over the interleaved KV cache.
+"""Serving example: continuous batching over the PAGED KV runtime.
 
-Prefill a prompt per slot, then decode greedily with requests joining and
-leaving slots — the EARTH segment ops handle KV interleave/split.
+Multi-token prompts prefill into whole pages, requests join and leave
+slots mid-flight (pages reclaimed on finish), and sampling is seeded
+per slot — the EARTH access machinery handles the page gathers and the
+KV interleave/split.
 
 Run:  PYTHONPATH=src python examples/serve_batch.py
 """
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_arch
 from repro.models.transformer import init_params
-from repro.serve.engine import BatchedServer
+from repro.serve import BatchedServer
 
 
 def main() -> None:
     cfg = get_arch("qwen3-0.6b").smoke
     params = init_params(cfg, jax.random.key(0))
-    server = BatchedServer(cfg, params, slots=4, max_len=64)
+    server = BatchedServer(cfg, params, slots=4, max_len=64, page_size=16,
+                           temperature=0.8, top_k=40, seed=7)
 
-    # requests arrive at different times (continuous batching)
-    s0 = server.add_request(prompt_token=11)
-    s1 = server.add_request(prompt_token=22)
+    # requests arrive at different times with different prompt lengths
+    # (continuous batching over per-slot positions)
+    s0 = server.add_request(prompt=[11, 12, 13, 14, 15])
+    s1 = server.add_request(22)
     for _ in range(4):
         server.step()
-    s2 = server.add_request(prompt_token=33)   # joins mid-flight
+    s2 = server.add_request(prompt=[33, 34, 35])   # joins mid-flight
     t0 = time.time()
     for _ in range(8):
-        toks = server.step()
+        server.step()
     dt = time.time() - t0
+    cache = server.scheduler.cache
     print(f"slot outputs after 12/8 steps ({dt*1e3:.0f} ms):")
+    print(f"pages in use at peak load: {cache.pages_in_use()} of "
+          f"{cache.num_pages}")
     for s in (s0, s1, s2):
         print(f"  slot {s}: {server.finish(s)}")
     print("throughput:", f"{3*8/dt:.1f} tok/s (CPU)")
+    print(f"pages after finish: {cache.pages_in_use()} in use, "
+          f"{cache.free_pages()} free")
 
 
 if __name__ == "__main__":

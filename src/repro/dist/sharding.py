@@ -129,6 +129,16 @@ class ShardCtx:
         from repro.vx.program import Shard
         return Shard(axes=tuple(axes), axis=axis, mesh=self.mesh)
 
+    def vx_pool_shard(self, axis: int = -4):
+        """``vx.Shard`` annotation for a PAGED-POOL leaf sharded on its
+        page axis (serving: the shared KV page pool is the memory
+        ceiling, so its physical pages spread across the mesh and
+        ``vx.Paged`` gathers run shard-locally on the owned page block —
+        the pool is never sliced globally).  Same axis-role selection as
+        :meth:`vx_seq_shard`; the default -4 is the page axis of an
+        ``(NS, P, page_size, K, 2D)`` pool leaf."""
+        return self.vx_seq_shard(axis)
+
 
 def local_ctx() -> ShardCtx:
     """Single-process / single-device context (mesh-less no-op specs)."""

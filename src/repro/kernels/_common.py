@@ -118,6 +118,14 @@ def plan_operands(plan):
     return jnp.asarray(masks), jnp.asarray(valid), masks.shape[0]
 
 
+def pytree_nbytes(tree) -> int:
+    """Total payload bytes of a pytree of arrays (cache-memory accounting
+    for the serving benchmarks and the paged-pool stats)."""
+    return sum(leaf.size * leaf.dtype.itemsize
+               for leaf in jax.tree_util.tree_leaves(tree)
+               if hasattr(leaf, "dtype"))
+
+
 def call(kernel, *, out_shape, grid, in_specs, out_specs, **kwargs):
     """pallas_call with the platform-appropriate interpret flag."""
     return pl.pallas_call(

@@ -47,6 +47,50 @@ def split_kv_step(kvs: list[jax.Array], *, policy=None, shard=None
                                     shard=shard)
 
 
+def gather_paged_kv(pools: list[jax.Array], table: jax.Array,
+                    page_size: int, *, policy=None, shard=None,
+                    fused: bool = True) -> list[jax.Array]:
+    """Whole-step paged KV read: every layer's page pool gathered through
+    ONE shared page table.
+
+    ``pools``: same-shape ``(NS, P, page_size, K, 2d)`` pool leaves (all
+    layers append in lockstep, so one ``(B, pages)`` table serves them
+    all).  ``fused=True`` stacks the pools and runs ONE page-granular
+    gather program (``vx.gather_many`` + ``vx.program.fuse``); the
+    heterogeneous per-request lengths live in the runtime table, so the
+    compiled program is keyed only by the page geometry and is reused
+    across every request and step.  ``shard`` (a ``vx.Shard`` on the pool
+    page axis, ``axis=-4``) gathers shard-locally from the owned page
+    block — the sharded pool is never sliced globally.
+
+    Returns the gathered interleaved ``(NS, B, pages*page_size, K, 2d)``
+    sequences, one per pool; split K/V with :func:`split_kv_step` (still
+    one fused FIELD=2 launch for the whole step).
+    """
+    spec = vx.Paged(page_size=page_size, pages=table.shape[-1], trail=2)
+    if fused:
+        return vx.gather_many(spec, pools, table=table, policy=policy,
+                              shard=shard)
+    return [vx.gather(spec, p, table=table, policy=policy, shard=shard)
+            for p in pools]
+
+
+def append_paged_token(pool: jax.Array, k: jax.Array, v: jax.Array,
+                       table: jax.Array, pos, *, policy=None) -> jax.Array:
+    """Write one token's interleaved KV beat through the page table.
+
+    pool: (..., P, page_size, H, 2d); k, v: (B, H, d); pos: (B,) int32
+    per-slot positions (rows with ``pos < 0`` or an unallocated page are
+    dropped — an idle serving slot appends nothing).  One page-routed
+    scatter per layer, same coalescing as :func:`append_token`.
+    """
+    beat = interleave_kv(k, v, policy=policy)             # (B, H, 2d)
+    spec = vx.Paged(page_size=pool.shape[-3], pages=table.shape[-1],
+                    trail=2)
+    return vx.scatter(spec, pool, beat, table=table, pos=pos,
+                      policy=policy)
+
+
 def append_token(cache: jax.Array, k: jax.Array, v: jax.Array, pos,
                  *, policy=None) -> jax.Array:
     """Write one token's interleaved KV beat at position ``pos``.

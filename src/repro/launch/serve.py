@@ -1,8 +1,9 @@
-"""Serving CLI: prefill + batched decode with the interleaved KV cache.
+"""Serving CLI: paged continuous batching (prefill + decode + sampling).
 
 Example (CPU, reduced geometry):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
-      --requests 4 --prompt-len 16 --gen 12
+      --requests 4 --prompt-len 16 --gen 12 --page-size 16 \
+      --temperature 0.8 --top-k 40
 """
 from __future__ import annotations
 
@@ -10,7 +11,6 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_arch
 from repro.models.transformer import init_params
@@ -25,6 +25,10 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy (default)")
+    ap.add_argument("--top-k", type=int, default=None)
     args = ap.parse_args()
 
     arch = get_arch(args.arch)
@@ -33,19 +37,24 @@ def main() -> None:
         raise SystemExit("use whisper example for enc-dec serving")
     params = init_params(cfg, jax.random.key(0))
     server = BatchedServer(cfg, params, slots=args.requests,
-                           max_len=args.max_len)
+                           max_len=args.max_len, page_size=args.page_size,
+                           temperature=args.temperature, top_k=args.top_k)
 
     key = jax.random.key(42)
     for r in range(args.requests):
-        tok = int(jax.random.randint(jax.random.fold_in(key, r), (), 0,
-                                     cfg.vocab))
-        server.add_request(tok)
+        toks = jax.random.randint(jax.random.fold_in(key, r),
+                                  (max(args.prompt_len, 1),), 0, cfg.vocab)
+        server.add_request(prompt=[int(t) for t in toks])
 
     t0 = time.time()
     for _ in range(args.gen):
-        toks = server.step()
+        server.step()
     dt = time.time() - t0
     tps = args.requests * args.gen / dt
+    cache = server.scheduler.cache
+    print(f"pages: {cache.pages_in_use()} in use of {cache.num_pages} "
+          f"({cache.used_cache_bytes()} cache bytes backing live "
+          f"requests)")
     for s in range(args.requests):
         print(f"slot {s}: {server.finish(s)[:12]} ...")
     print(f"{args.gen} steps x {args.requests} slots in {dt:.2f}s "

@@ -74,6 +74,350 @@ def cache_from_prefill(cfg: ModelConfig, cache_states, seq_len: int,
     return {"len": jnp.asarray(seq_len, jnp.int32), "blocks": blocks}
 
 
+# ---------------------------------------------------------------------------
+# Paged KV cache: per-slot positions, a shared page pool per layer, one
+# page table — memory scales with ACTIVE tokens, not slots x max_len.
+# ---------------------------------------------------------------------------
+
+def pages_per_seq(max_len: int, page_size: int) -> int:
+    return -(-max_len // page_size)
+
+
+def init_paged_cache(cfg: ModelConfig, slots: int, max_len: int,
+                     page_size: int, dtype, *,
+                     num_pages: int | None = None) -> dict:
+    """Paged cache pytree.
+
+    Attention layers store a shared page POOL ``(NS, num_pages,
+    page_size, K, 2D)`` instead of per-slot dense ``(NS, slots, max_len,
+    K, 2D)`` buffers; ``table`` maps each slot's logical pages to
+    physical pool pages (``-1`` = unallocated), ``pos`` is the per-slot
+    position vector, and ``free``/``free_top`` form the device-side
+    free-page stack (``free[:free_top]`` are free ids).  ``num_pages``
+    defaults to full provisioning (``slots * pages_per_seq``); size it to
+    the expected peak of active tokens to reclaim the memory.
+
+    All attention layers page the FULL logical length (sliding windows
+    become attention-time masks, not ring buffers — unattended pages of a
+    finished window are reclaimable like any other).  Recurrent leaves
+    (mamba/xlstm) stay per-slot O(1) state, as in :func:`init_cache`.
+    """
+    ns = cfg.n_superblocks
+    n_seq = pages_per_seq(max_len, page_size)
+    if num_pages is None:
+        num_pages = slots * n_seq
+    blocks: dict[str, Any] = {}
+    for i, kind in enumerate(cfg.block_pattern):
+        if kind == "attn":
+            blocks[f"pos{i}"] = jnp.zeros(
+                (ns, num_pages, page_size, cfg.n_kv_heads, 2 * cfg.hd),
+                dtype)
+        elif kind == "mamba":
+            c = init_mamba_cache(slots, cfg.mamba, dtype)
+            blocks[f"pos{i}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (ns,) + a.shape), c)
+        elif kind == "mlstm":
+            s = init_mlstm_state(slots, cfg.xlstm)
+            blocks[f"pos{i}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (ns,) + a.shape), s)
+        elif kind == "slstm":
+            s = init_slstm_state(slots, cfg.xlstm)
+            blocks[f"pos{i}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (ns,) + a.shape), s)
+    return {
+        "pos": jnp.zeros((slots,), jnp.int32),
+        "table": jnp.full((slots, n_seq), -1, jnp.int32),
+        # descending so pages allocate in 0, 1, 2, ... order
+        "free": jnp.arange(num_pages - 1, -1, -1, dtype=jnp.int32),
+        "free_top": jnp.asarray(num_pages, jnp.int32),
+        "blocks": blocks,
+    }
+
+
+def _paged_geometry(cfg: ModelConfig, cache: dict):
+    """(attn positions, page_size, pages_per_seq) from the cache leaves."""
+    attn_pos = [i for i, k in enumerate(cfg.block_pattern) if k == "attn"]
+    n_seq = cache["table"].shape[-1]
+    ps = (cache["blocks"][f"pos{attn_pos[0]}"].shape[2] if attn_pos else 1)
+    return attn_pos, ps, n_seq
+
+
+def _keep_active(new, old, active):
+    """Per-slot state gate: inactive slots keep their old state."""
+    def sel(n, o):
+        m = active.reshape(active.shape + (1,) * (n.ndim - 1))
+        return jnp.where(m, n, o)
+    return jax.tree.map(sel, new, old)
+
+
+def paged_release_slot(cfg: ModelConfig, cache: dict, slot) -> dict:
+    """Free a slot: push its pages back on the free stack, clear its page
+    table row and position, and reset its recurrent state to init — a
+    reused slot can never attend to (or carry) the previous occupant's
+    state.  Pool pages are NOT zeroed: a new occupant overwrites position
+    ``p`` before ``p`` ever becomes attendable (``eff_len`` masking), so
+    stale beats are unreachable.  jit-safe (``slot`` may be traced)."""
+    slot = jnp.asarray(slot, jnp.int32)
+    table, free, free_top = cache["table"], cache["free"], cache["free_top"]
+    row = jnp.take(table, slot, axis=0)                  # (pages,)
+    used = row >= 0
+    rank = jnp.cumsum(used.astype(jnp.int32)) - used
+    dst = jnp.where(used, free_top + rank, free.shape[0])
+    free = free.at[dst].set(row, mode="drop")
+    free_top = free_top + jnp.sum(used.astype(jnp.int32))
+    table = table.at[slot].set(-1)
+    pos = cache["pos"].at[slot].set(0)
+    blocks = dict(cache["blocks"])
+    for i, kind in enumerate(cfg.block_pattern):
+        if kind == "attn":
+            continue
+        if kind == "mamba":
+            ini = init_mamba_cache(1, cfg.mamba, jnp.float32)
+        elif kind == "mlstm":
+            ini = init_mlstm_state(1, cfg.xlstm)
+        else:
+            ini = init_slstm_state(1, cfg.xlstm)
+        leaf = blocks[f"pos{i}"]
+        blocks[f"pos{i}"] = jax.tree.map(
+            lambda c, s: c.at[:, slot].set(
+                jnp.broadcast_to(s[0], c.shape[2:]).astype(c.dtype)),
+            leaf, ini)
+    return {"pos": pos, "table": table, "free": free, "free_top": free_top,
+            "blocks": blocks}
+
+
+def paged_insert_prefill(cfg: ModelConfig, cache: dict, slot,
+                         cache_states, length, state_len: int) -> dict:
+    """Embed B=1 prefill states into a slot's pages.
+
+    ``state_len`` (static) is the sequence extent the prefill ran on —
+    any length; attention beats are zero-padded here to whole pages
+    (the padded tail is masked by ``eff_len`` until the decode loop
+    overwrites it in place).  ``length`` is the true prompt length and
+    may be TRACED, so ONE jit entry serves every prompt of the same
+    ``state_len``.  NOTE on padding the PREFILL itself (running it on
+    more tokens than the prompt): that is only sound for windowless
+    attention-only stacks — a ring-trimmed window leaf is cut at the
+    padded length (real in-window beats are lost) and recurrent state
+    absorbs the pad tokens irreversibly; the serving scheduler therefore
+    pads the prefill only when every block is windowless attention.
+    Allocates ``ceil(state_len / page_size)`` pages off the free stack.
+    jit-safe (``slot``/``length`` may be traced)."""
+    attn_pos, ps, n_seq = _paged_geometry(cfg, cache)
+    n_pg = -(-state_len // ps)
+    sp = n_pg * ps
+    if n_pg > n_seq:
+        raise ValueError(f"state_len={state_len} needs {n_pg} pages, the "
+                         f"table holds {n_seq}")
+    slot = jnp.asarray(slot, jnp.int32)
+    length = jnp.asarray(length, jnp.int32)
+    free, free_top = cache["free"], cache["free_top"]
+    # exhaustion degrades locally (like the decode-step allocator): pages
+    # beyond the free count stay -1 in the table and their beats are
+    # dropped — never an aliased page.  serve/paged_cache.py refuses the
+    # insert host-side before it comes to that.
+    k = jnp.arange(n_pg)
+    have = k < free_top
+    newp = jnp.where(have, free[jnp.clip(free_top - 1 - k, 0,
+                                         free.shape[0] - 1)], -1)
+    free_top = free_top - jnp.sum(have.astype(jnp.int32))
+    table = cache["table"].at[slot, :n_pg].set(newp)
+    pos = cache["pos"].at[slot].set(length)
+    scatter_ids = jnp.where(have, newp, free.shape[0])
+    blocks = dict(cache["blocks"])
+    for i, kind in enumerate(cfg.block_pattern):
+        st = cache_states[f"pos{i}"]
+        leaf = blocks[f"pos{i}"]
+        if kind == "attn":
+            kv = st.astype(leaf.dtype)                 # (NS, 1, S|W, K, 2D)
+            w = cfg.window_pattern[i]
+            if w is not None and kv.shape[2] < state_len:
+                # prefill ring-trimmed the window at state_len: un-roll
+                # to natural order and park at positions
+                # [state_len - W, state_len)
+                W = kv.shape[2]
+                nat = jnp.roll(kv, -(state_len % W), axis=2)
+                full = jnp.zeros(kv.shape[:2] + (sp,) + kv.shape[3:],
+                                 leaf.dtype)
+                kv = full.at[:, :, state_len - W:state_len].set(nat)
+            elif kv.shape[2] != state_len:
+                raise ValueError(
+                    f"prefill states carry {kv.shape[2]} beats; expected "
+                    f"state_len={state_len}")
+            if kv.shape[2] < sp:       # zero-pad to whole pages
+                kv = jnp.pad(kv, ((0, 0), (0, 0), (0, sp - kv.shape[2]),
+                                  (0, 0), (0, 0)))
+            beats = kv[:, 0].reshape(kv.shape[0], n_pg, ps, *kv.shape[3:])
+            blocks[f"pos{i}"] = leaf.at[:, scatter_ids].set(beats,
+                                                            mode="drop")
+        else:
+            blocks[f"pos{i}"] = jax.tree.map(
+                lambda c, s: c.at[:, slot].set(s[:, 0].astype(c.dtype)),
+                leaf, st)
+    return {"pos": pos, "table": table, "free": free, "free_top": free_top,
+            "blocks": blocks}
+
+
+def paged_decode_step(params, cache: dict, token: jax.Array,
+                      cfg: ModelConfig, ctx, *, active=None,
+                      fuse: bool | None = None,
+                      pool_shard=None) -> tuple[jax.Array, dict]:
+    """One decode step over the paged cache.  token: (B,) int32 with B =
+    slots.  Returns (logits (B, V), updated cache).
+
+    Differences from :func:`decode_step` (which remains the dense-cache
+    oracle): positions are PER-SLOT (``cache["pos"]``), the step takes an
+    ``active`` mask (idle slots append nothing and advance nothing — the
+    scheduler's active-set batching), appends allocate a page off the
+    device free stack when a slot crosses a page boundary, and attention
+    reads go through ``vx.Paged`` — with ``fuse=True`` ALL layers' page
+    gathers run as ONE fused page-granular program (the table encodes the
+    heterogeneous per-slot lengths; the compiled program is keyed only by
+    page geometry) followed by the usual ONE fused FIELD=2 split.
+    ``fuse=False`` is the per-access paged oracle.  Sliding-window layers
+    mask at attention time instead of ring-overwriting.
+
+    ``pool_shard`` (a ``vx.Shard`` on the pool page axis, ``axis=-4``)
+    lowers every page gather shard-locally — the pool, sharded over the
+    mesh on its page axis, is never sliced globally (the PR 4 invariant
+    applied to the serving pool).
+    """
+    from repro.models.transformer import cast_params
+    params = cast_params(params, cfg)
+    if cfg.encoder is not None:
+        raise NotImplementedError("paged serving covers decoder-only "
+                                  "models; use encdec.decode_step")
+    fuse = cfg.step_fusion if fuse is None else fuse
+    pol = cfg.vx_policy
+    B = token.shape[0]
+    pos = cache["pos"]
+    if active is None:
+        active = jnp.ones((B,), bool)
+    else:
+        active = jnp.asarray(active, bool)
+    attn_pos, ps, n_seq = _paged_geometry(cfg, cache)
+    table, free, free_top = cache["table"], cache["free"], cache["free_top"]
+    # logical capacity; recurrent-only stacks carry O(1) state, no cap
+    seq = n_seq * ps if attn_pos else (1 << 30)
+
+    if attn_pos:
+        # allocate on page-boundary crossing — one shared table update for
+        # every layer (all layers append in lockstep).  An exhausted free
+        # stack degrades LOCALLY: slots whose pop rank exceeds the free
+        # count get no page (table entry stays -1, their appends drop and
+        # their reads return zeros) — never an aliased page shared with a
+        # live slot, and free_top never goes negative.
+        need = active & (pos % ps == 0) & (pos // ps < n_seq)
+        rank = jnp.cumsum(need.astype(jnp.int32)) - need
+        need = need & (rank < free_top)
+        newp = free[jnp.clip(free_top - 1 - rank, 0, free.shape[0] - 1)]
+        hit = need[:, None] & (jnp.arange(n_seq)[None, :]
+                               == (pos // ps)[:, None])
+        table = jnp.where(hit, newp[:, None], table)
+        free_top = free_top - jnp.sum(need.astype(jnp.int32))
+    # idle slots and full sequences append nothing (dropped scatter rows)
+    write_pos = jnp.where(active & (pos < seq), pos, -1)
+    spec = (vx.Paged(page_size=ps, pages=n_seq, trail=2)
+            if attn_pos else None)
+
+    x = layers.embed(token, params["embed"]).astype(cfg.cdtype)
+
+    pre_split: dict[str, Any] = {}
+    if fuse and attn_pos:
+        # ONE fused page gather for all layers' pools (stacked over
+        # superblocks AND over layers), then ONE fused FIELD=2 split.
+        gathered = kv_interleaved.gather_paged_kv(
+            [cache["blocks"][f"pos{i}"] for i in attn_pos], table, ps,
+            policy=pol, shard=pool_shard)
+        splits = kv_interleaved.split_kv_step(gathered, policy=pol)
+        pre_split = {f"pos{i}": splits[a] for a, i in enumerate(attn_pos)}
+    beat_pol = (pol.for_elems(B * cfg.n_kv_heads * 2 * cfg.hd)
+                if fuse else pol)
+    ffn_pol = pol.for_elems(B * 2 * cfg.d_ff) if fuse else pol
+    eff = (pos + active.astype(jnp.int32))[:, None]      # (B, 1) per slot
+
+    def sb_step(x, inp):
+        sb_p, sb_c, sb_pre = inp
+        new_c = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            p = sb_p[f"pos{i}"]
+            if kind == "attn":
+                h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+                q, k, v, kv = attention.qkv_project(
+                    p["attn"], h[:, None], cfg.n_heads, cfg.n_kv_heads,
+                    cfg.hd, pos[:, None], cfg.rope_theta, policy=beat_pol)
+                pool = sb_c[f"pos{i}"]                 # (P, ps, K, 2D)
+                pool = vx.scatter(spec, pool, kv[:, 0], table=table,
+                                  pos=write_pos, policy=pol)
+                if fuse:
+                    k_pre, v_pre = sb_pre[f"pos{i}"]   # (B, S, K, D)
+                    ins = (active[:, None]
+                           & (jnp.arange(seq)[None, :] == pos[:, None]))
+                    ins = ins[:, :, None, None]
+                    # k/v are (B, 1, K, D): broadcast over the seq axis
+                    k_all = jnp.where(ins, k.astype(k_pre.dtype), k_pre)
+                    v_all = jnp.where(ins, v.astype(v_pre.dtype), v_pre)
+                else:
+                    full = vx.gather(spec, pool, table=table, policy=pol,
+                                     shard=pool_shard)   # (B, S, K, 2D)
+                    k_all, v_all = vx.transpose(
+                        vx.Segment(n=full.shape[-1], fields=2), full,
+                        policy=pol)
+                out = attention.decode_attention(
+                    q[:, 0], k_all, v_all, eff,
+                    window=cfg.window_pattern[i])
+                x = x + (out.reshape(B, cfg.n_heads * cfg.hd)
+                         @ p["attn"]["wo"]).astype(x.dtype)
+                new_c[f"pos{i}"] = pool
+            elif kind == "mamba":
+                h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+                pm = dict(p["mamba"])
+                pm["in_proj"] = pm["in_proj"].reshape(cfg.d_model,
+                                                      2 * cfg.mamba.ed)
+                y, st = mamba_decode_step(pm, h, sb_c[f"pos{i}"], cfg.mamba)
+                x = x + jnp.where(active[:, None], y, 0)
+                new_c[f"pos{i}"] = _keep_active(st, sb_c[f"pos{i}"], active)
+            elif kind == "mlstm":
+                h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+                px = dict(p["xl"])
+                px["up"] = px["up"].reshape(cfg.d_model,
+                                            2 * cfg.xlstm.m_inner)
+                y, st = mlstm_decode_step(px, h, sb_c[f"pos{i}"], cfg.xlstm)
+                x = x + jnp.where(active[:, None], y, 0)
+                new_c[f"pos{i}"] = _keep_active(st, sb_c[f"pos{i}"], active)
+            elif kind == "slstm":
+                h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+                y, st = slstm_decode_step(p["slstm"], h, sb_c[f"pos{i}"],
+                                          cfg.xlstm)
+                x = x + jnp.where(active[:, None], y, 0)
+                new_c[f"pos{i}"] = _keep_active(st, sb_c[f"pos{i}"], active)
+            if cfg.pos_has_ffn(i):
+                x2, _ = _ffn_apply(p, x[:, None], cfg, ctx, i,
+                                   policy=ffn_pol)
+                x = x2[:, 0]
+        return x, new_c
+
+    if cfg.scan_layers:
+        x, new_blocks = jax.lax.scan(
+            sb_step, x, (params["blocks"], cache["blocks"], pre_split))
+    else:
+        outs = []
+        for sbi in range(cfg.n_superblocks):
+            sb = jax.tree.map(lambda a: a[sbi], params["blocks"])
+            cb = jax.tree.map(lambda a: a[sbi], cache["blocks"])
+            pb = jax.tree.map(lambda a: a[sbi], pre_split)
+            x, nb = sb_step(x, (sb, cb, pb))
+            outs.append(nb)
+        new_blocks = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = layers.unembed(x, head.astype(cfg.cdtype))
+    new_pos = pos + (active & (pos < seq)).astype(jnp.int32)
+    return logits, {"pos": new_pos, "table": table, "free": free,
+                    "free_top": free_top, "blocks": new_blocks}
+
+
 def decode_step(params, cache: dict, token: jax.Array, cfg: ModelConfig,
                 ctx, *, fuse: bool | None = None,
                 kv_shard=None) -> tuple[jax.Array, dict]:

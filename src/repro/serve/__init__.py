@@ -1,3 +1,7 @@
 """Serving: jit'd prefill/decode with sharded interleaved KV caches +
-continuous batching."""
-from repro.serve.engine import BatchedServer, ServeConfig, jit_decode_step  # noqa: F401
+a paged continuous-batching runtime (scheduler / paged cache / executor).
+"""
+from repro.serve.engine import (BatchedServer, ServeConfig,  # noqa: F401
+                                jit_decode_step, jit_prefill)
+from repro.serve.paged_cache import PagedCache  # noqa: F401
+from repro.serve.scheduler import Scheduler, sample_tokens  # noqa: F401

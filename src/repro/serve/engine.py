@@ -167,51 +167,64 @@ def jit_prefill(cfg: ModelConfig, ctx: ShardCtx, params_template,
 
 
 # ---------------------------------------------------------------------------
-# Minimal continuous-batching session manager (CPU-host logic, exercised by
-# examples/serve_batch.py and tests/test_serve.py).
+# Compat wrapper: the old fixed-slot dense server API over the paged
+# runtime (serve/scheduler.py + serve/paged_cache.py).
 # ---------------------------------------------------------------------------
 
 class BatchedServer:
-    """Fixed-slot continuous batching over a single decode step function."""
+    """Fixed-slot continuous batching — thin wrapper over
+    :class:`repro.serve.scheduler.Scheduler`.
+
+    Since PR 5 the backing runtime is the PAGED cache: per-slot position
+    vectors, a shared page pool per layer, device free-list reclamation on
+    ``finish`` (a reused slot can never attend to the previous occupant's
+    cache — the old dense server left stale KV and a shared position
+    counter behind), multi-token prompts through the jit'd prefill, and
+    optional temperature / top-k sampling.  The old single-token
+    ``add_request(int)`` / ``step()`` / ``finish()`` surface is unchanged;
+    ``cache`` is presented in the legacy ``{"len", "blocks"}`` shape with
+    ``len`` = the furthest active position.
+    """
 
     def __init__(self, cfg: ModelConfig, params, *, slots: int, max_len: int,
                  ctx: ShardCtx | None = None, cache_dtype=jnp.float32,
-                 fuse_step: bool = True):
+                 fuse_step: bool = True, page_size: int | None = None,
+                 num_pages: int | None = None, temperature: float = 0.0,
+                 top_k: int | None = None, seed: int = 0):
+        from repro.serve.scheduler import Scheduler
         self.cfg, self.params = cfg, params
-        self.slots = slots
-        self.max_len = max_len
-        self.ctx = ctx
-        self.cache = dec.init_cache(cfg, slots, max_len, cache_dtype)
-        self.step_fn = jax.jit(
-            lambda p, c, t: dec.decode_step(p, c, t, cfg, None,
-                                            fuse=fuse_step))
-        self.active = [False] * slots
-        self.tokens: list[list[int]] = [[] for _ in range(slots)]
+        self.slots, self.max_len, self.ctx = slots, max_len, ctx
+        self.scheduler = Scheduler(
+            cfg, params, slots=slots, max_len=max_len, page_size=page_size,
+            num_pages=num_pages, cache_dtype=cache_dtype,
+            fuse_step=fuse_step, temperature=temperature, top_k=top_k,
+            seed=seed)
 
-    def add_request(self, prompt_token: int) -> int:
-        for s in range(self.slots):
-            if not self.active[s]:
-                self.active[s] = True
-                self.tokens[s] = [prompt_token]
-                return s
-        raise RuntimeError("no free slot")
+    @property
+    def active(self) -> list:
+        return self.scheduler.active
+
+    @property
+    def tokens(self) -> list:
+        return self.scheduler.tokens
+
+    @property
+    def cache(self) -> dict:
+        st = self.scheduler.cache.state
+        return {"len": jnp.max(st["pos"]), "blocks": st["blocks"]}
+
+    def add_request(self, prompt_token=None, *, prompt=None) -> int:
+        """Admit a request: a single first token (legacy form) or a full
+        prompt list (prefilled through ``jit_prefill``)."""
+        req = prompt if prompt is not None else prompt_token
+        if req is None:
+            raise ValueError("pass a prompt token or prompt= list")
+        return self.scheduler.add_request(req)
 
     def step(self) -> list[int]:
-        """Advance every active slot one token (greedy)."""
-        cur = jnp.array([self.tokens[s][-1] if self.active[s] else 0
-                         for s in range(self.slots)], jnp.int32)
-        logits, self.cache = self.step_fn(self.params, self.cache, cur)
-        nxt = jnp.argmax(logits.astype(jnp.float32), axis=-1)
-        out = []
-        for s in range(self.slots):
-            t = int(nxt[s])
-            if self.active[s]:
-                self.tokens[s].append(t)
-                out.append(t)
-            else:
-                out.append(-1)
-        return out
+        """Advance every active slot one token."""
+        return self.scheduler.step()
 
     def finish(self, slot: int) -> list[int]:
-        self.active[slot] = False
-        return self.tokens[slot]
+        """Release the slot (pages reclaimed, per-slot state cleared)."""
+        return self.scheduler.finish(slot)

@@ -1,0 +1,123 @@
+"""Paged KV-cache state for serving: page pool + page table + free stack.
+
+The device state itself lives in the cache pytree built by
+``models/decode.init_paged_cache`` (pos / table / free / free_top /
+blocks); this module wraps it with the HOST bookkeeping a scheduler needs
+— capacity checks before admission, page accounting, jit'd release /
+prefill-insert entry points — so `serve/scheduler.py` never touches the
+pytree layout directly.
+
+Memory model: attention layers share one pool of ``num_pages`` physical
+pages per layer, so cache memory scales with ACTIVE tokens
+(``pages_in_use * page_bytes``), not with ``slots * max_len`` the way the
+dense fixed-slot cache does.  ``num_pages`` defaults to full
+provisioning (every slot can reach ``max_len``).  Sizing it smaller
+OVERCOMMITS the pool: the scheduler's admission check
+(`serve/scheduler.py`) reserves pages for every live request's current
+tokens plus headroom (not the max_len worst case), so long-running
+decodes can still exhaust the stack mid-flight — when they do, the
+decode step degrades locally (the starved slot's appends drop, no page
+is ever aliased between slots) and the condition is observable as
+``free_pages() == 0``; ``insert_prefill`` refuses outright rather than
+starve a prompt.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels._common import pytree_nbytes
+from repro.models import decode as dec
+from repro.models.transformer import ModelConfig
+
+
+class PagedCache:
+    """Page pool + page-table state for a fixed-slot serving loop."""
+
+    def __init__(self, cfg: ModelConfig, slots: int, max_len: int,
+                 page_size: int, *, cache_dtype=jnp.float32,
+                 num_pages: int | None = None):
+        self.cfg = cfg
+        self.slots = slots
+        self.max_len = max_len
+        self.page_size = page_size
+        self.pages_per_seq = dec.pages_per_seq(max_len, page_size)
+        self.num_pages = (slots * self.pages_per_seq
+                          if num_pages is None else num_pages)
+        self.state = dec.init_paged_cache(cfg, slots, max_len, page_size,
+                                          cache_dtype,
+                                          num_pages=self.num_pages)
+        # state donated on every mutation: release/insert return a full
+        # new pytree, and the pool is the big buffer — without donation
+        # each finish()/admission would pay a pool copy
+        self._release = jax.jit(
+            lambda c, s: dec.paged_release_slot(cfg, c, s),
+            donate_argnums=0)
+        # one jit entry per PADDED prompt length (a page multiple): the
+        # true length rides in as a traced operand, so mixed-length
+        # traffic costs at most pages_per_seq distinct traces
+        self._insert = {}
+
+    # -- capacity -----------------------------------------------------------
+    def pages_needed(self, length: int) -> int:
+        return -(-max(length, 1) // self.page_size)
+
+    def free_pages(self) -> int:
+        return int(self.state["free_top"])
+
+    # -- accounting ---------------------------------------------------------
+    def pages_in_use(self) -> int:
+        return self.num_pages - self.free_pages()
+
+    def active_tokens(self) -> int:
+        return int(jnp.sum(self.state["pos"]))
+
+    def page_bytes(self) -> int:
+        """Bytes of ONE page across every attention layer's pool."""
+        total = 0
+        for leaf in self.state["blocks"].values():
+            if hasattr(leaf, "ndim") and leaf.ndim == 5:   # pool leaf
+                total += (leaf.size // leaf.shape[1]) * leaf.dtype.itemsize
+        return total
+
+    def used_cache_bytes(self) -> int:
+        """Bytes of cache state actually BACKING live requests: pages in
+        use across all layer pools, the page table, and the recurrent
+        state — the number that scales with active tokens (the pool
+        allocation itself is ``num_pages`` pages; size it to the traffic
+        peak)."""
+        recurrent = sum(
+            pytree_nbytes(leaf)
+            for leaf in self.state["blocks"].values()
+            if not (hasattr(leaf, "ndim") and leaf.ndim == 5))
+        return (self.pages_in_use() * self.page_bytes()
+                + self.state["table"].size
+                * self.state["table"].dtype.itemsize + recurrent)
+
+    def total_cache_bytes(self) -> int:
+        """Full allocation footprint of the cache pytree."""
+        return pytree_nbytes(self.state)
+
+    # -- mutation (jit'd, slot-traced: no retrace per slot) -----------------
+    def release(self, slot: int) -> None:
+        self.state = self._release(self.state, jnp.int32(slot))
+
+    def insert_prefill(self, slot: int, cache_states, length: int,
+                       state_len: int | None = None) -> None:
+        """Embed prefill states (computed over ``state_len`` tokens —
+        defaults to ``length``) into the slot's pages."""
+        state_len = length if state_len is None else state_len
+        n_pg = self.pages_needed(state_len)
+        if self.free_pages() < n_pg:
+            raise RuntimeError(
+                f"page pool exhausted: prompt needs {n_pg} pages, "
+                f"{self.free_pages()} free")
+        fn = self._insert.get(state_len)
+        if fn is None:
+            fn = self._insert[state_len] = jax.jit(functools.partial(
+                dec.paged_insert_prefill, self.cfg, state_len=state_len),
+                donate_argnums=0)
+        self.state = fn(self.state, jnp.int32(slot), cache_states,
+                        jnp.int32(length))

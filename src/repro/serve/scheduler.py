@@ -1,0 +1,193 @@
+"""Continuous-batching scheduler over the paged KV runtime.
+
+Split out of the old monolithic ``serve/engine.BatchedServer`` (which
+survives there as a thin compat wrapper): this module owns ADMISSION
+(free-slot + free-page checks, multi-token prompt prefill through the
+existing jit'd prefill), the PER-STEP ACTIVE SET (one jit'd
+``paged_decode_step`` over all slots with an ``active`` mask — idle
+slots append nothing and advance nothing), SAMPLING (greedy argmax by
+default; temperature / top-k with seeded per-slot PRNG keys), and
+RECLAMATION (``finish`` releases the slot's pages back to the device
+free stack and clears its per-slot state, so a reused slot can never
+attend to the previous occupant's cache).
+
+Everything device-side is jit'd ONCE: per-step membership changes ride
+in as array operands (token vector, active mask, page table), so steady
+state pays zero retraces and zero plan-cache misses
+(tests/test_serve.py asserts this).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decode as dec
+from repro.models.transformer import ModelConfig
+from repro.serve.paged_cache import PagedCache
+
+
+def sample_tokens(logits: jax.Array, keys, *, temperature: float = 0.0,
+                  top_k: int | None = None) -> jax.Array:
+    """Per-slot sampling.  logits: (B, V); keys: (B,) PRNG keys.
+
+    ``temperature <= 0`` (the default) is greedy argmax; otherwise
+    categorical over ``logits / temperature``, restricted to the top-k
+    logits when ``top_k`` is set (``top_k=1`` degenerates to argmax).
+    """
+    lg = logits.astype(jnp.float32)
+    if temperature <= 0.0:
+        return jnp.argmax(lg, axis=-1).astype(jnp.int32)
+    lg = lg / temperature
+    if top_k is not None and top_k < lg.shape[-1]:
+        kth = jnp.sort(lg, axis=-1)[:, -top_k][:, None]
+        lg = jnp.where(lg >= kth, lg, -jnp.inf)
+    return jax.vmap(jax.random.categorical)(keys, lg).astype(jnp.int32)
+
+
+class Scheduler:
+    """Fixed-slot continuous batching over a shared page pool.
+
+    ``page_size`` / ``num_pages`` size the pool (``num_pages=None`` fully
+    provisions ``slots * pages_per_seq``); ``temperature`` / ``top_k`` /
+    ``seed`` configure sampling (greedy by default, deterministic);
+    ``prefill_pad`` pads prompts before prefill to bound jit retraces
+    (defaults to the page size, so prompt caches always land on whole
+    pages — a requirement of the paged insert).
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, slots: int,
+                 max_len: int, page_size: int | None = None,
+                 num_pages: int | None = None, cache_dtype=jnp.float32,
+                 fuse_step: bool = True, temperature: float = 0.0,
+                 top_k: int | None = None, seed: int = 0):
+        if cfg.encoder is not None:
+            raise NotImplementedError("paged serving covers decoder-only "
+                                      "models")
+        from repro import vx
+        self.cfg, self.params = cfg, params
+        self.slots, self.max_len = slots, max_len
+        page_size = min(page_size or 16, max_len)
+        self.cache = PagedCache(cfg, slots, max_len, page_size,
+                                cache_dtype=cache_dtype,
+                                num_pages=num_pages)
+        self.temperature, self.top_k = float(temperature), top_k
+        vx.warm(2 * cfg.hd, strided=False, fields=(2,),
+                policy=cfg.vx_policy)
+        # cache donated: the pool is the big buffer and the step replaces
+        # it wholesale — without donation every append pays a pool copy
+        self._step = jax.jit(
+            lambda p, c, t, a: dec.paged_decode_step(
+                p, c, t, cfg, None, active=a, fuse=fuse_step),
+            donate_argnums=1)
+        self._sample = jax.jit(functools.partial(
+            sample_tokens, temperature=self.temperature, top_k=top_k))
+        self._split_keys = jax.jit(
+            lambda ks: jnp.swapaxes(jax.vmap(
+                lambda k: jax.random.split(k, 2))(ks), 0, 1))
+        self._keys = jax.random.split(jax.random.key(seed), slots)
+        from repro.dist.sharding import local_ctx
+        from repro.serve.engine import jit_prefill
+        self._prefill = jit_prefill(cfg, local_ctx(), None, None)
+        self.active = [False] * slots
+        self.tokens: list[list[int]] = [[] for _ in range(slots)]
+        self.last_logits = None      # (slots, V) of the latest step
+
+    # -- admission ----------------------------------------------------------
+    def free_slot(self) -> int | None:
+        for s in range(self.slots):
+            if not self.active[s]:
+                return s
+        return None
+
+    def add_request(self, prompt: int | Sequence[int]) -> int:
+        """Admit a request.  ``prompt`` is a full token list (or a single
+        int); all but the last token are prefilled into the slot's pages
+        through the jit'd prefill, and the last token is fed to the next
+        decode step (so ``tokens[slot]`` stays prompt + generated).
+        Raises RuntimeError when no slot or not enough free pages."""
+        toks = [int(prompt)] if isinstance(prompt, int) else \
+            [int(t) for t in prompt]
+        if not toks:
+            raise ValueError("empty prompt")
+        if len(toks) > self.max_len:
+            raise ValueError(f"prompt of {len(toks)} tokens exceeds "
+                             f"max_len={self.max_len}")
+        slot = self.free_slot()
+        if slot is None:
+            raise RuntimeError("no free slot")
+        # pages are allocated lazily (prefill now, decode appends later):
+        # admit against RESERVED pages — what live requests will need for
+        # their current tokens — not just the instantaneous free count
+        reserved = sum(self.cache.pages_needed(len(self.tokens[s]))
+                       for s in range(self.slots) if self.active[s])
+        need = self.cache.pages_needed(max(len(toks) - 1, 1)) + 1
+        if self.cache.num_pages - reserved < need:
+            raise RuntimeError("page pool exhausted; finish a request or "
+                               "grow num_pages")
+        if len(toks) > 1:
+            self._prefill_into(slot, toks[:-1])
+        self.active[slot] = True
+        self.tokens[slot] = list(toks)
+        return slot
+
+    def _prefill_into(self, slot: int, toks: list[int]) -> None:
+        # The ONE jit'd prefill (engine.jit_prefill, mesh-less ctx).
+        # Windowless attention-only stacks pad the prompt to a page
+        # multiple so the prefill retraces at most pages_per_seq shapes
+        # (the padded tail beats are masked by eff_len and overwritten in
+        # place).  Anything else prefills at the TRUE length: a ring
+        # window would be trimmed at the padded length (losing real
+        # in-window beats) and recurrent state would absorb the pad
+        # tokens irreversibly.
+        cfg = self.cfg
+        pad_safe = (all(k == "attn" for k in cfg.block_pattern)
+                    and all(w is None for w in cfg.window_pattern))
+        if pad_safe:
+            ps = self.cache.page_size
+            state_len = -(-len(toks) // ps) * ps
+        else:
+            state_len = len(toks)
+        tokens = jnp.asarray(toks + [0] * (state_len - len(toks)),
+                             jnp.int32)[None]
+        _, states = self._prefill(self.params, {"tokens": tokens})
+        self.cache.insert_prefill(slot, states, len(toks),
+                                  state_len=state_len)
+
+    # -- decode -------------------------------------------------------------
+    def step(self) -> list[int]:
+        """Advance every ACTIVE slot one token; idle slots report -1."""
+        cur = jnp.asarray([self.tokens[s][-1] if self.active[s] else 0
+                           for s in range(self.slots)], jnp.int32)
+        act = jnp.asarray(self.active)
+        logits, self.cache.state = self._step(self.params,
+                                              self.cache.state, cur, act)
+        self.last_logits = logits
+        if self.temperature > 0.0:
+            self._keys, sub = self._split_keys(self._keys)
+            nxt = self._sample(logits, sub)
+        else:
+            nxt = self._sample(logits, self._keys)
+        nxt = np.asarray(nxt)          # ONE host sync for all slots
+        out = []
+        for s in range(self.slots):
+            t = int(nxt[s])
+            if self.active[s]:
+                self.tokens[s].append(t)
+                out.append(t)
+            else:
+                out.append(-1)
+        return out
+
+    # -- reclamation --------------------------------------------------------
+    def finish(self, slot: int) -> list[int]:
+        """Release the slot: pages back on the free stack, per-slot state
+        cleared (position, page-table row, recurrent state)."""
+        toks = self.tokens[slot]
+        if self.active[slot]:
+            self.cache.release(slot)
+            self.active[slot] = False
+        return toks

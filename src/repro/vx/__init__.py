@@ -24,6 +24,13 @@ that claim as an API — one spec type, four verbs, one policy:
     outs = vx.gather_many([spec_a, spec_b], windows)
     kvs  = vx.gather_many(vx.Segment(n=2 * d, fields=2), kv_caches)
 
+    # paged KV pool: geometry is compiled state, the page table is a
+    # runtime operand (one cached program serves every request)
+    pg   = vx.Paged(page_size=16, pages=8, trail=2)
+    seqs = vx.gather(pg, pool, table=tables)             # paged read
+    pool = vx.scatter(pg, pool, beats, table=tables, pos=pos)  # append
+    alls = vx.gather_many(pg, pools, table=tables)       # ONE program
+
 Lowering is policy-driven, never a per-call ``impl=`` string:
 
     with vx.use("pallas"):          # or vx.use(Policy(...)) / env default
@@ -55,11 +62,12 @@ from repro.vx.cache import PLANS, PlanCache
 from repro.vx.policy import (BANK_FIELDS, BANK_STRIDES, IMPLS,
                              MIN_FUSED_ELEMS, Policy, current, resolve, use)
 from repro.vx.program import Program, Shard, Txn
-from repro.vx.spec import (BANK, AccessSpec, Compact, Indexed, Segment,
-                           Strided)
+from repro.vx.spec import (BANK, AccessSpec, Compact, Indexed, Paged,
+                           Segment, Strided)
 
 __all__ = [
-    "AccessSpec", "Strided", "Segment", "Indexed", "Compact", "BANK",
+    "AccessSpec", "Strided", "Segment", "Indexed", "Compact", "Paged",
+    "BANK",
     "gather", "scatter", "transpose", "compact", "gather_many",
     "scatter_many", "warm",
     "Policy", "use", "current", "resolve",

@@ -28,14 +28,32 @@ import numpy as np
 from repro.vx import lower as _lower
 from repro.vx import program as _program
 from repro.vx.policy import Policy, resolve
-from repro.vx.spec import (BANK, AccessSpec, Compact, Indexed, Segment,
-                           Strided)
+from repro.vx.spec import (BANK, AccessSpec, Compact, Indexed, Paged,
+                           Segment, Strided)
 
 Shard = _program.Shard
 
 
 def _is_static(stride) -> bool:
     return isinstance(stride, (int, np.integer))
+
+
+def _fold_routing(spec: Indexed, shift, valid) -> Indexed | None:
+    """Promote a host-known (shift, valid) routing into the spec so the
+    access compiles through the plan stage (constant take-masks, memoized
+    under the spec key).  Traced operands return None (dynamic network)."""
+    if spec.routing is not None:
+        if shift is not None or valid is not None:
+            raise ValueError(
+                f"{spec} already folds a static routing; do not also pass "
+                f"shift=/valid=")
+        return spec
+    host = (np.ndarray, list, tuple)
+    if isinstance(shift, host) and isinstance(valid, host):
+        return dataclasses.replace(
+            spec, routing=(tuple(np.asarray(shift, np.int64).tolist()),
+                           tuple(np.asarray(valid, bool).tolist())))
+    return None
 
 
 # ---------------------------------------------------------------------------
@@ -61,7 +79,7 @@ def _static_strided(spec: Strided, stride) -> Strided | None:
 
 
 def gather(spec: AccessSpec, buf: jax.Array, *, stride=None, shift=None,
-           valid=None, policy: Policy | str | None = None,
+           valid=None, table=None, policy: Policy | str | None = None,
            shard: Shard | None = None) -> jax.Array:
     """Dense read through the access described by ``spec``.
 
@@ -69,12 +87,22 @@ def gather(spec: AccessSpec, buf: jax.Array, *, stride=None, shift=None,
       spec takes the runtime stride via ``stride=`` and dispatches through
       the plan bank's ``lax.switch`` (compiled masks for banked strides,
       dynamic-count network otherwise; either sign engages the Reverser).
-    * :class:`Indexed` — raw DROM gather with explicit per-lane ``shift``
-      and ``valid`` operands.
+    * :class:`Indexed` — DROM gather with per-lane ``shift`` and ``valid``
+      operands.  Host-known routings (numpy/list/tuple) are folded into
+      the spec and compile through the plan stage (constant take-masks);
+      traced operands take the dynamic-count network.
+    * :class:`Paged` — page-table gather over a ``(*lead, P, ps, *trail)``
+      pool: ``table=`` is the runtime ``(*batch, pages)`` int32 page
+      table (entries ``< 0`` read as zeros); returns the gathered
+      ``(*lead, *batch, pages*ps, *trail)`` sequences.  ``shard=`` (on
+      the pool's page axis, ``Shard.axis == -(trail+2)``) gathers
+      shard-locally from the owned page block and psum-merges — the
+      sharded pool is never sliced globally.
 
-    ``shard=`` marks ``buf``'s lane axis as sharded: the access lowers to
-    shard-local offset-rebased plans under ``shard_map`` (replicated
-    output), never a global slice of the sharded leaf.
+    For the other specs ``shard=`` marks ``buf``'s lane axis as sharded:
+    the access lowers to shard-local offset-rebased plans under
+    ``shard_map`` (replicated output), never a global slice of the
+    sharded leaf.
     """
     pol = resolve(policy)
     if isinstance(spec, Strided):
@@ -85,16 +113,27 @@ def gather(spec: AccessSpec, buf: jax.Array, *, stride=None, shift=None,
                               shard=shard)
         return _lower.run("bank.gather", spec, pol.impl, buf, stride,
                           shard=shard)
+    if isinstance(spec, Paged):
+        if table is None:
+            raise ValueError("Paged gather needs the page table as table=")
+        return _lower.run("paged.gather", spec.bind(buf.dtype), pol.impl,
+                          buf, table, shard=shard)
     if isinstance(spec, Indexed):
+        spec = spec.bind(buf.dtype)
+        static = _fold_routing(spec, shift, valid)
+        if static is not None:
+            return _lower.run("idx.gather", static, pol.impl, buf,
+                              shard=shard)
         if shift is None or valid is None:
-            raise ValueError("Indexed gather needs shift= and valid=")
-        return _lower.run("idx.gather", spec.bind(buf.dtype), pol.impl,
+            raise ValueError("Indexed gather needs shift= and valid= "
+                             "(or a spec with routing=)")
+        return _lower.run("idx.gather", spec, pol.impl,
                           buf, shift, valid, shard=shard)
     raise TypeError(f"gather does not accept {type(spec).__name__} specs")
 
 
 def scatter(spec: AccessSpec, buf: jax.Array, values: jax.Array, *,
-            stride=None, shift=None, valid=None,
+            stride=None, shift=None, valid=None, table=None, pos=None,
             policy: Policy | str | None = None,
             shard: Shard | None = None):
     """Write/merge through the access described by ``spec``.
@@ -103,6 +142,10 @@ def scatter(spec: AccessSpec, buf: jax.Array, values: jax.Array, *,
       ``buf`` (read-modify-write; returns the updated window).  With
       ``shard=`` the window stays sharded: each shard merges only the
       value lanes it owns (rebased plan), no collective.
+    * :class:`Paged` — the decode append: write one ``(*batch, *trail)``
+      beat per table row into pool ``buf`` at per-row position ``pos=``
+      through the page table ``table=`` (rows with ``pos < 0`` or an
+      unallocated page entry are dropped); returns the updated pool.
     * :class:`Indexed` — raw DROM scatter of ``values`` (``buf`` is unused;
       pass None); returns ``(payload, occupancy)``.
     * :class:`Compact` — expansion (the compaction inverse): ``buf`` is the
@@ -110,6 +153,11 @@ def scatter(spec: AccessSpec, buf: jax.Array, values: jax.Array, *,
       to the mask positions, zeros elsewhere.
     """
     pol = resolve(policy)
+    if isinstance(spec, Paged):
+        if table is None or pos is None:
+            raise ValueError("Paged scatter needs table= and pos=")
+        return _lower.run("paged.scatter", spec.bind(buf.dtype), pol.impl,
+                          buf, values, table, pos, shard=shard)
     if isinstance(spec, Strided):
         spec = spec.bind(buf.dtype)
         static = _static_strided(spec, stride)
@@ -191,7 +239,8 @@ def compact(spec: Compact, mask: jax.Array, rows: jax.Array | None = None,
 # batched forms: one launch for a whole step's same-shape accesses
 # ---------------------------------------------------------------------------
 
-def gather_many(specs, bufs, *, policy: Policy | str | None = None,
+def gather_many(specs, bufs, *, table=None,
+                policy: Policy | str | None = None,
                 shard: Shard | None = None):
     """Whole-step batched gather — ONE kernel launch, one mask operand.
 
@@ -203,8 +252,26 @@ def gather_many(specs, bufs, *, policy: Policy | str | None = None,
       same-shape AoS arrays: the step-fused segment load (``shard=``
       supported: the stacked group transposes shard-locally).  Returns one
       field list per input array.
+    * ``specs`` a single :class:`Paged`, ``bufs`` a sequence of same-shape
+      pools sharing one runtime ``table=``: the whole-step paged read —
+      all pools stack and the heterogeneous per-request lengths (encoded
+      in the table rows) fuse into ONE page-granular gather program
+      (``shard=`` supported on the page axis).  Returns one gathered
+      array per pool.
     """
     pol = resolve(policy)
+    if isinstance(specs, Paged):
+        if table is None:
+            raise ValueError("Paged gather_many needs table=")
+        pools = list(bufs)
+        spec = specs.bind(pools[0].dtype)
+        prog = _program.fuse([_lower.lower("paged.gather", spec, pol.impl,
+                                           shard)] * len(pools))
+        stacked = pools[0] if len(pools) == 1 else jnp.stack(pools)
+        out = _lower.executor(prog, (spec,) * len(pools), shard)(stacked,
+                                                                 table)
+        return [out] if len(pools) == 1 else [out[a]
+                                              for a in range(len(pools))]
     if isinstance(specs, Segment):
         aos_list = list(bufs)
         spec = specs.bind(aos_list[0].dtype)

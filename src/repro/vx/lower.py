@@ -33,7 +33,7 @@ import jax.numpy as jnp
 
 from repro.vx import program as prg
 from repro.vx.cache import PLANS
-from repro.vx.spec import AccessSpec, Strided
+from repro.vx.spec import AccessSpec, Paged, Strided
 
 #: Ops that accept a sharded placement, and where the shard axis may sit.
 _SHARDABLE = {
@@ -41,6 +41,7 @@ _SHARDABLE = {
     "scatter.plan": "lane",
     "seg.deint": "outer",       # Shard.axis != -1: shard-local permutation
     "seg.int": "outer",
+    "paged.gather": "pool",     # Shard.axis == -(trail+2): the page axis
 }
 
 
@@ -73,6 +74,16 @@ def lower(op: str, specs, impl: str,
             if len(specs) != 1:
                 raise NotImplementedError(
                     "fused strided transactions have no sharded lowering")
+        elif where == "pool":
+            want = -(specs[0].trail + 2)
+            if shard.axis != want:
+                raise ValueError(
+                    f"{op} shards the page-pool axis: Shard.axis must be "
+                    f"{want} for trail={specs[0].trail}, got {shard.axis}")
+            if len(set(specs)) != 1:
+                raise NotImplementedError(
+                    "heterogeneous fused paged transactions have no "
+                    "sharded lowering")
         elif shard.axis == -1:
             raise ValueError(
                 f"{op} permutes the lane axis; shard an outer axis "
@@ -200,6 +211,31 @@ def _seg_int(txn: prg.Txn, specs: tuple):
 
 
 def _idx_gather(txn: prg.Txn, specs: tuple):
+    spec = specs[0]
+    if getattr(spec, "routing", None) is not None:
+        # Static routing: the plan stage.  The layer take-masks are
+        # computed ONCE here (concrete inputs -> concrete masks, even
+        # under an outer jit trace) and the executor is memoized in
+        # vx.PLANS under the spec key (routing included), so the payload
+        # pays one static shift + one select per layer — on every impl,
+        # since the masks are already compile-time constants.
+        import numpy as np
+
+        from repro.core import shiftnet
+        shift = jnp.asarray(np.array(spec.routing[0], np.int32))
+        valid = jnp.asarray(np.array(spec.routing[1], bool))
+        masks, occ = shiftnet.layer_masks(shift, valid, toward_zero=True,
+                                          lsb_first=True)
+
+        def planned(buf):
+            out = buf
+            if masks.shape[0]:
+                out = shiftnet.apply_layer_masks(out, masks, axis=-1,
+                                                 toward_zero=True,
+                                                 lsb_first=True)
+            return jnp.where(occ, out, jnp.zeros_like(out))
+
+        return planned
     if txn.impl == "ref":
         from repro.core import shiftnet
 
@@ -255,6 +291,70 @@ def _compact_ids(txn: prg.Txn, specs: tuple):
     return lambda mask: accessfuse.compact_indices(mask, cap)
 
 
+def _paged_gather(txn: prg.Txn, specs: tuple):
+    """Page-table gather: ``out[.., j, ..] = pool[.., t[j//ps], j%ps, ..]``.
+
+    The table is a RUNTIME operand; only the geometry (page_size, pages,
+    trail, dtype) is compiled state, so ONE cached executor serves every
+    request and every decode step.  Page dispatch is one take at page
+    granularity (each page is a contiguous beat — the access is already
+    coalesced; the within-beat routing is the identity plan), entries
+    ``< 0`` read as zeros.  Width-N fused transactions run on a stacked
+    pool with ONE shared table — still a single gather (rank-agnostic:
+    the page axis is found from the end).
+    """
+    spec = specs[0]
+    ps, pages, trail = spec.page_size, spec.pages, spec.trail
+
+    def fn(pool, table):
+        pa = spec.pool_axis(pool.ndim)
+        if pool.shape[pa + 1] != ps:
+            raise ValueError(
+                f"pool axis {pa + 1} has {pool.shape[pa + 1]} lanes, "
+                f"spec.page_size is {ps}")
+        if table.shape[-1] != pages:
+            raise ValueError(
+                f"table has {table.shape[-1]} pages, spec.pages is {pages}")
+        valid = table >= 0
+        out = jnp.take(pool, jnp.maximum(table, 0), axis=pa)
+        # out: (*lead, *batch, pages, ps, *trail); zero unallocated pages
+        vshape = ((1,) * pa + table.shape + (1,) + (1,) * trail)
+        out = jnp.where(valid.reshape(vshape), out, jnp.zeros_like(out))
+        shape = (out.shape[:pa + table.ndim - 1] + (pages * ps,)
+                 + out.shape[pa + table.ndim + 1:])
+        return out.reshape(shape)
+
+    return fn
+
+
+def _paged_scatter(txn: prg.Txn, specs: tuple):
+    """Decode append: one beat per table row, written through the page
+    table at per-row position ``pos`` (``pos // ps`` picks the logical
+    page, ``pos % ps`` the in-page offset).  Rows with ``pos < 0`` or an
+    unallocated table entry are DROPPED (out-of-bounds scatter), so an
+    inactive serving slot appends nothing."""
+    spec = specs[0]
+    ps, trail = spec.page_size, spec.trail
+
+    def fn(pool, values, table, pos):
+        pa = spec.pool_axis(pool.ndim)
+        P = pool.shape[pa]
+        pos = jnp.asarray(pos, jnp.int32)
+        oob = (pos < 0) | (pos >= spec.pages * ps)
+        page = jnp.where(oob, 0, pos // ps)
+        phys = jnp.take_along_axis(table, page[..., None], axis=-1)[..., 0]
+        drop = oob | (phys < 0)
+        phys = jnp.where(drop, P, phys)          # out of bounds -> dropped
+        off = jnp.where(drop, ps, pos % ps)
+        idx = (slice(None),) * pa + (phys, off)
+        vals = values.astype(pool.dtype).reshape(
+            (1,) * pa + values.shape)
+        vals = jnp.broadcast_to(vals, pool.shape[:pa] + values.shape)
+        return pool.at[idx].set(vals, mode="drop")
+
+    return fn
+
+
 def _compact_expand(txn: prg.Txn, specs: tuple):
     if txn.impl == "ref":
         from repro.kernels import ref
@@ -275,6 +375,8 @@ _BUILDERS = {
     "compact.rows": _compact_rows,
     "compact.ids": _compact_ids,
     "compact.expand": _compact_expand,
+    "paged.gather": _paged_gather,
+    "paged.scatter": _paged_scatter,
 }
 
 
@@ -447,11 +549,48 @@ def _sharded_seg_int(txn: prg.Txn, specs: tuple, shard: prg.Shard):
     return fn
 
 
+def _sharded_paged_gather(txn: prg.Txn, specs: tuple, shard: prg.Shard):
+    """Shard-local page gathers over a pool sharded on the page axis.
+
+    Each shard owns a contiguous block of ``P // R`` physical pages; the
+    (replicated) table is rebased into the local page-id space, entries
+    owned elsewhere become ``-1`` (the replicated builder zeroes them),
+    and ONE ``psum`` merges the disjoint per-shard contributions — every
+    physical page has exactly one owner, so the psum is a select.  The
+    sharded pool leaf is never sliced globally (the PR 4 invariant)."""
+    spec = specs[0]
+    inner = _paged_gather(txn, specs)
+
+    def fn(pool, table):
+        pa = spec.pool_axis(pool.ndim)
+        P, R = pool.shape[pa], shard.nshards
+        if P % R:
+            raise ValueError(
+                f"pool of {P} pages does not split into {R} equal shards")
+        nl = P // R
+        out_ndim = pool.ndim + table.ndim - 2
+
+        def body(lp, tb):
+            local = tb - _shard_index(shard) * nl
+            owned = (tb >= 0) & (local >= 0) & (local < nl)
+            out = inner(lp, jnp.where(owned, local, -1))
+            return jax.lax.psum(out, shard.axes)
+
+        g = _shard_map(body, shard,
+                       (_axis_spec(pool.ndim, pa, shard),
+                        _replicated_spec(table.ndim)),
+                       _replicated_spec(out_ndim))
+        return g(pool, table)
+
+    return fn
+
+
 _SHARDED_BUILDERS = {
     "gather.plan": _sharded_gather_plan,
     "scatter.plan": _sharded_scatter_plan,
     "seg.deint": _sharded_seg_deint,
     "seg.int": _sharded_seg_int,
+    "paged.gather": _sharded_paged_gather,
 }
 
 
@@ -460,7 +599,8 @@ def _build_sharded(txn: prg.Txn, specs: tuple, shard):
         raise ValueError(
             f"program was lowered for layout {txn.layout} but executor "
             f"got {None if shard is None else shard.layout()}")
-    if txn.op in ("gather.plan", "scatter.plan") and not txn.homogeneous:
+    if txn.op in ("gather.plan", "scatter.plan", "paged.gather") \
+            and not txn.homogeneous:
         # a fused heterogeneous group reaches here through program.fuse
         # (per-access lower() only sees width 1): the sharded builder
         # compiles ONE rebased plan, which would silently apply spec 0's

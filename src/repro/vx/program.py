@@ -106,11 +106,15 @@ def layout_of(shard: "Shard | None") -> tuple | None:
 
 #: Ops a Txn may name.  ``*.plan`` ops consume compiled shift plans;
 #: ``bank.*`` dispatch a runtime stride over the plan bank's lax.switch;
-#: ``idx.*`` are the raw DROM network; ``compact.*`` the MoE primitives.
+#: ``idx.*`` are the DROM network (dynamic counts, or constant take-masks
+#: when the spec folds a static routing); ``compact.*`` the MoE
+#: primitives; ``paged.*`` page-table-indexed pool access (runtime table
+#: operand, program keyed by page geometry only).
 OPS = (
     "gather.plan", "scatter.plan", "bank.gather", "bank.scatter",
     "seg.deint", "seg.int", "idx.gather", "idx.scatter",
     "compact.rows", "compact.ids", "compact.expand",
+    "paged.gather", "paged.scatter",
 )
 
 

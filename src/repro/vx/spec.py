@@ -14,10 +14,17 @@ Four constructors (EARTH's four access archetypes):
   and routes through the runtime-stride plan bank).
 * :class:`Segment`  — AoS <-> SoA field transposition over an ``n``-lane
   beat with ``fields`` interleaved fields (RCVRF segment access).
-* :class:`Indexed`  — raw shift-network access driven by explicit per-lane
-  (shift, valid) operands (the DROM primitive under everything else).
+* :class:`Indexed`  — shift-network access driven by per-lane (shift,
+  valid) routing (the DROM primitive under everything else).  Host-known
+  routings fold into the spec (``routing=``) and compile to constant
+  take-masks through the plan stage; traced routings keep the dynamic
+  network.
 * :class:`Compact`  — order-preserving masked compaction (the MoE dispatch
   primitive) and its expansion inverse.
+* :class:`Paged`    — page-table-indexed gather/append over a shared page
+  pool (the serving KV-cache pattern): page geometry is static and keys
+  the compiled program; the page table is a runtime operand, so ONE cached
+  program serves every request.
 
 ``dtype`` and ``vl`` participate in ``key()`` — plan-cache entries can
 therefore never collide across element types or vector lengths (the PR 3
@@ -140,14 +147,96 @@ class Segment(AccessSpec):
 
 @dataclasses.dataclass(frozen=True)
 class Indexed(AccessSpec):
-    """Raw DROM access over ``n`` lanes: routing is given explicitly as
-    per-lane (shift, valid) operands at call time (no closed-form SCG)."""
+    """DROM access over ``n`` lanes routed by per-lane (shift, valid).
+
+    Two forms (no closed-form SCG in either):
+
+    * dynamic — ``shift``/``valid`` are traced call-time operands and the
+      access pays the dynamic-count network;
+    * static  — a host-known routing is folded into the spec as
+      ``routing=(shifts, valids)`` (hashable tuples), which PROMOTES the
+      access into the plan stage: the layer take-masks are computed once
+      at executor build and memoized in ``vx.PLANS`` under this spec's
+      key, so the payload pays one static shift + one select per layer
+      (the same promotion the verbs apply automatically when they receive
+      concrete numpy routing operands).
+
+    The routing must be GSN-safe (order-preserving, separation
+    non-increasing toward lane 0) — the same contract as the dynamic
+    network.
+    """
 
     n: int
+    dtype: str | None = None
+    routing: tuple | None = None   # ((shift,)*n, (valid,)*n) host constants
+
+    def __post_init__(self):
+        object.__setattr__(self, "dtype", _dtype_str(self.dtype))
+        if self.routing is not None:
+            shifts, valids = self.routing
+            shifts = tuple(int(s) for s in shifts)
+            valids = tuple(bool(v) for v in valids)
+            if len(shifts) != self.n or len(valids) != self.n:
+                raise ValueError(
+                    f"routing must carry {self.n} per-lane entries, got "
+                    f"{len(shifts)}/{len(valids)}")
+            object.__setattr__(self, "routing", (shifts, valids))
+
+    @property
+    def static(self) -> bool:
+        return self.routing is not None
+
+
+@dataclasses.dataclass(frozen=True)
+class Paged(AccessSpec):
+    """Page-table-indexed access over a shared pool (paged KV cache).
+
+    The pool holds ``(*lead, P, page_size, *trail)`` with ``trail`` static
+    trailing dims after the in-page axis (a KV pool ``(NS, P, ps, K, 2D)``
+    has ``trail=2``); the page table is a RUNTIME int32 operand
+    ``(*batch, pages)`` mapping each sequence's logical pages to physical
+    pool pages, ``-1`` marking unallocated entries (gather returns zeros
+    there; scatter drops writes).
+
+    * gather  — ``out[..., j, ...] = pool[..., table[j // ps], j % ps,
+      ...]`` for j < pages*ps: the per-request page-table gather, one
+      take at page granularity (beats stay contiguous — the coalesced
+      EARTH transaction), table-driven and reusable across requests.
+    * scatter — the decode append: one ``(*batch, *trail)`` beat written
+      at per-row position ``pos`` through the table (rows with ``pos < 0``
+      or an unallocated page are dropped).
+
+    Only the page GEOMETRY is spec data — page_size, table width, trail
+    rank, dtype — so the compiled program is keyed by page size (one plan
+    per geometry, shared by every request and every decode step), never by
+    the runtime table.
+    """
+
+    page_size: int
+    pages: int                     # static table width (pages per sequence)
+    trail: int = 0                 # trailing dims after the in-page axis
     dtype: str | None = None
 
     def __post_init__(self):
         object.__setattr__(self, "dtype", _dtype_str(self.dtype))
+        if self.page_size < 1 or self.pages < 1 or self.trail < 0:
+            raise ValueError(f"bad paged geometry: {self}")
+
+    @property
+    def seq_len(self) -> int:
+        """Gathered logical length: pages * page_size."""
+        return self.pages * self.page_size
+
+    def pool_axis(self, ndim: int) -> int:
+        """Index of the pool's page axis for a rank-``ndim`` operand
+        (negative-from-end ``-(trail + 2)``, so it survives fusion-pass
+        stacking of pools along a new leading dim)."""
+        ax = ndim - 2 - self.trail
+        if ax < 0:
+            raise ValueError(
+                f"rank-{ndim} pool cannot carry (P, page_size) plus "
+                f"{self.trail} trailing dims: {self}")
+        return ax
 
 
 @dataclasses.dataclass(frozen=True)

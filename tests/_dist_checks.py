@@ -311,6 +311,80 @@ def check_sharded_vx_property():
     print("CHECK_OK")
 
 
+def check_paged_pool_shard():
+    """Sharded paged-pool gathers: the pool sharded on its page axis over
+    1- and 2-axis meshes, gathered shard-locally (owned page block only,
+    one psum merge) — bit-exact vs the replicated lowering, for full,
+    partial, and unallocated tables, fused multi-pool form included.
+    Also: the compiled HLO of the sharded gather contains no all-gather
+    of a pool-sized operand (the no-global-slice invariant); and the full
+    serving path — paged_decode_step with the pool sharded via
+    ShardCtx.vx_pool_shard(-4) — is bit-exact vs the replicated step."""
+    from repro import vx
+    from repro.dist.sharding import ShardCtx, make_mesh
+    from repro.models import decode as dec
+    from repro.models.transformer import ModelConfig, init_params
+
+    rng = np.random.default_rng(0)
+    ps, pages, P, K, D2 = 4, 6, 16, 2, 8
+    pool = jnp.asarray(rng.normal(size=(2, P, ps, K, D2)), jnp.float32)
+    spec = vx.Paged(page_size=ps, pages=pages, trail=2)
+    tables = np.full((3, pages), -1, np.int32)
+    tables[0, :pages] = rng.permutation(P)[:pages]        # full
+    tables[1, :3] = [15, 0, 7]                            # partial
+    table = jnp.asarray(tables)
+    want = vx.gather(spec, pool, table=table, policy="ref")
+
+    for shape, axes in [((8,), ("s",)), ((2, 4), ("a", "b")),
+                        ((4, 2), ("a", "b"))]:
+        mesh = make_mesh(shape, axes)
+        shard = vx.Shard(axes=axes, axis=-4, mesh=mesh)
+        got = jax.jit(lambda pl, tb: vx.gather(
+            spec, pl, table=tb, policy="ref", shard=shard))(pool, table)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        outs = jax.jit(lambda pl, tb: vx.gather_many(
+            spec, [pl, pl * 2], table=tb, policy="ref",
+            shard=shard))(pool, table)
+        np.testing.assert_array_equal(np.asarray(outs[0]), np.asarray(want))
+        np.testing.assert_array_equal(np.asarray(outs[1]),
+                                      np.asarray(want) * 2)
+        # no pool-sized all-gather in the compiled sharded gather
+        hlo = jax.jit(lambda pl, tb: vx.gather(
+            spec, pl, table=tb, policy="ref",
+            shard=shard)).lower(pool, table).compile().as_text()
+        pool_elems = P * ps * K * D2
+        for line in hlo.splitlines():
+            if "all-gather" in line and f"{pool_elems}" in line:
+                raise AssertionError(f"pool-sized all-gather:\n{line}")
+
+    # the serving path: paged decode with the pool sharded through
+    # ShardCtx.vx_pool_shard — bit-exact vs the replicated step
+    mesh = make_mesh((8,), ("s",))
+    ctx = ShardCtx(mesh=mesh, data_axes=(), model_axis=None,
+                   seq_axes=("s",))
+    pool_shard = ctx.vx_pool_shard(-4)
+    assert pool_shard is not None and pool_shard.axes == ("s",)
+    cfg = ModelConfig(name="paged-shard", d_model=32, n_layers=2,
+                      n_heads=2, n_kv_heads=2, d_ff=64, vocab=97,
+                      head_dim=16, mlp="swiglu", scan_layers=True,
+                      kernel_impl="ref", remat="none")
+    params = init_params(cfg, jax.random.key(0))
+    # num_pages = 2 slots x 8 pages: divides the 8 shards
+    rep = dec.init_paged_cache(cfg, 2, 32, 4, jnp.float32)
+    shd = rep
+    tok = jnp.asarray([3, 9], jnp.int32)
+    jrep = jax.jit(lambda p, c, t: dec.paged_decode_step(p, c, t, cfg,
+                                                         None))
+    jshd = jax.jit(lambda p, c, t: dec.paged_decode_step(
+        p, c, t, cfg, None, pool_shard=pool_shard))
+    for _ in range(5):
+        lr, rep = jrep(params, rep, tok)
+        ls, shd = jshd(params, shd, tok)
+        np.testing.assert_array_equal(np.asarray(lr), np.asarray(ls))
+        tok = jnp.argmax(lr.astype(jnp.float32), -1).astype(jnp.int32)
+    print("CHECK_OK")
+
+
 CHECKS = {
     "moe_ep_equivalence": check_moe_ep_equivalence,
     "sharded_train_step": check_sharded_train_step,
@@ -320,6 +394,7 @@ CHECKS = {
     "longctx_fused_decode": check_longctx_fused_decode,
     "longctx_launch_gate": check_longctx_launch_gate,
     "sharded_vx_property": check_sharded_vx_property,
+    "paged_pool_shard": check_paged_pool_shard,
 }
 
 if __name__ == "__main__":

@@ -1,17 +1,27 @@
-"""Serving engine: continuous batching, interleaved KV cache behaviour."""
+"""Serving engine: continuous batching over the paged KV runtime —
+admission/prefill, active-set stepping, sampling, page reclamation."""
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_arch
 from repro.models.transformer import init_params
 from repro.serve.engine import BatchedServer
 
 
-def _server(slots=3, max_len=32):
+@functools.lru_cache(maxsize=None)
+def _cfg_params():
     cfg = get_arch("qwen3-0.6b").smoke
-    params = init_params(cfg, jax.random.key(0))
-    return cfg, BatchedServer(cfg, params, slots=slots, max_len=max_len)
+    return cfg, init_params(cfg, jax.random.key(0))
+
+
+def _server(slots=3, max_len=32, **kw):
+    cfg, params = _cfg_params()
+    return cfg, BatchedServer(cfg, params, slots=slots, max_len=max_len,
+                              **kw)
 
 
 def test_continuous_batching_slots():
@@ -80,6 +90,142 @@ def test_plan_cache_zero_steady_state_misses():
     steady = vx.PLANS.stats()
     assert steady["misses"] == warm["misses"], (warm, steady)
     assert steady["evictions"] == warm["evictions"], (warm, steady)
+
+
+def test_finish_clears_slot_state_for_reuse():
+    """The PR 5 reclamation regression: two sequential requests through
+    ONE slot — the second must be bit-exact vs a fresh server (the old
+    dense server left the previous occupant's KV and a shared position
+    counter behind)."""
+    cfg, server = _server(slots=1)
+    s0 = server.add_request(42)
+    for _ in range(4):
+        server.step()
+    server.finish(s0)
+    s1 = server.add_request(17)
+    assert s1 == s0
+    for _ in range(4):
+        server.step()
+    reused = server.finish(s1)
+
+    _, fresh = _server(slots=1)
+    sf = fresh.add_request(17)
+    for _ in range(4):
+        fresh.step()
+    assert reused == fresh.finish(sf)
+
+
+def test_finish_reclaims_pages():
+    cfg, server = _server(slots=2)
+    free0 = server.scheduler.cache.free_pages()
+    s0 = server.add_request(prompt=[3, 5, 7, 9, 11])
+    for _ in range(3):
+        server.step()
+    assert server.scheduler.cache.free_pages() < free0
+    assert server.scheduler.cache.active_tokens() == 7   # 4 prefill + 3
+    server.finish(s0)
+    assert server.scheduler.cache.free_pages() == free0
+    assert server.scheduler.cache.active_tokens() == 0
+
+
+def test_add_request_full_prompt_prefills():
+    """Multi-token prompts run through jit_prefill into the slot's pages;
+    the first generated step must agree with forced token-by-token decode
+    (prefill and decode are different computations — allclose)."""
+    from repro.models import decode as dec
+    cfg, params = _cfg_params()
+    _, server = _server(slots=2)
+    prompt = [7, 11, 13, 17, 19]
+    s = server.add_request(prompt=prompt)
+    server.step()
+    out = server.scheduler.tokens[s]
+    assert out[:5] == prompt and len(out) == 6
+
+    cache = dec.init_paged_cache(cfg, 1, 32, server.scheduler.cache.page_size,
+                                 jnp.float32)
+    step = jax.jit(lambda p, c, t: dec.paged_decode_step(p, c, t, cfg,
+                                                         None))
+    for t in prompt:
+        logits, cache = step(params, cache, jnp.asarray([t], jnp.int32))
+    np.testing.assert_allclose(
+        np.asarray(server.scheduler.last_logits[s], np.float32),
+        np.asarray(logits[0], np.float32), rtol=2e-4, atol=2e-4)
+
+
+def _forced_feed_logits(cfg, params, prompt, max_len, page_size):
+    """Token-by-token paged decode oracle: logits after feeding prompt."""
+    from repro.models import decode as dec
+    cache = dec.init_paged_cache(cfg, 1, max_len, page_size, jnp.float32)
+    step = jax.jit(lambda p, c, t: dec.paged_decode_step(p, c, t, cfg,
+                                                         None))
+    for t in prompt:
+        logits, cache = step(params, cache, jnp.asarray([t], jnp.int32))
+    return logits[0]
+
+
+def test_prompt_prefill_windowed_layers():
+    """Prompt prefill with sliding-window layers: the prefill must run at
+    the TRUE length (padding would trim the ring at the padded length,
+    dropping real in-window beats)."""
+    from repro.models.transformer import ModelConfig
+    from repro.serve.scheduler import Scheduler
+    cfg = ModelConfig(name="win-serve", d_model=32, n_layers=2, n_heads=2,
+                      n_kv_heads=2, d_ff=64, vocab=97, head_dim=16,
+                      mlp="swiglu", window_pattern=(8,), scan_layers=True,
+                      kernel_impl="ref", remat="none")
+    params = init_params(cfg, jax.random.key(7))
+    prompt = [5, 9, 13, 17, 21, 25, 29, 33, 37, 41, 45]  # 10 prefilled > W
+    sched = Scheduler(cfg, params, slots=1, max_len=32, page_size=16)
+    s = sched.add_request(prompt)
+    sched.step()
+    want = _forced_feed_logits(cfg, params, prompt, 32, 16)
+    np.testing.assert_allclose(
+        np.asarray(sched.last_logits[s], np.float32),
+        np.asarray(want, np.float32), rtol=2e-4, atol=2e-4)
+
+
+def test_prompt_prefill_hybrid_recurrent_layers():
+    """Prompt prefill with recurrent (mamba) blocks: pad tokens must not
+    leak into the installed per-slot state."""
+    from repro.models.ssm import MambaSpec
+    from repro.models.transformer import ModelConfig, init_params as ip
+    from repro.serve.scheduler import Scheduler
+    cfg = ModelConfig(name="hyb-serve", d_model=32, n_layers=2, n_heads=2,
+                      n_kv_heads=2, d_ff=64, vocab=97, head_dim=16,
+                      mlp="swiglu", block_pattern=("attn", "mamba"),
+                      window_pattern=(None, None),
+                      moe_pattern=(False, False),
+                      mamba=MambaSpec(d_model=32), scan_layers=True,
+                      kernel_impl="ref", remat="none")
+    params = ip(cfg, jax.random.key(8))
+    prompt = [3, 7, 11, 15, 19, 23]          # 5 prefilled, not a page mult
+    sched = Scheduler(cfg, params, slots=1, max_len=32, page_size=16)
+    s = sched.add_request(prompt)
+    sched.step()
+    want = _forced_feed_logits(cfg, params, prompt, 32, 16)
+    np.testing.assert_allclose(
+        np.asarray(sched.last_logits[s], np.float32),
+        np.asarray(want, np.float32), rtol=2e-4, atol=2e-4)
+
+
+def test_admission_refused_when_pool_exhausted():
+    cfg, server = _server(slots=3, max_len=32, num_pages=2)
+    server.add_request(5)          # needs 1 page + 1 headroom
+    with pytest.raises(RuntimeError, match="page pool exhausted"):
+        server.add_request(7)
+
+
+def test_sampling_seeded_and_topk1_is_greedy():
+    cfg, greedy = _server(slots=1)
+    _, topk1 = _server(slots=1, temperature=0.7, top_k=1, seed=3)
+    _, a = _server(slots=1, temperature=0.9, top_k=8, seed=11)
+    _, b = _server(slots=1, temperature=0.9, top_k=8, seed=11)
+    for srv in (greedy, topk1, a, b):
+        srv.add_request(23)
+    for _ in range(5):
+        tg, t1 = greedy.step()[0], topk1.step()[0]
+        assert tg == t1                    # top-1 degenerates to argmax
+        assert a.step()[0] == b.step()[0]  # same seed, same stream
 
 
 def test_plan_cache_stats_counters():

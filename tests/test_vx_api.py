@@ -387,6 +387,32 @@ def test_spec_hashable_and_frozen():
         vx.Strided(n=32, stride=8, vl=8)      # leaves the window
     with pytest.raises(ValueError):
         vx.Segment(n=33, fields=2)            # not divisible
+    p = vx.Paged(page_size=8, pages=4, trail=2, dtype=jnp.float32)
+    assert p == vx.Paged(page_size=8, pages=4, trail=2, dtype="float32")
+    assert p.seq_len == 32 and p.pool_axis(5) == 1
+    assert {p: 2}[p] == 2
+    with pytest.raises(ValueError):
+        vx.Paged(page_size=0, pages=4)
+    i = vx.Indexed(n=4, routing=((0, 1, 1, 2), (1, 1, 0, 1)))
+    assert i.static and i.key() != vx.Indexed(n=4).key()
+    with pytest.raises(ValueError):
+        vx.Indexed(n=4, routing=((0, 1), (1, 1)))   # wrong arity
+
+
+def test_paged_verbs_validate_operands():
+    pool = jnp.zeros((4, 4, 2), jnp.float32)
+    spec = vx.Paged(page_size=4, pages=2, trail=1)
+    with pytest.raises(ValueError, match="table="):
+        vx.gather(spec, pool)
+    with pytest.raises(ValueError, match="table= and pos="):
+        vx.scatter(spec, pool, jnp.zeros((1, 2)))
+    with pytest.raises(ValueError, match="page_size"):
+        vx.gather(vx.Paged(page_size=8, pages=2, trail=1), pool,
+                  table=jnp.zeros((1, 2), jnp.int32))
+    with pytest.raises(ValueError, match="shift=/valid="):
+        vx.gather(vx.Indexed(n=4, routing=((0, 0, 0, 0), (1, 1, 1, 1))),
+                  jnp.zeros((4,)), shift=np.zeros(4, np.int32),
+                  valid=np.ones(4, bool))
 
 
 # ---------------------------------------------------------------------------

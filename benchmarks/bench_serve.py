@@ -222,9 +222,80 @@ def _bench_trace() -> None:
          requests=n_req, slots=slots, max_len=max_len, page_size=ps)
 
 
+def _bench_chaos() -> None:
+    """``serve/chaos_degradation`` — tokens/s of the hardened runtime
+    under a seeded fault plan (preemptions, NaN injection, slot death,
+    spikes, malformed traffic) with ``check_invariants()`` forced on
+    every tick, vs the same engine geometry serving the same workload
+    clean on the untouched fast path.  The ratio bounds what the
+    robustness machinery costs WHEN FAULTS FIRE; the clean path costs
+    nothing (tests/test_chaos.py gates a single jit trace)."""
+    from repro.serve.chaos import ChaosConfig, FaultPlan, run_plan
+
+    cfg = _cfg()
+    params = init_params(cfg, jax.random.key(0))
+    slots, max_len, ps = 4, 64, 16
+    n_req = 6 if common.QUICK else 12
+    ccfg = ChaosConfig(seed=0, requests=n_req, steps=24, max_ticks=512,
+                       max_prompt=max(2, max_len // 8), max_new_tokens=12)
+    plan = FaultPlan(ccfg)
+
+    def mk():
+        return Scheduler(cfg, params, slots=slots, max_len=max_len,
+                         page_size=ps, guard_nan=True)
+
+    def clean_run(sched):
+        """The plan's workload with NO faults and NO forced audits."""
+        pending = list(plan.workload)
+        reqs, tick = [], 0
+        t0 = time.perf_counter()
+        while tick < ccfg.max_ticks:
+            while pending and pending[0][0] <= tick:
+                try:
+                    reqs.append(sched.submit(pending[0][1],
+                                             max_new_tokens=pending[0][2]))
+                    pending.pop(0)
+                except Exception:      # noqa: BLE001 — backpressure: retry
+                    pending[0] = (tick + 1, *pending[0][1:])
+                    break
+            sched.tick()
+            tick += 1
+            if not pending and sched.drained():
+                break
+        return time.perf_counter() - t0, sum(r.generated for r in reqs)
+
+    clean = mk()
+    clean_run(clean)                             # warm the per-instance jits
+    wall_c, gen_c = clean_run(clean)
+
+    chaotic = mk()
+    run_plan(chaotic, plan)                      # warm
+    t0 = time.perf_counter()
+    rep = run_plan(chaotic, plan)
+    wall_f = time.perf_counter() - t0
+    gen_f = sum(r.generated for r in rep.submitted)
+
+    tps_c = gen_c / max(wall_c, 1e-9)
+    tps_f = gen_f / max(wall_f, 1e-9)
+    emit("serve/chaos_degradation", wall_f * 1e6 / max(gen_f, 1),
+         f"clean_tok_s={tps_c:.1f} chaos_tok_s={tps_f:.1f} "
+         f"degradation={tps_f / max(tps_c, 1e-9):.2f}x ticks={rep.ticks} "
+         f"preemptions={rep.preemptions} nan_failures={rep.nan_failures} "
+         f"invariant_checks={rep.invariant_checks} "
+         f"all_terminal={rep.all_terminal} host_noise_bound=true",
+         clean_tok_s=round(tps_c, 2), chaos_tok_s=round(tps_f, 2),
+         degradation=round(tps_f / max(tps_c, 1e-9), 3),
+         ticks=rep.ticks, preemptions=rep.preemptions,
+         nan_failures=rep.nan_failures,
+         invariant_checks=rep.invariant_checks,
+         all_terminal=bool(rep.all_terminal), host_noise_bound=True,
+         requests=n_req, slots=slots, max_len=max_len, page_size=ps)
+
+
 def run() -> None:
     _bench_step()
     _bench_trace()
+    _bench_chaos()
 
 
 if __name__ == "__main__":

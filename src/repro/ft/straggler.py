@@ -81,3 +81,54 @@ class StragglerPolicy:
     def gradient_scale(self) -> float:
         """Rescale factor for the DP mean when hosts are excluded."""
         return self.n_hosts / max(1, len(self.active_hosts()))
+
+
+class StepWatchdog:
+    """The StragglerPolicy deadline rule applied to ONE serving replica's
+    step wall times: a step is a BREACH when it exceeds ``factor`` x the
+    rolling median of recent steps (after ``min_history`` observations),
+    or ``hard_limit`` seconds outright.  The serve scheduler records each
+    decode step's duration; breaches are counted and surfaced (stats /
+    chaos reports) rather than raised — a slow step is a symptom to act
+    on (preempt, shed load), not a crash.
+
+    Pure host Python with the same injectable-measurement design as
+    :class:`StragglerPolicy` (callers time the step and pass the
+    duration), so the policy is unit-testable without wall time.
+    """
+
+    def __init__(self, cfg: StragglerConfig = StragglerConfig(), *,
+                 hard_limit: float | None = None):
+        self.cfg = cfg
+        self.hard_limit = hard_limit
+        self._hist: deque = deque(maxlen=cfg.window)
+        self.breaches = 0
+        self.observations = 0
+        self.last_breach: float | None = None
+
+    def median(self) -> float | None:
+        finite = [d for d in self._hist if d != float("inf")]
+        return statistics.median(finite) if finite else None
+
+    def deadline(self) -> float | None:
+        """The current per-step budget, or None before enough history."""
+        if self.hard_limit is not None:
+            return self.hard_limit
+        if len(self._hist) < self.cfg.min_history:
+            return None
+        med = self.median()
+        return self.cfg.factor * med if med is not None else None
+
+    def observe(self, duration: float) -> bool:
+        """Record one step's wall time; True when it breached the
+        deadline.  Breaching steps are excluded from the history so a
+        stall cannot drag the median up and mask itself."""
+        self.observations += 1
+        limit = self.deadline()
+        breach = limit is not None and duration > limit
+        if breach:
+            self.breaches += 1
+            self.last_breach = duration
+        else:
+            self._hist.append(duration)
+        return breach

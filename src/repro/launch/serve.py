@@ -1,9 +1,15 @@
-"""Serving CLI: paged continuous batching (prefill + decode + sampling).
+"""Serving CLI: paged continuous batching (prefill + decode + sampling)
+through the hardened request lifecycle (typed requests, deadlines,
+preemption-and-restore, runtime guards), with an optional chaos mode.
 
 Example (CPU, reduced geometry):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
       --requests 4 --prompt-len 16 --gen 12 --page-size 16 \
       --temperature 0.8 --top-k 40
+
+Chaos smoke (seeded fault plan, invariants audited every tick):
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
+      --chaos 0 --requests 6 --gen 6
 """
 from __future__ import annotations
 
@@ -13,6 +19,7 @@ import time
 import jax
 
 from repro.configs import get_arch
+from repro.ft.straggler import StepWatchdog
 from repro.models.transformer import init_params
 from repro.serve.engine import BatchedServer
 
@@ -29,6 +36,16 @@ def main() -> None:
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy (default)")
     ap.add_argument("--top-k", type=int, default=None)
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="per-request TTL in seconds (TIMED_OUT beyond)")
+    ap.add_argument("--queue-depth", type=int, default=None,
+                    help="admission queue bound (backpressure beyond)")
+    ap.add_argument("--check-invariants", action="store_true",
+                    help="audit the page pool after every mutation")
+    ap.add_argument("--guard-nan", action="store_true",
+                    help="fail (only) slots producing non-finite logits")
+    ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                    help="run a seeded fault plan instead of clean serving")
     args = ap.parse_args()
 
     arch = get_arch(args.arch)
@@ -38,27 +55,61 @@ def main() -> None:
     params = init_params(cfg, jax.random.key(0))
     server = BatchedServer(cfg, params, slots=args.requests,
                            max_len=args.max_len, page_size=args.page_size,
-                           temperature=args.temperature, top_k=args.top_k)
+                           temperature=args.temperature, top_k=args.top_k,
+                           queue_depth=args.queue_depth,
+                           guard_nan=args.guard_nan or args.chaos is not None,
+                           debug_invariants=args.check_invariants,
+                           watchdog=StepWatchdog())
+    sched = server.scheduler
+
+    if args.chaos is not None:
+        from repro.serve.chaos import ChaosConfig, FaultPlan, run_plan
+        plan = FaultPlan(ChaosConfig(seed=args.chaos,
+                                     requests=args.requests,
+                                     max_prompt=min(args.prompt_len,
+                                                    args.max_len // 2),
+                                     max_new_tokens=args.gen))
+        t0 = time.time()
+        rep = run_plan(sched, plan)
+        dt = time.time() - t0
+        print(f"chaos seed {args.chaos}: {rep.ticks} ticks in {dt:.2f}s — "
+              f"states={rep.states} preemptions={rep.preemptions} "
+              f"nan_failures={rep.nan_failures} "
+              f"invariant_checks={rep.invariant_checks} "
+              f"backpressured={rep.backpressured}")
+        if not rep.all_terminal:
+            raise SystemExit("chaos run left non-terminal requests")
+        print("every request reached a terminal typed state; "
+              "invariants never tripped")
+        return
 
     key = jax.random.key(42)
+    reqs = []
     for r in range(args.requests):
         toks = jax.random.randint(jax.random.fold_in(key, r),
                                   (max(args.prompt_len, 1),), 0, cfg.vocab)
-        server.add_request(prompt=[int(t) for t in toks])
+        reqs.append(server.submit([int(t) for t in toks],
+                                  max_new_tokens=args.gen,
+                                  ttl=args.deadline))
 
     t0 = time.time()
-    for _ in range(args.gen):
-        server.step()
+    steps = 0
+    while not sched.drained() and steps < 4 * (args.gen + args.requests):
+        server.tick()
+        steps += 1
     dt = time.time() - t0
-    tps = args.requests * args.gen / dt
-    cache = server.scheduler.cache
+    generated = sum(r.generated for r in reqs)
+    cache = sched.cache
     print(f"pages: {cache.pages_in_use()} in use of {cache.num_pages} "
           f"({cache.used_cache_bytes()} cache bytes backing live "
           f"requests)")
-    for s in range(args.requests):
-        print(f"slot {s}: {server.finish(s)[:12]} ...")
-    print(f"{args.gen} steps x {args.requests} slots in {dt:.2f}s "
-          f"({tps:.1f} tok/s on CPU interpret)")
+    for r in reqs:
+        print(f"req {r.rid}: {r.state.value:>9} {r.tokens[:12]} ...")
+    stats = sched.stats()
+    print(f"{steps} ticks, {generated} tokens in {dt:.2f}s "
+          f"({generated / max(dt, 1e-9):.1f} tok/s on CPU interpret); "
+          f"preemptions={stats['preemptions']} "
+          f"watchdog_breaches={stats.get('watchdog_breaches', 0)}")
 
 
 if __name__ == "__main__":

@@ -142,6 +142,84 @@ def _paged_geometry(cfg: ModelConfig, cache: dict):
     return attn_pos, ps, n_seq
 
 
+def paged_invariants(cfg: ModelConfig, cache: dict) -> list[str]:
+    """Audit the paged cache's STRUCTURAL invariants on a live pytree.
+
+    Returns a list of human-readable violations (empty = healthy):
+
+      * page aliasing — every allocated physical page id appears in the
+        table EXACTLY once (a page shared between slots would silently
+        cross-contaminate attention);
+      * free-stack consistency — ``free[:free_top]`` ids are in range,
+        distinct, and disjoint from the table; allocated ∪ free is ALL
+        pages exactly once (conservation: pages are never leaked or
+        double-owned, even under exhaustion where starved table entries
+        stay -1);
+      * pos-vs-table occupancy — a slot at position ``p`` owns at most
+        ``ceil(p / page_size)`` pages, all at logical indices below that
+        extent (starved slots may own FEWER — local degradation — but
+        never pages beyond their position);
+      * bounds — ``0 <= free_top <= num_pages``, positions within the
+        logical capacity.
+
+    ONE device fetch (table / free / free_top / pos — the small int
+    state; the pool itself is never pulled), so the check is cheap
+    enough to run per-step under the chaos harness.  The serve wrapper
+    (serve/paged_cache.py ``check_invariants``) raises on violations.
+    """
+    import numpy as np
+    attn_pos, ps, n_seq = _paged_geometry(cfg, cache)
+    table, free, free_top, pos = jax.device_get(
+        (cache["table"], cache["free"], cache["free_top"], cache["pos"]))
+    table, free, pos = (np.asarray(table), np.asarray(free),
+                        np.asarray(pos))
+    free_top = int(free_top)
+    num_pages = free.shape[0]
+    out: list[str] = []
+    if not attn_pos:
+        return out                      # recurrent-only: no pool to audit
+    if not (0 <= free_top <= num_pages):
+        out.append(f"free_top={free_top} outside [0, {num_pages}]")
+        return out                      # downstream slicing meaningless
+    owned = table[table >= 0]
+    if owned.size and (owned >= num_pages).any():
+        out.append(f"table holds out-of-range page ids "
+                   f"{sorted(set(owned[owned >= num_pages].tolist()))}")
+    uniq, counts = np.unique(owned, return_counts=True)
+    aliased = uniq[counts > 1]
+    if aliased.size:
+        out.append(f"page(s) {aliased.tolist()} aliased between slots "
+                   f"(owned {counts[counts > 1].tolist()} times)")
+    stack = free[:free_top]
+    uniq_f = np.unique(stack)
+    if uniq_f.size != stack.size:
+        out.append("free stack holds duplicate page ids")
+    both = np.intersect1d(uniq, uniq_f)
+    if both.size:
+        out.append(f"page(s) {both.tolist()} both allocated and free")
+    if uniq.size + uniq_f.size != num_pages or \
+            not np.array_equal(np.union1d(uniq, uniq_f),
+                               np.arange(num_pages)):
+        out.append(f"allocated ∪ free != all pages exactly once "
+                   f"({uniq.size} owned + {stack.size} free of "
+                   f"{num_pages})")
+    for s in range(table.shape[0]):
+        alloc = np.nonzero(table[s] >= 0)[0]
+        p = int(pos[s])
+        if not (0 <= p <= n_seq * ps):
+            out.append(f"slot {s}: pos={p} outside [0, {n_seq * ps}]")
+            continue
+        extent = -(-p // ps)            # pages the position can reach
+        if alloc.size > extent:
+            out.append(f"slot {s}: owns {alloc.size} pages but "
+                       f"pos={p} spans only {extent}")
+        if alloc.size and alloc.max() >= extent:
+            out.append(f"slot {s}: page at logical index "
+                       f"{int(alloc.max())} beyond pos={p} extent "
+                       f"{extent}")
+    return out
+
+
 def _keep_active(new, old, active):
     """Per-slot state gate: inactive slots keep their old state."""
     def sel(n, o):

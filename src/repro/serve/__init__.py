@@ -1,7 +1,17 @@
 """Serving: jit'd prefill/decode with sharded interleaved KV caches +
-a paged continuous-batching runtime (scheduler / paged cache / executor).
+a paged continuous-batching runtime (scheduler / paged cache / executor)
+hardened by a typed request lifecycle (admission backpressure,
+preemption-and-restore, runtime guards) and a deterministic chaos
+harness that proves it.
 """
+from repro.serve.chaos import (ChaosConfig, ChaosReport,  # noqa: F401
+                               FaultPlan, run_plan)
 from repro.serve.engine import (BatchedServer, ServeConfig,  # noqa: F401
                                 jit_decode_step, jit_prefill)
-from repro.serve.paged_cache import PagedCache  # noqa: F401
+from repro.serve.lifecycle import (AdmissionError,  # noqa: F401
+                                   AdmissionQueue, LifecycleError,
+                                   Request, RequestState,
+                                   TERMINAL_STATES, retry_with_backoff)
+from repro.serve.paged_cache import (InvariantViolation,  # noqa: F401
+                                     PagedCache)
 from repro.serve.scheduler import Scheduler, sample_tokens  # noqa: F401

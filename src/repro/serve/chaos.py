@@ -1,0 +1,182 @@
+"""Deterministic chaos harness over the paged serve runtime.
+
+A :class:`FaultPlan` is drawn ONCE from a seed — every fault (what,
+when, to whom) is decided before the run starts, so a failing chaos
+test replays bit-for-bit from its seed.  :func:`run_plan` drives a
+:class:`~repro.serve.scheduler.Scheduler` through a seeded workload
+while injecting the plan's faults, auditing the page pool's structural
+invariants (``PagedCache.check_invariants``) after EVERY tick — always
+on under chaos, whatever the scheduler's debug flag — and asserting
+the lifecycle contract: every submitted request reaches a terminal
+typed state (FINISHED / TIMED_OUT / FAILED), and no request is ever
+lost or stuck.
+
+Fault vocabulary (all host-side — the jit'd step is never retraced):
+
+  * ``preempt``   — force-evict a running slot (preemption-and-restore:
+                    the request requeues with its accumulated tokens and
+                    resumes bit-exactly);
+  * ``nan``       — taint one slot's logits with NaN for one step (the
+                    guard must fail ONLY that slot);
+  * ``kill``      — slot death mid-decode (``fail_slot``: pages
+                    reclaimed, request -> FAILED, neighbours unharmed);
+  * ``spike``     — pool-pressure spike: a burst of high-priority
+                    requests slams the admission queue, forcing
+                    preemption of lower-priority work;
+  * ``bad_prompt``— malformed traffic (empty / oversized prompts) that
+                    must come back typed-FAILED, never crash the engine.
+
+The plan also mixes oversized-vs-pool prompts and zero-TTL requests so
+deadline and backpressure paths run under the same audit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import Counter
+
+import numpy as np
+
+from repro.serve.lifecycle import (AdmissionError, Request,
+                                   TERMINAL_STATES)
+from repro.serve.scheduler import Scheduler
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosConfig:
+    seed: int = 0
+    steps: int = 64              # fault-injection horizon (ticks)
+    max_ticks: int = 512         # hard cap: the run must DRAIN before it
+    requests: int = 8            # background workload size
+    max_prompt: int = 6
+    max_new_tokens: int = 8
+    p_preempt: float = 0.15
+    p_nan: float = 0.08
+    p_kill: float = 0.05
+    p_spike: float = 0.08
+    p_bad_prompt: float = 0.08
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    tick: int
+    kind: str                    # preempt | nan | kill | spike | bad_prompt
+    arg: int = 0                 # slot draw / burst size / prompt variant
+
+
+class FaultPlan:
+    """The full fault schedule, materialized from a seed up front."""
+
+    def __init__(self, cfg: ChaosConfig):
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed)
+        self.faults: list[Fault] = []
+        for t in range(cfg.steps):
+            r = rng.random()
+            if r < cfg.p_preempt:
+                self.faults.append(Fault(t, "preempt",
+                                         int(rng.integers(0, 1 << 16))))
+            elif r < cfg.p_preempt + cfg.p_nan:
+                self.faults.append(Fault(t, "nan",
+                                         int(rng.integers(0, 1 << 16))))
+            elif r < cfg.p_preempt + cfg.p_nan + cfg.p_kill:
+                self.faults.append(Fault(t, "kill",
+                                         int(rng.integers(0, 1 << 16))))
+            elif r < cfg.p_preempt + cfg.p_nan + cfg.p_kill + cfg.p_spike:
+                self.faults.append(Fault(t, "spike",
+                                         int(rng.integers(1, 3))))
+            elif r < (cfg.p_preempt + cfg.p_nan + cfg.p_kill
+                      + cfg.p_spike + cfg.p_bad_prompt):
+                self.faults.append(Fault(t, "bad_prompt",
+                                         int(rng.integers(0, 2))))
+        # background workload: (arrival tick, prompt, gen budget)
+        self.workload: list[tuple[int, list[int], int]] = []
+        for i in range(cfg.requests):
+            plen = int(rng.integers(1, cfg.max_prompt + 1))
+            prompt = rng.integers(0, 97, plen).tolist()
+            gen = int(rng.integers(1, cfg.max_new_tokens + 1))
+            arrive = int(rng.integers(0, max(cfg.steps // 2, 1)))
+            self.workload.append((arrive, [int(t) for t in prompt], gen))
+        self.workload.sort(key=lambda w: w[0])
+
+    def at(self, tick: int) -> list[Fault]:
+        return [f for f in self.faults if f.tick == tick]
+
+
+@dataclasses.dataclass
+class ChaosReport:
+    submitted: list[Request]
+    ticks: int
+    states: dict[str, int]
+    preemptions: int
+    nan_failures: int
+    invariant_checks: int
+    backpressured: int
+
+    @property
+    def all_terminal(self) -> bool:
+        return all(r.state in TERMINAL_STATES for r in self.submitted)
+
+
+def _running_slots(sched: Scheduler) -> list[int]:
+    return [s for s in range(sched.slots)
+            if sched.active[s] and sched._slot_req[s] is not None]
+
+
+def run_plan(sched: Scheduler, plan: FaultPlan) -> ChaosReport:
+    """Drive the scheduler through the plan's workload + faults until it
+    drains (or the tick cap trips — which the caller should treat as a
+    liveness failure).  Invariants are audited EVERY tick regardless of
+    the scheduler's ``debug_invariants`` flag."""
+    cfg = plan.cfg
+    submitted: list[Request] = []
+    pending = list(plan.workload)
+    backpressured = 0
+    tick = 0
+    while tick < cfg.max_ticks:
+        # scheduled arrivals (backpressure requeues for the next tick —
+        # the client-side retry loop, without wall-clock sleeps)
+        while pending and pending[0][0] <= tick:
+            arrive, prompt, gen = pending[0]
+            try:
+                submitted.append(
+                    sched.submit(prompt, max_new_tokens=gen))
+                pending.pop(0)
+            except AdmissionError:
+                backpressured += 1
+                pending[0] = (tick + 1, prompt, gen)
+                break
+        for fault in plan.at(tick):
+            running = _running_slots(sched)
+            if fault.kind == "preempt" and running:
+                sched.preempt(running[fault.arg % len(running)])
+            elif fault.kind == "nan" and running:
+                taint = np.zeros(sched.slots, bool)
+                taint[running[fault.arg % len(running)]] = True
+                sched._taint = taint
+            elif fault.kind == "kill" and running:
+                sched.fail_slot(running[fault.arg % len(running)],
+                                "chaos: slot death mid-decode")
+            elif fault.kind == "spike":
+                for b in range(fault.arg):
+                    try:
+                        submitted.append(sched.submit(
+                            [1 + b, 2, 3], max_new_tokens=2,
+                            priority=10))
+                    except AdmissionError:
+                        backpressured += 1
+            elif fault.kind == "bad_prompt":
+                bad = [] if fault.arg == 0 else \
+                    [0] * (sched.max_len + 1)
+                submitted.append(sched.submit(bad, max_new_tokens=2))
+        sched.tick()
+        sched.cache.check_invariants()      # ALWAYS on under chaos
+        tick += 1
+        if not pending and tick > cfg.steps and sched.drained():
+            break
+    return ChaosReport(
+        submitted=submitted, ticks=tick,
+        states=dict(Counter(r.state.value for r in submitted)),
+        preemptions=sched.preemptions,
+        nan_failures=sched.nan_failures,
+        invariant_checks=sched.cache.invariant_checks,
+        backpressured=backpressured)

@@ -190,15 +190,18 @@ class BatchedServer:
                  ctx: ShardCtx | None = None, cache_dtype=jnp.float32,
                  fuse_step: bool = True, page_size: int | None = None,
                  num_pages: int | None = None, temperature: float = 0.0,
-                 top_k: int | None = None, seed: int = 0):
+                 top_k: int | None = None, seed: int = 0, **lifecycle_kw):
         from repro.serve.scheduler import Scheduler
         self.cfg, self.params = cfg, params
         self.slots, self.max_len, self.ctx = slots, max_len, ctx
+        # lifecycle_kw passes the hardened-runtime knobs through
+        # unchanged (queue_depth / preemption / guard_nan / watchdog /
+        # debug_invariants / clock — see serve/scheduler.py)
         self.scheduler = Scheduler(
             cfg, params, slots=slots, max_len=max_len, page_size=page_size,
             num_pages=num_pages, cache_dtype=cache_dtype,
             fuse_step=fuse_step, temperature=temperature, top_k=top_k,
-            seed=seed)
+            seed=seed, **lifecycle_kw)
 
     @property
     def active(self) -> list:
@@ -224,6 +227,14 @@ class BatchedServer:
     def step(self) -> list[int]:
         """Advance every active slot one token."""
         return self.scheduler.step()
+
+    def submit(self, prompt, **kw):
+        """Queue a typed request (lifecycle surface — see Scheduler)."""
+        return self.scheduler.submit(prompt, **kw)
+
+    def tick(self):
+        """One lifecycle iteration: admit / step / retire."""
+        return self.scheduler.tick()
 
     def finish(self, slot: int) -> list[int]:
         """Release the slot (pages reclaimed, per-slot state cleared)."""

@@ -33,12 +33,26 @@ from repro.models import decode as dec
 from repro.models.transformer import ModelConfig
 
 
+class InvariantViolation(AssertionError):
+    """A structural page-pool invariant broke on a live engine (page
+    aliasing, free-stack corruption, pos/table divergence).  This is a
+    state-management bug, never load: admission pressure degrades
+    locally by design and must NOT trip this."""
+
+
 class PagedCache:
-    """Page pool + page-table state for a fixed-slot serving loop."""
+    """Page pool + page-table state for a fixed-slot serving loop.
+
+    ``debug_invariants=True`` audits the pool's structural invariants
+    (:func:`repro.models.decode.paged_invariants`) after every mutation
+    — one small device fetch per check, intended for debugging and the
+    chaos harness (serve/chaos.py), which forces it ON for every step;
+    the production fast path defaults to off and pays nothing."""
 
     def __init__(self, cfg: ModelConfig, slots: int, max_len: int,
                  page_size: int, *, cache_dtype=jnp.float32,
-                 num_pages: int | None = None):
+                 num_pages: int | None = None,
+                 debug_invariants: bool = False):
         self.cfg = cfg
         self.slots = slots
         self.max_len = max_len
@@ -59,6 +73,24 @@ class PagedCache:
         # true length rides in as a traced operand, so mixed-length
         # traffic costs at most pages_per_seq distinct traces
         self._insert = {}
+        self.debug_invariants = debug_invariants
+        self.invariant_checks = 0
+
+    # -- invariants ---------------------------------------------------------
+    def check_invariants(self) -> None:
+        """Audit page aliasing / free-stack conservation / pos-vs-table
+        occupancy on the LIVE device state (one small fetch — table,
+        free stack, positions; never the pool).  Raises
+        :class:`InvariantViolation` listing every violation found."""
+        self.invariant_checks += 1
+        bad = dec.paged_invariants(self.cfg, self.state)
+        if bad:
+            raise InvariantViolation(
+                "paged pool invariants violated:\n  " + "\n  ".join(bad))
+
+    def _maybe_check(self) -> None:
+        if self.debug_invariants:
+            self.check_invariants()
 
     # -- capacity -----------------------------------------------------------
     def pages_needed(self, length: int) -> int:
@@ -103,6 +135,7 @@ class PagedCache:
     # -- mutation (jit'd, slot-traced: no retrace per slot) -----------------
     def release(self, slot: int) -> None:
         self.state = self._release(self.state, jnp.int32(slot))
+        self._maybe_check()
 
     def insert_prefill(self, slot: int, cache_states, length: int,
                        state_len: int | None = None) -> None:
@@ -121,3 +154,4 @@ class PagedCache:
                 donate_argnums=0)
         self.state = fn(self.state, jnp.int32(slot), cache_states,
                         jnp.int32(length))
+        self._maybe_check()

@@ -11,6 +11,36 @@ RECLAMATION (``finish`` releases the slot's pages back to the device
 free stack and clears its per-slot state, so a reused slot can never
 attend to the previous occupant's cache).
 
+The hardened REQUEST LIFECYCLE (serve/lifecycle.py) layers on top:
+
+  * ``submit`` places typed :class:`~repro.serve.lifecycle.Request`
+    objects on a bounded admission queue (backpressure raises
+    ``AdmissionError`` with a retry-after hint instead of crashing);
+  * ``tick`` pumps the queue, steps the active set, and retires
+    finished / expired requests — every admitted request ends in a
+    terminal typed state;
+  * PREEMPTION-AND-RESTORE: under page pressure a victim slot (lowest
+    priority, then most pages held) is released and its request
+    requeued carrying the accumulated tokens.  Resume re-runs the
+    ORIGINAL prompt through the one jit'd prefill (bit-identical to
+    first admission — same ``state_len``, same computation) and then
+    REPLAYS the generated tokens through the ordinary jit'd decode step
+    (inputs come from the replay cursor, sampled outputs are
+    discarded), so post-catch-up decode is BIT-EXACT vs an
+    uninterrupted run for every stack — the replay is literally the
+    same computation the uninterrupted engine performed (prefill-based
+    fast restore would only be allclose: prefill KV != decode KV at the
+    ULP level).  Greedy decode preserves determinism across preemption;
+    temperature sampling consumes extra PRNG splits during replay.
+  * RUNTIME GUARDS (off by default — the steady-state fast path is one
+    fused step, zero retraces, zero extra device work): per-slot
+    NaN/Inf logit detection that fails ONLY the offending slot (pages
+    reclaimed, request -> FAILED; neighbours are bit-unaffected — rows
+    of the batched step are independent), a step wall-time watchdog
+    reusing ``ft/straggler`` deadline logic, and per-mutation pool
+    invariant auditing (``PagedCache.check_invariants``), always-on
+    under the chaos harness (serve/chaos.py).
+
 Everything device-side is jit'd ONCE: per-step membership changes ride
 in as array operands (token vector, active mask, page table), so steady
 state pays zero retraces and zero plan-cache misses
@@ -19,14 +49,18 @@ state pays zero retraces and zero plan-cache misses
 from __future__ import annotations
 
 import functools
-from typing import Sequence
+import time
+from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.ft.straggler import StepWatchdog
 from repro.models import decode as dec
 from repro.models.transformer import ModelConfig
+from repro.serve.lifecycle import (AdmissionError, AdmissionQueue, Request,
+                                   RequestState)
 from repro.serve.paged_cache import PagedCache
 
 
@@ -57,23 +91,50 @@ class Scheduler:
     ``prefill_pad`` pads prompts before prefill to bound jit retraces
     (defaults to the page size, so prompt caches always land on whole
     pages — a requirement of the paged insert).
+
+    Lifecycle knobs: ``queue_depth`` bounds the admission queue
+    (backpressure beyond it), ``preemption`` lets ``tick`` evict a
+    victim under page pressure instead of stalling admission,
+    ``guard_nan`` enables the per-slot NaN/Inf logit guard,
+    ``watchdog`` (a :class:`~repro.ft.straggler.StepWatchdog`) tracks
+    step wall-time deadline breaches, ``debug_invariants`` audits the
+    page pool after every mutation, and ``clock`` is the injectable
+    time source deadlines are measured against (chaos tests drive a
+    fake clock).
     """
 
     def __init__(self, cfg: ModelConfig, params, *, slots: int,
                  max_len: int, page_size: int | None = None,
                  num_pages: int | None = None, cache_dtype=jnp.float32,
                  fuse_step: bool = True, temperature: float = 0.0,
-                 top_k: int | None = None, seed: int = 0):
+                 top_k: int | None = None, seed: int = 0,
+                 queue_depth: int | None = None, preemption: bool = True,
+                 guard_nan: bool = False,
+                 watchdog: StepWatchdog | None = None,
+                 debug_invariants: bool = False,
+                 clock: Callable[[], float] = time.monotonic):
         if cfg.encoder is not None:
             raise NotImplementedError("paged serving covers decoder-only "
                                       "models")
+        # sampling knobs are validated HERE, not inside the jit'd sampler
+        # — a bad value must fail loudly at construction, not propagate
+        # silently through sample_tokens (top_k <= 0 made the top-k mask
+        # drop every logit; negative temperature inverted the
+        # distribution)
+        if temperature < 0.0:
+            raise ValueError(f"temperature must be >= 0 (0 = greedy), "
+                             f"got {temperature}")
+        if top_k is not None and top_k <= 0:
+            raise ValueError(f"top_k must be a positive int or None, "
+                             f"got {top_k}")
         from repro import vx
         self.cfg, self.params = cfg, params
         self.slots, self.max_len = slots, max_len
         page_size = min(page_size or 16, max_len)
         self.cache = PagedCache(cfg, slots, max_len, page_size,
                                 cache_dtype=cache_dtype,
-                                num_pages=num_pages)
+                                num_pages=num_pages,
+                                debug_invariants=debug_invariants)
         self.temperature, self.top_k = float(temperature), top_k
         vx.warm(2 * cfg.hd, strided=False, fields=(2,),
                 policy=cfg.vx_policy)
@@ -85,6 +146,11 @@ class Scheduler:
             donate_argnums=1)
         self._sample = jax.jit(functools.partial(
             sample_tokens, temperature=self.temperature, top_k=top_k))
+        # guard variant: sampling fused with the per-slot finite check so
+        # the guard costs one extra reduction, not a second step
+        self._sample_guarded = jax.jit(functools.partial(
+            self._sample_and_check, temperature=self.temperature,
+            top_k=top_k))
         self._split_keys = jax.jit(
             lambda ks: jnp.swapaxes(jax.vmap(
                 lambda k: jax.random.split(k, 2))(ks), 0, 1))
@@ -95,6 +161,34 @@ class Scheduler:
         self.active = [False] * slots
         self.tokens: list[list[int]] = [[] for _ in range(slots)]
         self.last_logits = None      # (slots, V) of the latest step
+        # -- lifecycle state ------------------------------------------------
+        self.clock = clock
+        self.preemption = preemption
+        self.guard_nan = guard_nan
+        self.watchdog = watchdog
+        self.queue = AdmissionQueue(
+            queue_depth if queue_depth is not None else 4 * slots,
+            retry_after_hint=lambda: self._step_ewma)
+        self.requests: dict[int, Request] = {}     # rid -> Request
+        self._slot_req: list[Request | None] = [None] * slots
+        # replay cursor: index into tokens[s] of the NEXT input token.
+        # Normal decode keeps it at len(tokens[s]) - 1; a resumed slot
+        # starts behind and catches up one token per step, discarding
+        # the (re-)sampled outputs until it does.
+        self._fed = [0] * slots
+        self._pos = [0] * slots      # host mirror of cache.state["pos"]
+        self._taint: np.ndarray | None = None   # chaos NaN-injection hook
+        self._newly_terminal: list[Request] = []   # failed outside tick
+        self._step_ewma = 0.0
+        self.nan_failures = 0
+        self.preemptions = 0
+
+    @staticmethod
+    def _sample_and_check(logits, keys, *, temperature, top_k):
+        lg32 = logits.astype(jnp.float32)
+        return (sample_tokens(logits, keys, temperature=temperature,
+                              top_k=top_k),
+                jnp.all(jnp.isfinite(lg32), axis=-1))
 
     # -- admission ----------------------------------------------------------
     def free_slot(self) -> int | None:
@@ -103,12 +197,23 @@ class Scheduler:
                 return s
         return None
 
+    def _reserved_pages(self) -> int:
+        """Pages live requests will need for their CURRENT tokens."""
+        return sum(self.cache.pages_needed(len(self.tokens[s]))
+                   for s in range(self.slots) if self.active[s])
+
+    def _pages_for(self, toks: Sequence[int]) -> int:
+        return self.cache.pages_needed(max(len(toks) - 1, 1)) + 1
+
     def add_request(self, prompt: int | Sequence[int]) -> int:
-        """Admit a request.  ``prompt`` is a full token list (or a single
-        int); all but the last token are prefilled into the slot's pages
-        through the jit'd prefill, and the last token is fed to the next
-        decode step (so ``tokens[slot]`` stays prompt + generated).
-        Raises RuntimeError when no slot or not enough free pages."""
+        """Admit a request immediately (the legacy surface).  ``prompt``
+        is a full token list (or a single int); all but the last token
+        are prefilled into the slot's pages through the jit'd prefill,
+        and the last token is fed to the next decode step (so
+        ``tokens[slot]`` stays prompt + generated).  Raises
+        :class:`AdmissionError` (a ``RuntimeError``) with a retry-after
+        hint when no slot or not enough free pages — use ``submit`` for
+        queued admission with backpressure and preemption."""
         toks = [int(prompt)] if isinstance(prompt, int) else \
             [int(t) for t in prompt]
         if not toks:
@@ -116,23 +221,294 @@ class Scheduler:
         if len(toks) > self.max_len:
             raise ValueError(f"prompt of {len(toks)} tokens exceeds "
                              f"max_len={self.max_len}")
+        req = Request(prompt=toks)
+        req.arrival_seq = next(self.queue._seq)
+        self.requests[req.rid] = req
+        try:
+            return self._admit_into(req)
+        except AdmissionError as e:
+            req.to(RequestState.FAILED, error=str(e))
+            raise
+
+    def _admit_into(self, req: Request) -> int:
+        """Place a QUEUED request into a free slot: prefill its ORIGINAL
+        prompt (identical to first admission — bit-exact restart state),
+        arm the replay cursor over any previously generated tokens, and
+        mark it RUNNING.  Raises AdmissionError when capacity is
+        missing; the caller (tick) may preempt and retry."""
+        toks = req.tokens
         slot = self.free_slot()
         if slot is None:
-            raise RuntimeError("no free slot")
+            raise AdmissionError("no free slot",
+                                 retry_after=self._step_ewma or 0.0)
         # pages are allocated lazily (prefill now, decode appends later):
         # admit against RESERVED pages — what live requests will need for
         # their current tokens — not just the instantaneous free count
-        reserved = sum(self.cache.pages_needed(len(self.tokens[s]))
-                       for s in range(self.slots) if self.active[s])
-        need = self.cache.pages_needed(max(len(toks) - 1, 1)) + 1
-        if self.cache.num_pages - reserved < need:
-            raise RuntimeError("page pool exhausted; finish a request or "
-                               "grow num_pages")
-        if len(toks) > 1:
-            self._prefill_into(slot, toks[:-1])
+        need = self._pages_for(toks)
+        if self.cache.num_pages - self._reserved_pages() < need:
+            raise AdmissionError(
+                "page pool exhausted; finish a request or grow num_pages",
+                retry_after=self._step_ewma or 0.0)
+        req.to(RequestState.PREFILLING)
+        try:
+            if len(req.prompt) > 1:
+                self._prefill_into(slot, req.prompt[:-1])
+        except Exception as e:       # noqa: BLE001 — typed terminal state
+            req.to(RequestState.FAILED, error=f"prefill: {e}")
+            raise
         self.active[slot] = True
         self.tokens[slot] = list(toks)
+        self._fed[slot] = len(req.prompt) - 1
+        self._pos[slot] = len(req.prompt) - 1
+        self._slot_req[slot] = req
+        req.slot = slot
+        req.to(RequestState.RUNNING)
         return slot
+
+    def submit(self, prompt: Sequence[int], *, max_new_tokens: int | None
+               = None, priority: int = 0, deadline: float | None = None,
+               ttl: float | None = None) -> Request:
+        """Queue a typed request for admission by ``tick``.
+
+        Malformed requests (empty / oversized prompt, non-positive
+        ``max_new_tokens``) come back already FAILED — a terminal typed
+        state, not an exception, so chaos traffic can always account
+        for them.  A full queue raises :class:`AdmissionError`
+        (backpressure; pair with
+        :func:`repro.serve.lifecycle.retry_with_backoff`)."""
+        if ttl is not None:
+            deadline = self.clock() + ttl if deadline is None else \
+                min(deadline, self.clock() + ttl)
+        req = Request(prompt=list(prompt), max_new_tokens=max_new_tokens,
+                      priority=priority, deadline=deadline)
+        self.requests[req.rid] = req
+        if not req.prompt:
+            req.to(RequestState.FAILED, error="empty prompt")
+            return req
+        if len(req.prompt) > self.max_len:
+            req.to(RequestState.FAILED,
+                   error=f"prompt of {len(req.prompt)} tokens exceeds "
+                         f"max_len={self.max_len}")
+            return req
+        if max_new_tokens is not None and max_new_tokens <= 0:
+            req.to(RequestState.FAILED,
+                   error=f"max_new_tokens must be positive, "
+                         f"got {max_new_tokens}")
+            return req
+        try:
+            self.queue.push(req)
+        except AdmissionError:
+            del self.requests[req.rid]       # never admitted: no zombie
+            raise
+        return req
+
+    # -- preemption ---------------------------------------------------------
+    def _victim(self, *, below_priority: int | None = None) -> int | None:
+        """Victim slot by policy: lowest priority first, then MOST pages
+        held (frees the most), then highest slot id (deterministic)."""
+        best = None
+        for s in range(self.slots):
+            req = self._slot_req[s]
+            if not self.active[s] or req is None:
+                continue
+            if below_priority is not None and \
+                    req.priority >= below_priority:
+                continue
+            key = (-req.priority,
+                   self.cache.pages_needed(max(len(self.tokens[s]), 1)),
+                   s)
+            if best is None or key > best[0]:
+                best = (key, s)
+        return best[1] if best else None
+
+    def preempt(self, slot: int) -> Request:
+        """Evict a running slot: release its pages back to the free
+        stack and requeue its request carrying prompt + generated so
+        far.  ``tick`` will resume it (prompt re-prefilled bit-exactly,
+        generated tokens replayed through the ordinary decode step)."""
+        req = self._slot_req[slot]
+        if req is None or not self.active[slot]:
+            raise ValueError(f"slot {slot} is not running a request")
+        req.tokens = list(self.tokens[slot])
+        req.to(RequestState.PREEMPTED)
+        req.slot = None
+        self._release_slot(slot)
+        self.preemptions += 1
+        self.queue.push(req, force=True)
+        return req
+
+    def fail_slot(self, slot: int, error: str) -> Request | None:
+        """Fail ONLY this slot (NaN guard, chaos slot-death): pages are
+        reclaimed, the request goes terminal, neighbours keep stepping
+        — the per-slot analogue of the pool's local degradation."""
+        req = self._slot_req[slot]
+        if req is not None and not req.terminal:
+            req.tokens = list(self.tokens[slot])
+            req.to(RequestState.FAILED, error=error)
+            self._newly_terminal.append(req)
+        self._release_slot(slot)
+        return req
+
+    def _release_slot(self, slot: int) -> None:
+        if self.active[slot]:
+            self.cache.release(slot)
+        self.active[slot] = False
+        self.tokens[slot] = []
+        self._fed[slot] = 0
+        self._pos[slot] = 0
+        self._slot_req[slot] = None
+
+    # -- decode -------------------------------------------------------------
+    def step(self) -> list[int]:
+        """Advance every ACTIVE slot one token; idle slots report -1.
+
+        Slots behind their replay cursor (resumed after preemption) feed
+        the next REPLAYED token and discard the sampled output until
+        they catch up — same jit'd step, zero retraces."""
+        t0 = time.perf_counter()
+        cur = jnp.asarray([self.tokens[s][self._fed[s]]
+                           if self.active[s] else 0
+                           for s in range(self.slots)], jnp.int32)
+        act = jnp.asarray(self.active)
+        logits, self.cache.state = self._step(self.params,
+                                              self.cache.state, cur, act)
+        if self._taint is not None:      # chaos-only NaN injection hook
+            mask = jnp.asarray(self._taint)[:, None]
+            logits = jnp.where(mask, jnp.float32(jnp.nan),
+                               logits.astype(jnp.float32)).astype(
+                                   logits.dtype)
+            self._taint = None
+        self.last_logits = logits
+        if self.temperature > 0.0:
+            self._keys, sub = self._split_keys(self._keys)
+        else:
+            sub = self._keys
+        if self.guard_nan:
+            nxt, fin = self._sample_guarded(logits, sub)
+            nxt, fin = np.asarray(nxt), np.asarray(fin)
+        else:
+            nxt = np.asarray(self._sample(logits, sub))
+            fin = None                 # ONE host sync for all slots
+        out = []
+        seq_cap = self.cache.pages_per_seq * self.cache.page_size
+        for s in range(self.slots):
+            t = int(nxt[s])
+            if not self.active[s]:
+                out.append(-1)
+                continue
+            if fin is not None and not fin[s]:
+                self.nan_failures += 1
+                self.fail_slot(s, "non-finite logits")
+                out.append(-1)
+                continue
+            if self._pos[s] < seq_cap:
+                self._pos[s] += 1
+            if self._fed[s] < len(self.tokens[s]) - 1:
+                self._fed[s] += 1      # replay: discard the sample
+            else:
+                self.tokens[s].append(t)
+                self._fed[s] += 1
+            out.append(t)
+        self.cache._maybe_check()
+        dt = time.perf_counter() - t0
+        self._step_ewma = dt if self._step_ewma == 0.0 else \
+            0.8 * self._step_ewma + 0.2 * dt
+        if self.watchdog is not None:
+            self.watchdog.observe(dt)
+        return out
+
+    # -- lifecycle pump ------------------------------------------------------
+    def tick(self) -> list[Request]:
+        """One engine iteration: expire stale queued work, pump
+        admission (preempting a lower-priority victim under page
+        pressure when ``preemption`` is on), step the active set, retire
+        finished / expired requests.  Returns requests that went
+        TERMINAL this tick."""
+        now = self.clock()
+        done: list[Request] = list(self.queue.expire(now))
+        # admission pump: highest priority first; under pressure, evict
+        # strictly-lower-priority victims (equal priority never preempts
+        # equal priority — no livelock)
+        while True:
+            req = self.queue.pop()
+            if req is None:
+                break
+            try:
+                self._admit_into(req)
+                continue
+            except AdmissionError:
+                if self.preemption:
+                    victim = self._victim(below_priority=req.priority)
+                    if victim is not None:
+                        self.preempt(victim)
+                        try:
+                            self._admit_into(req)
+                            continue
+                        except AdmissionError:
+                            pass       # still starved: requeue, stop
+                self.queue.push(req, force=True)   # retry next tick
+                break
+        # in-step page-pressure guard: if this step's page-boundary
+        # crossers outnumber the free stack, the device allocator would
+        # degrade locally (starved appends drop).  Preempt victims to
+        # keep every surviving slot's stream intact instead.
+        if self.preemption and any(self.active):
+            ps = self.cache.page_size
+            n_seq = self.cache.pages_per_seq
+            crossers = [s for s in range(self.slots) if self.active[s]
+                        and self._pos[s] % ps == 0
+                        and self._pos[s] // ps < n_seq]
+            for _ in range(self.slots):
+                live = [s for s in crossers if self.active[s]]
+                if len(live) <= self.cache.free_pages():
+                    break
+                victim = self._victim()
+                if victim is None or (victim in live and len(live) == 1):
+                    break              # nothing to gain: degrade locally
+                self.preempt(victim)
+        if any(self.active):
+            self.step()
+        # retire: generation budget reached, or running past deadline
+        for s in range(self.slots):
+            req = self._slot_req[s]
+            if req is None or not self.active[s]:
+                continue
+            caught_up = self._fed[s] >= len(self.tokens[s]) - 1
+            if req.max_new_tokens is not None and caught_up and \
+                    len(self.tokens[s]) - len(req.prompt) >= \
+                    req.max_new_tokens:
+                req.tokens = list(self.tokens[s])
+                req.to(RequestState.FINISHED)
+                self._release_slot(s)
+                done.append(req)
+            elif req.expired(self.clock()):
+                req.tokens = list(self.tokens[s])
+                req.to(RequestState.TIMED_OUT,
+                       error="deadline expired while running")
+                self._release_slot(s)
+                done.append(req)
+        # requests failed mid-step (NaN guard, chaos slot death)
+        done.extend(self._newly_terminal)
+        self._newly_terminal.clear()
+        return done
+
+    def drained(self) -> bool:
+        """True when nothing is queued or running."""
+        return not any(self.active) and len(self.queue) == 0
+
+    def stats(self) -> dict:
+        from repro.serve.lifecycle import summarize
+        out = summarize(list(self.requests.values()))
+        out.update(queue_depth=len(self.queue),
+                   queue_rejected=self.queue.rejected,
+                   pages_in_use=self.cache.pages_in_use(),
+                   free_pages=self.cache.free_pages(),
+                   nan_failures=self.nan_failures,
+                   invariant_checks=self.cache.invariant_checks,
+                   step_ewma_s=self._step_ewma)
+        if self.watchdog is not None:
+            out["watchdog_breaches"] = self.watchdog.breaches
+        return out
 
     def _prefill_into(self, slot: int, toks: list[int]) -> None:
         # The ONE jit'd prefill (engine.jit_prefill, mesh-less ctx).
@@ -157,37 +533,18 @@ class Scheduler:
         self.cache.insert_prefill(slot, states, len(toks),
                                   state_len=state_len)
 
-    # -- decode -------------------------------------------------------------
-    def step(self) -> list[int]:
-        """Advance every ACTIVE slot one token; idle slots report -1."""
-        cur = jnp.asarray([self.tokens[s][-1] if self.active[s] else 0
-                           for s in range(self.slots)], jnp.int32)
-        act = jnp.asarray(self.active)
-        logits, self.cache.state = self._step(self.params,
-                                              self.cache.state, cur, act)
-        self.last_logits = logits
-        if self.temperature > 0.0:
-            self._keys, sub = self._split_keys(self._keys)
-            nxt = self._sample(logits, sub)
-        else:
-            nxt = self._sample(logits, self._keys)
-        nxt = np.asarray(nxt)          # ONE host sync for all slots
-        out = []
-        for s in range(self.slots):
-            t = int(nxt[s])
-            if self.active[s]:
-                self.tokens[s].append(t)
-                out.append(t)
-            else:
-                out.append(-1)
-        return out
-
     # -- reclamation --------------------------------------------------------
     def finish(self, slot: int) -> list[int]:
         """Release the slot: pages back on the free stack, per-slot state
-        cleared (position, page-table row, recurrent state)."""
+        cleared (position, page-table row, recurrent state, token list).
+        Finishing an already-idle slot is explicit: returns ``[]`` —
+        never the previous occupant's stale tokens."""
+        if not self.active[slot]:
+            return []
         toks = self.tokens[slot]
-        if self.active[slot]:
-            self.cache.release(slot)
-            self.active[slot] = False
+        req = self._slot_req[slot]
+        if req is not None and not req.terminal:
+            req.tokens = list(toks)
+            req.to(RequestState.FINISHED)
+        self._release_slot(slot)
         return toks

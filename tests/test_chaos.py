@@ -1,0 +1,250 @@
+"""Chaos harness property suite: under seeded fault plans with pool
+invariant auditing ALWAYS on, every admitted request reaches a terminal
+typed state, the page pool never corrupts, preempt->requeue->resume is
+bit-exact vs an uninterrupted oracle for pad-safe stacks (allclose for
+windowed / recurrent), and the NaN guard fails only the offending slot."""
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.ft.straggler import StepWatchdog
+from repro.models.transformer import init_params
+from repro.serve.chaos import ChaosConfig, FaultPlan, run_plan
+from repro.serve.lifecycle import TERMINAL_STATES, RequestState
+from repro.serve.scheduler import Scheduler
+
+SEEDS = (0, 1, 2)
+
+
+@functools.lru_cache(maxsize=None)
+def _cfg_params(arch="qwen3-0.6b"):
+    cfg = get_arch(arch).smoke
+    return cfg, init_params(cfg, jax.random.key(0))
+
+
+def _chaos_sched(clock, **kw):
+    cfg, params = _cfg_params()
+    kw.setdefault("queue_depth", 3)     # tight: backpressure gets exercised
+    return Scheduler(cfg, params, slots=2, max_len=16, page_size=4,
+                     num_pages=6, guard_nan=True,
+                     watchdog=StepWatchdog(), clock=clock, **kw)
+
+
+class _StepClock:
+    """Deterministic clock: each call advances a fixed quantum, so
+    deadline logic runs without wall time."""
+
+    def __init__(self, dt=0.01):
+        self.t, self.dt = 0.0, dt
+
+    def __call__(self):
+        self.t += self.dt
+        return self.t
+
+
+# --------------------------- plan determinism -------------------------------
+
+def test_fault_plan_is_deterministic():
+    a = FaultPlan(ChaosConfig(seed=3))
+    b = FaultPlan(ChaosConfig(seed=3))
+    assert a.faults == b.faults
+    assert a.workload == b.workload
+    c = FaultPlan(ChaosConfig(seed=4))
+    assert a.faults != c.faults or a.workload != c.workload
+
+
+def test_fault_plan_covers_the_vocabulary():
+    kinds = set()
+    for seed in range(8):
+        kinds |= {f.kind for f in FaultPlan(ChaosConfig(seed=seed)).faults}
+    assert kinds == {"preempt", "nan", "kill", "spike", "bad_prompt"}
+
+
+# --------------------------- the property suite -----------------------------
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_chaos_every_request_terminates_and_invariants_hold(seed):
+    sched = _chaos_sched(_StepClock())
+    plan = FaultPlan(ChaosConfig(seed=seed, requests=6, steps=32,
+                                 max_ticks=256))
+    report = run_plan(sched, plan)
+    # liveness: the engine drained before the tick cap
+    assert report.ticks < plan.cfg.max_ticks
+    assert sched.drained()
+    # every submitted request reached a terminal typed state
+    assert report.all_terminal, report.states
+    assert sum(report.states.values()) == len(report.submitted)
+    for r in report.submitted:
+        assert r.state in TERMINAL_STATES
+        assert r.state is not RequestState.FAILED or r.error
+    # invariants audited EVERY tick and never tripped (run_plan raises
+    # InvariantViolation otherwise — reaching here is the assertion)
+    assert report.invariant_checks >= report.ticks
+
+
+def test_chaos_exercises_faults_and_backpressure():
+    """The seeded plans must actually hit the interesting paths —
+    a chaos suite that never preempts or never injects NaN is vacuous."""
+    preempts = nans = backpressured = 0
+    for seed in SEEDS:
+        sched = _chaos_sched(_StepClock())
+        plan = FaultPlan(ChaosConfig(seed=seed, requests=6, steps=32,
+                                     max_ticks=256))
+        rep = run_plan(sched, plan)
+        preempts += rep.preemptions
+        nans += rep.nan_failures
+        backpressured += rep.backpressured
+    assert preempts > 0
+    assert nans > 0
+    assert backpressured > 0
+
+
+def test_chaos_is_reproducible():
+    """Same seed, fresh schedulers: identical terminal states and token
+    streams (greedy decode + materialized fault plan = full replay)."""
+    outs = []
+    for _ in range(2):
+        sched = _chaos_sched(_StepClock())
+        rep = run_plan(sched, FaultPlan(ChaosConfig(seed=1, requests=5,
+                                                    steps=24,
+                                                    max_ticks=256)))
+        outs.append([(r.state.value, tuple(r.tokens))
+                     for r in rep.submitted])
+    assert outs[0] == outs[1]
+
+
+# --------------------------- preempt/resume oracle --------------------------
+
+def _drive(sched, req, *, preempt_at=None, cap=64):
+    """Tick until the request terminates; optionally preempt it once
+    after ``preempt_at`` ticks.  Records the slot's logits row keyed by
+    the replay cursor (the position whose logits these are), so two runs
+    can be compared position-by-position."""
+    logits_by_pos = {}
+    for t in range(cap):
+        if req.terminal:
+            break
+        if preempt_at is not None and t == preempt_at and \
+                req.state is RequestState.RUNNING:
+            sched.preempt(req.slot)
+        sched.tick()
+        if req.slot is not None and sched.active[req.slot] and \
+                sched.last_logits is not None:
+            pos = sched._fed[req.slot]
+            logits_by_pos[pos] = np.asarray(
+                sched.last_logits[req.slot], np.float32)
+    return logits_by_pos
+
+
+def _resume_oracle(arch, *, comparer):
+    cfg, params = _cfg_params(arch)
+    prompt, gen = [3, 5, 7, 9, 2], 8
+
+    def mk():
+        return Scheduler(cfg, params, slots=2, max_len=32, page_size=4)
+
+    a = mk()
+    ra = a.submit(prompt, max_new_tokens=gen)
+    la = _drive(a, ra)
+    assert ra.state is RequestState.FINISHED
+
+    b = mk()
+    rb = b.submit(prompt, max_new_tokens=gen)
+    lb = _drive(b, rb, preempt_at=3)
+    assert rb.state is RequestState.FINISHED
+    assert rb.preemptions == 1
+
+    # the full stream — prompt AND generated — survives the preemption
+    assert rb.tokens == ra.tokens
+    shared = sorted(set(la) & set(lb))
+    assert len(shared) >= gen - 1          # replay re-visits the positions
+    for pos in shared:
+        comparer(la[pos], lb[pos], pos)
+
+
+def test_preempt_resume_bit_exact_pad_safe():
+    """Pad-safe stack (windowless attention-only): resume decode must be
+    BIT-EXACT vs the uninterrupted oracle — re-prefilling the original
+    prompt and replaying generated tokens through the ordinary decode
+    step is literally the same computation the oracle performed."""
+    def bit_exact(x, y, pos):
+        assert np.array_equal(x, y), \
+            f"pos {pos}: maxdiff {np.abs(x - y).max()}"
+    _resume_oracle("qwen3-0.6b", comparer=bit_exact)
+
+
+def test_preempt_resume_allclose_windowed():
+    """Windowed stack (gemma3 smoke, ring-window layers): the acceptance
+    bar is allclose — prefill runs at TRUE length so resume state can
+    differ at the ULP level from the padded pad-safe path."""
+    def close(x, y, pos):
+        np.testing.assert_allclose(x, y, rtol=2e-4, atol=2e-5,
+                                   err_msg=f"pos {pos}")
+    _resume_oracle("gemma3-12b", comparer=close)
+
+
+def test_preempt_resume_allclose_recurrent():
+    """Recurrent stack (xlstm smoke): no page pool to restore — resume
+    rebuilds the state by re-prefill + replay; allclose is the bar."""
+    def close(x, y, pos):
+        np.testing.assert_allclose(x, y, rtol=2e-4, atol=2e-5,
+                                   err_msg=f"pos {pos}")
+    _resume_oracle("xlstm-125m", comparer=close)
+
+
+# --------------------------- NaN guard isolation ----------------------------
+
+def test_nan_guard_fails_only_offending_slot():
+    cfg, params = _cfg_params()
+
+    def mk():
+        return Scheduler(cfg, params, slots=2, max_len=16, page_size=4,
+                         guard_nan=True)
+
+    # solo oracle: the neighbour's stream with NO chaos anywhere
+    solo = mk()
+    r_solo = solo.submit([11, 13], max_new_tokens=6)
+    while not r_solo.terminal:
+        solo.tick()
+
+    chaotic = mk()
+    victim = chaotic.submit([2, 4, 6], max_new_tokens=6)
+    neighbour = chaotic.submit([11, 13], max_new_tokens=6)
+    chaotic.tick()                        # both admitted + first step
+    taint = np.zeros(2, bool)
+    taint[victim.slot] = True
+    chaotic._taint = taint                # NaN logits for victim, once
+    while not (victim.terminal and neighbour.terminal):
+        chaotic.tick()
+    assert victim.state is RequestState.FAILED
+    assert "non-finite" in victim.error
+    assert chaotic.nan_failures == 1
+    # neighbour unharmed: FINISHED with the bit-identical stream
+    assert neighbour.state is RequestState.FINISHED
+    assert neighbour.tokens == r_solo.tokens
+    # victim's pages reclaimed
+    assert chaotic.cache.pages_in_use() == \
+        chaotic.cache.pages_needed(len(neighbour.tokens)) or \
+        chaotic.cache.pages_in_use() == 0
+
+
+# --------------------------- fast path untouched ----------------------------
+
+def test_no_fault_clean_run_single_trace():
+    """Lifecycle machinery on (queue, deadlines available, watchdog) but
+    no fault fired: the jit'd step must compile exactly once across the
+    whole run — the hardened runtime must not touch the steady-state
+    fast path."""
+    cfg, params = _cfg_params()
+    sched = Scheduler(cfg, params, slots=2, max_len=16, page_size=4,
+                      watchdog=StepWatchdog())
+    r1 = sched.submit([3, 5, 7], max_new_tokens=8)
+    r2 = sched.submit([2], max_new_tokens=8)
+    while not (r1.terminal and r2.terminal):
+        sched.tick()
+    assert sched._step._cache_size() == 1
+    assert r1.state is RequestState.FINISHED
+    assert r2.state is RequestState.FINISHED

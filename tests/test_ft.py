@@ -98,3 +98,37 @@ def test_missing_report_treated_as_slow():
     for _ in range(4):
         pol.record_step({0: 1.0, 1: 1.0, 2: 1.0})  # host 3 never reports
     assert 3 in pol.excluded()
+
+
+def test_crash_mid_save_previous_checkpoint_restores(tmp_path, monkeypatch):
+    """Kill between the tmp write and the rename: the tmp dir is left
+    behind, the previous checkpoint stays the latest, and restore reads
+    it cleanly — a crash mid-save never corrupts the newest step."""
+    import repro.ft.checkpoint as ckpt_mod
+
+    mgr = CheckpointManager(str(tmp_path))
+    tree = _tree()
+    mgr.save(1, tree, extra={"mark": "good"}, blocking=True)
+
+    def crash(src, dst):
+        raise OSError("simulated kill before rename")
+
+    monkeypatch.setattr(ckpt_mod.os, "rename", crash)
+    newer = jax.tree.map(lambda a: a + 1.0, tree)
+    mgr.save(2, newer, blocking=True)     # dies after tmp write
+    monkeypatch.undo()
+
+    # the crash artifact exists, but is never visible as a step
+    assert os.path.isdir(os.path.join(str(tmp_path), "step_00000002.tmp0"))
+    assert mgr.all_steps() == [1]
+    restored, extra = mgr.restore(jax.tree.map(jnp.zeros_like, tree))
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b)), tree, restored)
+    assert extra["mark"] == "good"
+
+    # a retried save of the same step succeeds over the stale tmp dir
+    mgr.save(2, newer, blocking=True)
+    assert mgr.latest_step() == 2
+    restored2, _ = mgr.restore(jax.tree.map(jnp.zeros_like, tree))
+    np.testing.assert_allclose(np.asarray(restored2["params"]["w"]),
+                               np.asarray(newer["params"]["w"]))

@@ -1,0 +1,351 @@
+"""Request lifecycle: state machine, bounded admission queue with
+backpressure, backoff policy, step watchdog, pool invariant auditing,
+and the scheduler's preemption-and-restore surface."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.ft.straggler import StepWatchdog, StragglerConfig
+from repro.models.transformer import init_params
+from repro.serve.lifecycle import (AdmissionError, AdmissionQueue,
+                                   LifecycleError, Request, RequestState,
+                                   backoff_delays, retry_with_backoff,
+                                   summarize)
+from repro.serve.paged_cache import InvariantViolation
+from repro.serve.scheduler import Scheduler
+
+
+@functools.lru_cache(maxsize=None)
+def _cfg_params():
+    cfg = get_arch("qwen3-0.6b").smoke
+    return cfg, init_params(cfg, jax.random.key(0))
+
+
+def _sched(slots=2, max_len=16, **kw):
+    cfg, params = _cfg_params()
+    kw.setdefault("page_size", 4)
+    return Scheduler(cfg, params, slots=slots, max_len=max_len, **kw)
+
+
+# --------------------------- state machine ----------------------------------
+
+def test_request_state_machine_legal_path():
+    r = Request(prompt=[1, 2, 3], max_new_tokens=4)
+    assert r.state is RequestState.QUEUED
+    r.to(RequestState.PREFILLING)
+    r.to(RequestState.RUNNING)
+    r.to(RequestState.PREEMPTED)
+    assert r.preemptions == 1
+    r.to(RequestState.QUEUED)
+    r.to(RequestState.PREFILLING)
+    r.to(RequestState.RUNNING)
+    r.to(RequestState.FINISHED)
+    assert r.terminal
+
+
+def test_request_state_machine_rejects_illegal_edges():
+    r = Request(prompt=[1])
+    with pytest.raises(LifecycleError, match="illegal transition"):
+        r.to(RequestState.RUNNING)          # must prefill first
+    r.to(RequestState.PREFILLING)
+    r.to(RequestState.RUNNING)
+    r.to(RequestState.FINISHED)
+    for s in RequestState:                  # terminal states are absorbing
+        with pytest.raises(LifecycleError):
+            r.to(s)
+
+
+def test_request_generated_and_expiry():
+    r = Request(prompt=[1, 2], deadline=5.0)
+    assert r.generated == 0
+    r.tokens += [7, 8, 9]
+    assert r.generated == 3
+    assert not r.expired(4.9) and r.expired(5.0)
+
+
+# --------------------------- admission queue --------------------------------
+
+def test_queue_priority_then_fifo_order():
+    q = AdmissionQueue(8)
+    lo1 = Request(prompt=[1], priority=0)
+    hi = Request(prompt=[2], priority=5)
+    lo2 = Request(prompt=[3], priority=0)
+    for r in (lo1, hi, lo2):
+        q.push(r)
+    assert q.pop() is hi
+    assert q.pop() is lo1                   # FIFO within a priority
+    assert q.pop() is lo2
+    assert q.pop() is None
+
+
+def test_queue_backpressure_is_typed_with_retry_after():
+    q = AdmissionQueue(2, retry_after_hint=lambda: 0.5)
+    q.push(Request(prompt=[1]))
+    q.push(Request(prompt=[2]))
+    with pytest.raises(AdmissionError) as ei:
+        q.push(Request(prompt=[3]))
+    assert ei.value.retry_after == pytest.approx(0.5 * 3)
+    assert q.rejected == 1
+    # forced push (preemption requeue) bypasses the bound
+    q.push(Request(prompt=[4]), force=True)
+    assert len(q) == 3
+
+
+def test_queue_preempted_requeue_keeps_arrival_order():
+    q = AdmissionQueue(8)
+    a = Request(prompt=[1])
+    b = Request(prompt=[2])
+    q.push(a), q.push(b)
+    got = q.pop()
+    assert got is a
+    got.to(RequestState.PREFILLING)
+    got.to(RequestState.RUNNING)
+    got.to(RequestState.PREEMPTED)
+    q.push(got, force=True)                 # resumes AHEAD of b
+    assert q.pop() is a
+
+
+def test_queue_expire_times_out_stale_requests():
+    q = AdmissionQueue(8)
+    fresh = Request(prompt=[1], deadline=10.0)
+    stale = Request(prompt=[2], deadline=1.0)
+    q.push(fresh), q.push(stale)
+    dead = q.expire(now=5.0)
+    assert dead == [stale] and stale.state is RequestState.TIMED_OUT
+    assert len(q) == 1
+
+
+# --------------------------- backoff policy ---------------------------------
+
+def test_backoff_deterministic_and_bounded():
+    d1 = backoff_delays(6, base=0.05, cap=0.4, seed=7)
+    d2 = backoff_delays(6, base=0.05, cap=0.4, seed=7)
+    assert d1 == d2                         # seeded: replays exactly
+    assert d1 != backoff_delays(6, base=0.05, cap=0.4, seed=8)
+    assert all(d <= 0.4 for d in d1)        # capped
+    assert all(d > 0 for d in d1)
+
+
+def test_retry_with_backoff_honours_retry_after_and_gives_up():
+    slept = []
+    calls = []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise AdmissionError("full", retry_after=0.75)
+        return "ok"
+
+    out = retry_with_backoff(flaky, retries=5, base=0.01, seed=0,
+                             sleep=slept.append)
+    assert out == "ok" and len(calls) == 3
+    assert all(s >= 0.75 for s in slept)    # server hint is a floor
+
+    def always():
+        raise AdmissionError("full")
+
+    with pytest.raises(AdmissionError):
+        retry_with_backoff(always, retries=2, base=1e-6,
+                           sleep=slept.append)
+
+
+# --------------------------- step watchdog ----------------------------------
+
+def test_watchdog_flags_deadline_breach_after_history():
+    wd = StepWatchdog(StragglerConfig(window=8, factor=2.0, min_history=3))
+    assert wd.observe(10.0) is False        # no history yet: no judgement
+    for _ in range(3):
+        assert wd.observe(1.0) is False
+    assert wd.deadline() == pytest.approx(2.0 * wd.median())
+    assert wd.observe(50.0) is True
+    assert wd.breaches == 1 and wd.last_breach == 50.0
+    # the breach is excluded from history — the stall cannot mask itself
+    assert wd.median() <= 10.0
+
+
+def test_watchdog_hard_limit():
+    wd = StepWatchdog(hard_limit=0.5)
+    assert wd.observe(0.4) is False
+    assert wd.observe(0.6) is True
+    assert wd.breaches == 1
+
+
+# --------------------------- invariant auditing -----------------------------
+
+def test_check_invariants_clean_engine():
+    sched = _sched(slots=2, debug_invariants=True)
+    sched.add_request([3, 5, 7])
+    for _ in range(4):
+        sched.step()
+    sched.cache.check_invariants()          # never trips on a live engine
+    sched.finish(0)
+    sched.cache.check_invariants()
+    assert sched.cache.invariant_checks > 4
+
+
+def test_check_invariants_catches_page_aliasing():
+    sched = _sched(slots=2)
+    sched.add_request(3)
+    sched.add_request(5)
+    sched.step()
+    st = dict(sched.cache.state)
+    tbl = np.asarray(st["table"]).copy()
+    owned = tbl[tbl >= 0]
+    tbl[1, 0] = owned[0]                    # alias slot 0's page into slot 1
+    st["table"] = jnp.asarray(tbl)
+    sched.cache.state = st
+    with pytest.raises(InvariantViolation, match="aliased"):
+        sched.cache.check_invariants()
+
+
+def test_check_invariants_catches_free_stack_corruption():
+    sched = _sched(slots=2)
+    sched.add_request(3)
+    sched.step()
+    st = dict(sched.cache.state)
+    free = np.asarray(st["free"]).copy()
+    tbl = np.asarray(st["table"])
+    owned = int(tbl[tbl >= 0][0])
+    free[int(st["free_top"]) - 1] = owned   # allocated page also "free"
+    st["free"] = jnp.asarray(free)
+    sched.cache.state = st
+    with pytest.raises(InvariantViolation, match="both allocated and free"):
+        sched.cache.check_invariants()
+
+
+def test_check_invariants_catches_pos_table_divergence():
+    sched = _sched(slots=2)
+    sched.add_request(3)
+    sched.step()
+    st = dict(sched.cache.state)
+    st["pos"] = jnp.zeros_like(st["pos"])   # pages owned beyond pos extent
+    sched.cache.state = st
+    with pytest.raises(InvariantViolation, match="pos"):
+        sched.cache.check_invariants()
+
+
+# --------------------------- lifecycle over the engine ----------------------
+
+def test_submit_tick_finishes_at_max_new_tokens():
+    sched = _sched(slots=2)
+    r = sched.submit([3, 5, 7], max_new_tokens=4)
+    ticks = 0
+    while not r.terminal and ticks < 20:
+        sched.tick()
+        ticks += 1
+    assert r.state is RequestState.FINISHED
+    assert r.generated == 4
+    assert r.tokens[:3] == [3, 5, 7]
+    assert sched.drained()
+
+
+def test_submit_malformed_prompts_fail_typed():
+    sched = _sched()
+    empty = sched.submit([], max_new_tokens=2)
+    assert empty.state is RequestState.FAILED and "empty" in empty.error
+    big = sched.submit([0] * 99, max_new_tokens=2)
+    assert big.state is RequestState.FAILED and "exceeds" in big.error
+    bad_budget = sched.submit([1], max_new_tokens=0)
+    assert bad_budget.state is RequestState.FAILED
+
+
+def test_deadline_times_out_queued_and_running(monkeypatch):
+    now = [0.0]
+    sched = _sched(slots=1, clock=lambda: now[0])
+    running = sched.submit([3, 5], max_new_tokens=50, deadline=3.0)
+    queued = sched.submit([7], max_new_tokens=2, deadline=2.0)
+    sched.tick()                            # admits `running`; queued waits
+    assert running.state is RequestState.RUNNING
+    now[0] = 2.5                            # queued's deadline passes
+    sched.tick()
+    assert queued.state is RequestState.TIMED_OUT
+    now[0] = 3.5                            # running's deadline passes
+    sched.tick()
+    assert running.state is RequestState.TIMED_OUT
+    assert running.generated > 0            # partial work is returned
+    assert sched.drained()
+
+
+def test_admission_error_carries_retry_after():
+    sched = _sched(slots=1)
+    sched.add_request(3)
+    sched.step()                            # establishes a step-time EWMA
+    with pytest.raises(AdmissionError, match="no free slot") as ei:
+        sched.add_request(5)
+    assert ei.value.retry_after >= 0.0
+    # pool exhaustion is the same typed error (and a RuntimeError, so
+    # pre-lifecycle callers still catch it)
+    assert issubclass(AdmissionError, RuntimeError)
+
+
+def test_preemption_victim_policy_priority_then_pages():
+    sched = _sched(slots=3, max_len=16)
+    lo_small = sched.submit([1], max_new_tokens=50, priority=0)
+    lo_big = sched.submit([2, 3, 4, 5, 6, 7, 8, 9], max_new_tokens=50,
+                          priority=0)
+    hi = sched.submit([9, 8], max_new_tokens=50, priority=5)
+    sched.tick()
+    assert all(r.state is RequestState.RUNNING
+               for r in (lo_small, lo_big, hi))
+    # lowest priority first, most pages held breaks the tie
+    victim = sched._victim()
+    assert sched._slot_req[victim] is lo_big
+    # a priority-floor excludes the high-priority slot entirely
+    floor_victim = sched._victim(below_priority=1)
+    assert sched._slot_req[floor_victim] is not hi
+
+
+def test_preempt_requeues_with_accumulated_tokens():
+    sched = _sched(slots=1)
+    r = sched.submit([3, 5, 7], max_new_tokens=30)
+    sched.tick()
+    sched.tick()
+    had = list(r.tokens) if r.tokens else None
+    got = sched.preempt(0)
+    assert got is r
+    assert r.state is RequestState.QUEUED and r.preemptions == 1
+    assert len(r.tokens) > len(r.prompt)    # generated work preserved
+    assert not sched.active[0]
+    assert sched.cache.pages_in_use() == 0  # pages reclaimed
+    sched.tick()                            # resumes
+    assert r.state is RequestState.RUNNING
+    del had
+
+
+def test_double_finish_returns_empty_and_clears_tokens():
+    """Satellite regression: finish on an already-idle slot must NOT
+    return the previous occupant's stale tokens."""
+    sched = _sched(slots=1)
+    sched.add_request(42)
+    sched.step()
+    first = sched.finish(0)
+    assert len(first) == 2
+    assert sched.finish(0) == []            # explicit double-finish
+    assert sched.tokens[0] == []            # token list cleared on release
+
+
+def test_sampling_knob_validation_at_construction():
+    """Satellite: top_k <= 0 / negative temperature must fail loudly at
+    construction, not silently corrupt sample_tokens."""
+    with pytest.raises(ValueError, match="top_k"):
+        _sched(top_k=0)
+    with pytest.raises(ValueError, match="top_k"):
+        _sched(top_k=-3, temperature=0.5)
+    with pytest.raises(ValueError, match="temperature"):
+        _sched(temperature=-0.1)
+    _sched(top_k=1, temperature=0.0)        # valid edge cases still fine
+    _sched(top_k=None, temperature=1.5)
+
+
+def test_summarize_histogram():
+    rs = [Request(prompt=[1]), Request(prompt=[2])]
+    rs[0].to(RequestState.PREFILLING)
+    rs[0].to(RequestState.RUNNING)
+    rs[0].to(RequestState.FINISHED)
+    h = summarize(rs)
+    assert h["finished"] == 1 and h["queued"] == 1
+    assert h["preemptions"] == 0

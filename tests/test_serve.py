@@ -240,3 +240,37 @@ def test_plan_cache_stats_counters():
     s = c.stats()
     assert s["hits"] == 1 and s["misses"] == 3 and s["evictions"] == 1
     assert ("a",) not in c and ("c",) in c
+
+
+def test_finish_on_idle_slot_returns_empty():
+    """Regression: finishing an already-idle slot used to hand back the
+    PREVIOUS occupant's stale token list (and never clear it)."""
+    cfg, server = _server(slots=2)
+    s = server.add_request(5)
+    server.step()
+    first = server.finish(s)
+    assert len(first) == 2                 # prompt + 1 generated
+    assert server.finish(s) == []          # double finish: nothing stale
+    assert server.tokens[s] == []          # per-slot list actually cleared
+    assert server.finish(1) == []          # never-admitted slot too
+
+
+def test_sampling_knobs_validated_at_construction():
+    """Regression: top_k=0 silently masked EVERY logit to -inf and a
+    negative temperature inverted the distribution — both must fail at
+    construction with a clear error."""
+    with pytest.raises(ValueError, match="top_k"):
+        _server(slots=1, top_k=0)
+    with pytest.raises(ValueError, match="temperature"):
+        _server(slots=1, temperature=-1.0)
+
+
+def test_admission_error_is_typed_with_retry_after():
+    """Pool exhaustion now raises the typed AdmissionError (still a
+    RuntimeError for old callers) carrying a retry-after hint."""
+    from repro.serve.lifecycle import AdmissionError
+    cfg, server = _server(slots=3, max_len=32, num_pages=2)
+    server.add_request(5)
+    with pytest.raises(AdmissionError, match="page pool exhausted") as ei:
+        server.add_request(7)
+    assert ei.value.retry_after >= 0.0

@@ -292,10 +292,73 @@ def _bench_chaos() -> None:
          requests=n_req, slots=slots, max_len=max_len, page_size=ps)
 
 
+def _bench_fleet_failover() -> None:
+    """``serve/fleet_failover`` — tokens/s of a 3-replica fleet serving
+    a fixed workload CLEAN vs the same workload with one replica killed
+    mid-decode (resident work migrates via the replay cursor and resumes
+    elsewhere; the dead replica respawns with an empty pool).  The ratio
+    prices a failover: re-prefill + replay on the target replica plus
+    the respawned replica's jit re-trace — the clean path is untouched.
+    Also reports how many requests migrated AND finished (recovered)."""
+    from repro.serve.fleet import FleetRouter
+    from repro.serve.lifecycle import RequestState
+
+    cfg = _cfg()
+    params = init_params(cfg, jax.random.key(0))
+    replicas, slots, max_len, ps = 3, 2, 64, 16
+    n_req = 6 if common.QUICK else 12
+    rng = np.random.default_rng(0)
+    workload = [(rng.integers(0, 500, int(rng.integers(2, 8))).tolist(),
+                 int(rng.integers(6, 14))) for _ in range(n_req)]
+
+    def mk():
+        return FleetRouter(cfg, params, replicas=replicas, slots=slots,
+                           max_len=max_len, page_size=ps)
+
+    def drive(router, *, kill_at=None):
+        reqs = []
+        for prompt, gen in workload:
+            for _ in range(64):
+                try:
+                    reqs.append(router.submit(prompt, max_new_tokens=gen))
+                    break
+                except Exception:      # noqa: BLE001 — backpressure: tick
+                    router.tick()
+        t0 = time.perf_counter()
+        while not (router.drained() and all(r.terminal for r in reqs)):
+            if kill_at is not None and router.tick_no + 1 == kill_at:
+                router.kill_replica(0, reason="bench kill")
+            router.tick()
+        wall = time.perf_counter() - t0
+        gen_n = sum(r.generated for r in reqs)
+        rec = sum(1 for r in reqs if r.migrations > 0
+                  and r.state is RequestState.FINISHED)
+        return wall, gen_n, rec
+
+    drive(mk())                                  # warm a clean fleet's jits
+    wall_c, gen_c, _ = drive(mk())
+    drive(mk(), kill_at=4)                       # warm the failover path
+    wall_k, gen_k, recovered = drive(mk(), kill_at=4)
+
+    tps_c = gen_c / max(wall_c, 1e-9)
+    tps_k = gen_k / max(wall_k, 1e-9)
+    emit("serve/fleet_failover", wall_k * 1e6 / max(gen_k, 1),
+         f"clean_tok_s={tps_c:.1f} one_kill_tok_s={tps_k:.1f} "
+         f"degradation={tps_k / max(tps_c, 1e-9):.2f}x "
+         f"recovered={recovered} replicas={replicas} "
+         f"host_noise_bound=true",
+         clean_tok_s=round(tps_c, 2), one_kill_tok_s=round(tps_k, 2),
+         degradation=round(tps_k / max(tps_c, 1e-9), 3),
+         recovered_requests=int(recovered), replicas=replicas,
+         host_noise_bound=True,
+         requests=n_req, slots=slots, max_len=max_len, page_size=ps)
+
+
 def run() -> None:
     _bench_step()
     _bench_trace()
     _bench_chaos()
+    _bench_fleet_failover()
 
 
 if __name__ == "__main__":

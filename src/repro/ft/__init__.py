@@ -1,5 +1,7 @@
 """Fault tolerance: atomic async checkpointing, elastic rescale,
-straggler mitigation."""
-from repro.ft.checkpoint import CheckpointManager  # noqa: F401
+straggler mitigation, per-replica step watchdog."""
+from repro.ft.checkpoint import (CheckpointError,  # noqa: F401
+                                 CheckpointManager)
 from repro.ft.elastic import restore_elastic  # noqa: F401
-from repro.ft.straggler import StragglerConfig, StragglerPolicy  # noqa: F401
+from repro.ft.straggler import (StepWatchdog, StragglerConfig,  # noqa: F401
+                                StragglerPolicy)

@@ -21,6 +21,14 @@ import jax.numpy as jnp
 import numpy as np
 
 
+class CheckpointError(RuntimeError):
+    """A checkpoint step dir is torn or corrupted (missing
+    ``manifest.json``, truncated ``.npz``, missing arrays), or no intact
+    checkpoint exists at all.  Typed so callers can catch restore
+    failures without fishing ``JSONDecodeError`` / ``OSError`` /
+    ``KeyError`` out of the storage layer."""
+
+
 def _flatten(tree: Any) -> dict[str, np.ndarray]:
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
     out = {}
@@ -104,26 +112,80 @@ class CheckpointManager:
                     pass
         return sorted(out)
 
-    def latest_step(self) -> int | None:
+    def latest_step(self, *, intact: bool = False) -> int | None:
+        """Newest step by directory listing; ``intact=True`` additionally
+        verifies the step dir is readable (manifest parses, this
+        process's ``.npz`` loads) and skips torn ones."""
         steps = self.all_steps()
-        return steps[-1] if steps else None
+        if not intact:
+            return steps[-1] if steps else None
+        for s in reversed(steps):
+            try:
+                self._read_step(s)
+            except CheckpointError:
+                continue
+            return s
+        return None
+
+    def _read_step(self, step: int) -> tuple[dict, Any]:
+        """(manifest, npz) of one step dir; :class:`CheckpointError` on a
+        torn or corrupted dir instead of raw ``JSONDecodeError`` /
+        ``OSError`` / ``zipfile.BadZipFile``."""
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        try:
+            with open(os.path.join(d, "manifest.json")) as f:
+                manifest = json.load(f)
+            data = np.load(os.path.join(d, f"proc{self.process_index}.npz"))
+            # touch the member list now: a truncated zip can open fine
+            # and only fail when an array is first read
+            data.files  # noqa: B018
+        except CheckpointError:
+            raise
+        except Exception as e:  # noqa: BLE001 — typed storage boundary
+            raise CheckpointError(
+                f"checkpoint step {step} at {d} is torn or corrupted: "
+                f"{type(e).__name__}: {e}") from e
+        return manifest, data
 
     def restore(self, template: Any, *, step: int | None = None,
                 shardings: Any = None) -> tuple[Any, dict]:
         """Restore into the structure of ``template``; optionally place with
-        per-leaf ``shardings`` (pytree of NamedSharding) — the elastic path."""
-        step = self.latest_step() if step is None else step
-        assert step is not None, "no checkpoint found"
-        d = os.path.join(self.dir, f"step_{step:08d}")
-        with open(os.path.join(d, "manifest.json")) as f:
-            manifest = json.load(f)
-        data = np.load(os.path.join(d, f"proc{self.process_index}.npz"))
+        per-leaf ``shardings`` (pytree of NamedSharding) — the elastic path.
+
+        ``step=None`` restores the newest INTACT step: a torn latest dir
+        (crash mid-write that survived the atomic-rename discipline, a
+        bad disk) falls back to the next-newest step that loads cleanly.
+        An explicit ``step`` is restored exactly or raises
+        :class:`CheckpointError` — falling back silently from a step the
+        caller named would be wrong."""
+        if step is not None:
+            manifest, data = self._read_step(step)
+        else:
+            steps = self.all_steps()
+            if not steps:
+                raise CheckpointError(f"no checkpoint found in {self.dir}")
+            last_err: CheckpointError | None = None
+            for s in reversed(steps):
+                try:
+                    manifest, data = self._read_step(s)
+                    break
+                except CheckpointError as e:
+                    last_err = e
+            else:
+                raise CheckpointError(
+                    f"no intact checkpoint in {self.dir} "
+                    f"(tried steps {steps})") from last_err
         paths, treedef = _paths_and_treedef(template)
         shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
                         if shardings is not None else [None] * len(paths))
         leaves = []
-        for p, s in zip(paths, shard_leaves):
-            arr = data[p]
-            leaves.append(jax.device_put(arr, s) if s is not None
-                          else jnp.asarray(arr))
+        try:
+            for p, s in zip(paths, shard_leaves):
+                arr = data[p]
+                leaves.append(jax.device_put(arr, s) if s is not None
+                              else jnp.asarray(arr))
+        except Exception as e:  # noqa: BLE001 — truncated member payload
+            raise CheckpointError(
+                f"checkpoint step {manifest.get('step', '?')} is torn or "
+                f"corrupted: {type(e).__name__}: {e}") from e
         return jax.tree_util.tree_unflatten(treedef, leaves), manifest["extra"]

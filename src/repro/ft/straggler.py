@@ -90,7 +90,19 @@ class StepWatchdog:
     or ``hard_limit`` seconds outright.  The serve scheduler records each
     decode step's duration; breaches are counted and surfaced (stats /
     chaos reports) rather than raised — a slow step is a symptom to act
-    on (preempt, shed load), not a crash.
+    on (preempt, shed load), not a crash.  The fleet router
+    (serve/fleet.py) reads ``hard_breaches`` as a health signal: a
+    replica repeatedly blowing the hard limit is DEGRADED and drained.
+
+    Breaching steps are excluded from the history so a stall cannot drag
+    the median up and mask itself — but a replica that LEGITIMATELY
+    settles into a slower regime (longer contexts, a busier host) would
+    then breach forever: the median never sees the new regime.  After
+    ``rebaseline_after`` CONSECUTIVE median breaches the window is
+    re-baselined onto those breaching durations (the new regime becomes
+    the baseline) and ``regime_shifts`` counts the event.  Hard-limit
+    breaches never re-baseline — the hard limit is an absolute SLO, not
+    a relative one.
 
     Pure host Python with the same injectable-measurement design as
     :class:`StragglerPolicy` (callers time the step and pass the
@@ -98,12 +110,23 @@ class StepWatchdog:
     """
 
     def __init__(self, cfg: StragglerConfig = StragglerConfig(), *,
-                 hard_limit: float | None = None):
+                 hard_limit: float | None = None,
+                 rebaseline_after: int = 8):
+        if rebaseline_after < 1:
+            raise ValueError(f"rebaseline_after must be >= 1, "
+                             f"got {rebaseline_after}")
         self.cfg = cfg
         self.hard_limit = hard_limit
+        self.rebaseline_after = rebaseline_after
         self._hist: deque = deque(maxlen=cfg.window)
+        # the last run of consecutive median-breaching durations — the
+        # candidate new baseline if the run reaches rebaseline_after
+        self._breach_run: deque = deque(maxlen=max(cfg.window,
+                                                   rebaseline_after))
         self.breaches = 0
+        self.hard_breaches = 0
         self.observations = 0
+        self.regime_shifts = 0
         self.last_breach: float | None = None
 
     def median(self) -> float | None:
@@ -114,6 +137,9 @@ class StepWatchdog:
         """The current per-step budget, or None before enough history."""
         if self.hard_limit is not None:
             return self.hard_limit
+        return self._median_deadline()
+
+    def _median_deadline(self) -> float | None:
         if len(self._hist) < self.cfg.min_history:
             return None
         med = self.median()
@@ -121,14 +147,26 @@ class StepWatchdog:
 
     def observe(self, duration: float) -> bool:
         """Record one step's wall time; True when it breached the
-        deadline.  Breaching steps are excluded from the history so a
-        stall cannot drag the median up and mask itself."""
+        deadline (hard limit or factor x rolling median)."""
         self.observations += 1
-        limit = self.deadline()
-        breach = limit is not None and duration > limit
-        if breach:
+        hard = self.hard_limit is not None and duration > self.hard_limit
+        med_limit = self._median_deadline()
+        med_breach = med_limit is not None and duration > med_limit
+        if hard:
+            self.hard_breaches += 1
+        if hard or med_breach:
             self.breaches += 1
             self.last_breach = duration
+        if med_breach:
+            self._breach_run.append(duration)
+            if len(self._breach_run) >= self.rebaseline_after:
+                # the "stall" is the steady state now: adopt it
+                self.regime_shifts += 1
+                self._hist.clear()
+                self._hist.extend(self._breach_run)
+                self._breach_run.clear()
         else:
-            self._hist.append(duration)
-        return breach
+            self._breach_run.clear()
+            if not hard:
+                self._hist.append(duration)
+        return hard or med_breach

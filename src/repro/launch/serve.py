@@ -1,15 +1,24 @@
 """Serving CLI: paged continuous batching (prefill + decode + sampling)
 through the hardened request lifecycle (typed requests, deadlines,
-preemption-and-restore, runtime guards), with an optional chaos mode.
+preemption-and-restore, runtime guards), an optional in-process replica
+FLEET (least-loaded routing, health tracking, replay-based failover),
+and chaos modes for both layers.
 
 Example (CPU, reduced geometry):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
       --requests 4 --prompt-len 16 --gen 12 --page-size 16 \
       --temperature 0.8 --top-k 40
 
-Chaos smoke (seeded fault plan, invariants audited every tick):
+Fleet failover smoke (3 replicas, kill one mid-decode, work migrates):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
-      --chaos 0 --requests 6 --gen 6
+      --replicas 3 --kill-replica 4 --requests 6 --gen 8
+
+Chaos smoke (seeded fault plan, invariants audited every tick; with
+--replicas > 1 the plan adds replica kills / hangs / admission storms
+and the fleet residency audit).  Exits NONZERO when the audit trips or
+any request ends non-typed — CI gates on the exit code:
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
+      --chaos 0 --requests 6 --gen 6 [--replicas 3]
 """
 from __future__ import annotations
 
@@ -22,6 +31,126 @@ from repro.configs import get_arch
 from repro.ft.straggler import StepWatchdog
 from repro.models.transformer import init_params
 from repro.serve.engine import BatchedServer
+from repro.serve.lifecycle import (LifecycleError, RequestState,
+                                   TERMINAL_STATES)
+from repro.serve.paged_cache import InvariantViolation
+
+EXIT_CHAOS = 2          # audit tripped / non-typed termination / livelock
+
+
+def _check_typed(requests) -> list[str]:
+    """Every request must sit in a TERMINAL typed state, and FAILED ones
+    must carry an error string — anything else is a lifecycle escape."""
+    problems = []
+    for r in requests:
+        if r.state not in TERMINAL_STATES:
+            problems.append(f"req {r.rid} non-terminal: {r.state.value}")
+        elif r.state is RequestState.FAILED and not r.error:
+            problems.append(f"req {r.rid} FAILED without a typed error")
+    return problems
+
+
+def _run_chaos_single(sched, args) -> int:
+    from repro.serve.chaos import ChaosConfig, FaultPlan, run_plan
+    plan = FaultPlan(ChaosConfig(seed=args.chaos, requests=args.requests,
+                                 max_prompt=min(args.prompt_len,
+                                                args.max_len // 2),
+                                 max_new_tokens=args.gen))
+    t0 = time.time()
+    try:
+        rep = run_plan(sched, plan)
+    except (InvariantViolation, LifecycleError) as e:
+        print(f"CHAOS FAIL: audit tripped: {type(e).__name__}: {e}")
+        return EXIT_CHAOS
+    dt = time.time() - t0
+    print(f"chaos seed {args.chaos}: {rep.ticks} ticks in {dt:.2f}s — "
+          f"states={rep.states} preemptions={rep.preemptions} "
+          f"nan_failures={rep.nan_failures} "
+          f"invariant_checks={rep.invariant_checks} "
+          f"backpressured={rep.backpressured}")
+    problems = _check_typed(rep.submitted)
+    if problems:
+        print("CHAOS FAIL: " + "; ".join(problems))
+        return EXIT_CHAOS
+    print("every request reached a terminal typed state; "
+          "invariants never tripped")
+    return 0
+
+
+def _run_chaos_fleet(router, args) -> int:
+    from repro.serve.chaos import (FleetChaosConfig, FleetFaultPlan,
+                                   run_fleet_plan)
+    from repro.serve.fleet import FleetAuditError
+    plan = FleetFaultPlan(FleetChaosConfig(
+        seed=args.chaos, replicas=args.replicas, requests=args.requests,
+        max_prompt=min(args.prompt_len, args.max_len // 2),
+        max_new_tokens=args.gen))
+    t0 = time.time()
+    try:
+        rep = run_fleet_plan(router, plan)
+    except (FleetAuditError, InvariantViolation, LifecycleError) as e:
+        print(f"FLEET CHAOS FAIL: audit tripped: "
+              f"{type(e).__name__}: {e}")
+        return EXIT_CHAOS
+    dt = time.time() - t0
+    print(f"fleet chaos seed {args.chaos}: {rep.ticks} ticks in "
+          f"{dt:.2f}s — states={rep.states} deaths={rep.deaths} "
+          f"respawns={rep.respawns} migrated={rep.migrated} "
+          f"drains={rep.drains} recovered={rep.recovered} "
+          f"audits={rep.audits} backpressured={rep.backpressured}")
+    if rep.ticks >= plan.cfg.max_ticks:
+        print("FLEET CHAOS FAIL: fleet never drained (livelock)")
+        return EXIT_CHAOS
+    problems = _check_typed(rep.submitted)
+    if problems:
+        print("FLEET CHAOS FAIL: " + "; ".join(problems))
+        return EXIT_CHAOS
+    print("every request reached a terminal typed state; the fleet "
+          "audit held every tick")
+    return 0
+
+
+def _run_fleet(router, cfg, args) -> int:
+    key = jax.random.key(42)
+    reqs = []
+    for r in range(args.requests):
+        toks = jax.random.randint(jax.random.fold_in(key, r),
+                                  (max(args.prompt_len, 1),), 0, cfg.vocab)
+        reqs.append(router.submit([int(t) for t in toks],
+                                  max_new_tokens=args.gen,
+                                  ttl=args.deadline))
+    t0 = time.time()
+    cap = 8 * (args.gen + args.requests)
+    while not (router.drained() and all(r.terminal for r in reqs)) \
+            and router.tick_no < cap:
+        if args.kill_replica is not None and \
+                router.tick_no + 1 == args.kill_replica:
+            print(f"killing replica 0 at tick {args.kill_replica}")
+            router.kill_replica(0, reason="--kill-replica")
+        router.tick()
+        router.audit()
+    dt = time.time() - t0
+    for r in reqs:
+        print(f"req {r.rid}: {r.state.value:>9} on r{r.replica} "
+              f"(migrations={r.migrations}) {r.tokens[:12]} ...")
+    stats = router.stats()
+    generated = sum(r.generated for r in reqs)
+    recovered = sum(1 for r in reqs if r.migrations > 0
+                    and r.state is RequestState.FINISHED)
+    print(f"fleet: {stats['ticks']} ticks, {generated} tokens in "
+          f"{dt:.2f}s ({generated / max(dt, 1e-9):.1f} tok/s); "
+          f"deaths={stats['deaths']} respawns={stats['respawns']} "
+          f"migrated={stats['migrated']} recovered={recovered} "
+          f"drains={stats['drains']} rejoins={stats['rejoins']}")
+    for idx, rs in stats["replicas"].items():
+        print(f"  r{idx}: {rs['state']:>8} gen={rs['generation']} "
+              f"load={rs['load']} hard_breaches={rs['hard_breaches']} "
+              f"pages_in_use={rs['pages_in_use']}")
+    problems = _check_typed(reqs)
+    if problems:
+        print("FLEET FAIL: " + "; ".join(problems))
+        return EXIT_CHAOS
+    return 0
 
 
 def main() -> None:
@@ -45,43 +174,62 @@ def main() -> None:
     ap.add_argument("--guard-nan", action="store_true",
                     help="fail (only) slots producing non-finite logits")
     ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
-                    help="run a seeded fault plan instead of clean serving")
+                    help="run a seeded fault plan instead of clean "
+                         "serving (fleet faults when --replicas > 1); "
+                         "exits nonzero on audit trip / non-typed end")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="in-process scheduler replicas behind the "
+                         "fleet router (least-loaded admission, "
+                         "health-checked failover)")
+    ap.add_argument("--kill-replica", type=int, default=None,
+                    metavar="TICK",
+                    help="kill replica 0 at this fleet tick — its work "
+                         "migrates and resumes elsewhere (needs "
+                         "--replicas > 1)")
     args = ap.parse_args()
+
+    if args.replicas < 1:
+        raise SystemExit("--replicas must be >= 1")
+    if args.kill_replica is not None and args.replicas < 2:
+        raise SystemExit("--kill-replica needs --replicas > 1 "
+                         "(killing the only replica strands the work)")
 
     arch = get_arch(args.arch)
     cfg = arch.smoke if args.smoke else arch.model
     if cfg.encoder is not None:
         raise SystemExit("use whisper example for enc-dec serving")
     params = init_params(cfg, jax.random.key(0))
+    guard_nan = args.guard_nan or args.chaos is not None
+
+    if args.replicas > 1:
+        from repro.serve.chaos import StepClock
+        from repro.serve.engine import make_fleet
+        fleet_kw = dict(temperature=args.temperature, top_k=args.top_k,
+                        queue_depth=args.queue_depth, guard_nan=guard_nan,
+                        debug_invariants=args.check_invariants)
+        if args.chaos is not None:
+            # a quantized clock + a hard limit it dwarfs: determinism
+            fleet_kw.update(clock=StepClock(),
+                            watchdog_hard_limit=30.0,
+                            hard_breach_limit=1)
+        router = make_fleet(cfg, params, replicas=args.replicas,
+                            slots=args.requests, max_len=args.max_len,
+                            page_size=args.page_size, **fleet_kw)
+        if args.chaos is not None:
+            raise SystemExit(_run_chaos_fleet(router, args) or None)
+        raise SystemExit(_run_fleet(router, cfg, args) or None)
+
     server = BatchedServer(cfg, params, slots=args.requests,
                            max_len=args.max_len, page_size=args.page_size,
                            temperature=args.temperature, top_k=args.top_k,
                            queue_depth=args.queue_depth,
-                           guard_nan=args.guard_nan or args.chaos is not None,
+                           guard_nan=guard_nan,
                            debug_invariants=args.check_invariants,
                            watchdog=StepWatchdog())
     sched = server.scheduler
 
     if args.chaos is not None:
-        from repro.serve.chaos import ChaosConfig, FaultPlan, run_plan
-        plan = FaultPlan(ChaosConfig(seed=args.chaos,
-                                     requests=args.requests,
-                                     max_prompt=min(args.prompt_len,
-                                                    args.max_len // 2),
-                                     max_new_tokens=args.gen))
-        t0 = time.time()
-        rep = run_plan(sched, plan)
-        dt = time.time() - t0
-        print(f"chaos seed {args.chaos}: {rep.ticks} ticks in {dt:.2f}s — "
-              f"states={rep.states} preemptions={rep.preemptions} "
-              f"nan_failures={rep.nan_failures} "
-              f"invariant_checks={rep.invariant_checks} "
-              f"backpressured={rep.backpressured}")
-        if not rep.all_terminal:
-            raise SystemExit("chaos run left non-terminal requests")
-        print("every request reached a terminal typed state; "
-              "invariants never tripped")
-        return
+        raise SystemExit(_run_chaos_single(sched, args) or None)
 
     key = jax.random.key(42)
     reqs = []

@@ -1,13 +1,18 @@
 """Serving: jit'd prefill/decode with sharded interleaved KV caches +
 a paged continuous-batching runtime (scheduler / paged cache / executor)
 hardened by a typed request lifecycle (admission backpressure,
-preemption-and-restore, runtime guards) and a deterministic chaos
-harness that proves it.
+preemption-and-restore, runtime guards), a fault-tolerant replica fleet
+(health-checked router, replay-based request migration), and a
+deterministic chaos harness that proves both layers.
 """
 from repro.serve.chaos import (ChaosConfig, ChaosReport,  # noqa: F401
-                               FaultPlan, run_plan)
+                               FaultPlan, FleetChaosConfig,
+                               FleetChaosReport, FleetFaultPlan,
+                               StepClock, run_fleet_plan, run_plan)
 from repro.serve.engine import (BatchedServer, ServeConfig,  # noqa: F401
-                                jit_decode_step, jit_prefill)
+                                jit_decode_step, jit_prefill, make_fleet)
+from repro.serve.fleet import (FleetAuditError, FleetRouter,  # noqa: F401
+                               Replica, ReplicaState)
 from repro.serve.lifecycle import (AdmissionError,  # noqa: F401
                                    AdmissionQueue, LifecycleError,
                                    Request, RequestState,

@@ -28,6 +28,28 @@ Fault vocabulary (all host-side — the jit'd step is never retraced):
 
 The plan also mixes oversized-vs-pool prompts and zero-TTL requests so
 deadline and backpressure paths run under the same audit.
+
+FLEET chaos (PR 7) lifts the same discipline to the replica fleet
+(serve/fleet.py): a :class:`FleetFaultPlan` adds replica-scoped faults —
+
+  * ``kill``      — replica death mid-decode (every resident request
+                    migrates through MIGRATING and resumes elsewhere;
+                    the replica respawns with an empty pool);
+  * ``hang``      — a replica stalls for N ticks: past the heartbeat
+                    bound it is declared DEAD mid-hang, shorter hangs
+                    wake up and the watchdog books the stall as one
+                    giant hard-limit-breaching step (DEGRADED drain);
+  * ``storm``     — an admission storm PINNED to one replica (priority
+                    burst via ``submit(replica=...)``), forcing local
+                    backpressure while the rest of the fleet is idle;
+
+plus the per-replica faults above (preempt, nan, bad_prompt), and
+:func:`run_fleet_plan` audits the FLEET contract every tick
+(:meth:`FleetRouter.audit`): no request lost or double-resident across
+replicas, nothing stuck MIGRATING, per-replica pool invariants intact.
+Determinism holds fleet-wide: faults are materialized from the seed up
+front and the router is driven on an injected :class:`StepClock`, so a
+failing fleet run replays bit-for-bit.
 """
 from __future__ import annotations
 
@@ -36,9 +58,25 @@ from collections import Counter
 
 import numpy as np
 
-from repro.serve.lifecycle import (AdmissionError, Request,
+from repro.serve.fleet import FleetRouter, ReplicaState
+from repro.serve.lifecycle import (AdmissionError, Request, RequestState,
                                    TERMINAL_STATES)
 from repro.serve.scheduler import Scheduler
+
+
+class StepClock:
+    """Deterministic clock: each call advances a fixed quantum, so
+    deadline / heartbeat / watchdog logic runs without wall time and a
+    chaos run replays exactly.  The default quantum is LARGE (10s) so a
+    hang observed through it dwarfs any real hard limit while real step
+    wall-times stay far below it."""
+
+    def __init__(self, dt: float = 10.0):
+        self.t, self.dt = 0.0, dt
+
+    def __call__(self) -> float:
+        self.t += self.dt
+        return self.t
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,6 +99,7 @@ class Fault:
     tick: int
     kind: str                    # preempt | nan | kill | spike | bad_prompt
     arg: int = 0                 # slot draw / burst size / prompt variant
+    arg2: int = 0                # fleet: hang duration / storm burst size
 
 
 class FaultPlan:
@@ -180,3 +219,159 @@ def run_plan(sched: Scheduler, plan: FaultPlan) -> ChaosReport:
         nan_failures=sched.nan_failures,
         invariant_checks=sched.cache.invariant_checks,
         backpressured=backpressured)
+
+
+# ---------------------------------------------------------------------------
+# Fleet-level chaos (serve/fleet.py)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FleetChaosConfig:
+    seed: int = 0
+    replicas: int = 3
+    steps: int = 48              # fault-injection horizon (ticks)
+    max_ticks: int = 768         # hard cap: the fleet must DRAIN before it
+    requests: int = 10           # background workload size
+    max_prompt: int = 6
+    max_new_tokens: int = 8
+    p_kill: float = 0.06
+    p_hang: float = 0.05
+    p_storm: float = 0.08
+    p_preempt: float = 0.08
+    p_nan: float = 0.05
+    p_bad_prompt: float = 0.05
+    max_hang: int = 6            # hang duration draw (ticks, >= 1)
+
+
+class FleetFaultPlan:
+    """The full fleet fault schedule, materialized from a seed up
+    front — replica-scoped faults (kill / hang / storm) on top of the
+    per-slot vocabulary (preempt / nan / bad_prompt)."""
+
+    def __init__(self, cfg: FleetChaosConfig):
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed)
+        kinds = (("kill", cfg.p_kill), ("hang", cfg.p_hang),
+                 ("storm", cfg.p_storm), ("preempt", cfg.p_preempt),
+                 ("nan", cfg.p_nan), ("bad_prompt", cfg.p_bad_prompt))
+        self.faults: list[Fault] = []
+        for t in range(cfg.steps):
+            r = rng.random()
+            acc = 0.0
+            for kind, p in kinds:
+                acc += p
+                if r < acc:
+                    self.faults.append(Fault(
+                        t, kind, int(rng.integers(0, 1 << 16)),
+                        int(rng.integers(1, max(cfg.max_hang, 1) + 1))))
+                    break
+        self.workload: list[tuple[int, list[int], int]] = []
+        for _ in range(cfg.requests):
+            plen = int(rng.integers(1, cfg.max_prompt + 1))
+            prompt = rng.integers(0, 97, plen).tolist()
+            gen = int(rng.integers(1, cfg.max_new_tokens + 1))
+            arrive = int(rng.integers(0, max(cfg.steps // 2, 1)))
+            self.workload.append((arrive, [int(t) for t in prompt], gen))
+        self.workload.sort(key=lambda w: w[0])
+
+    def at(self, tick: int) -> list[Fault]:
+        return [f for f in self.faults if f.tick == tick]
+
+
+@dataclasses.dataclass
+class FleetChaosReport:
+    submitted: list[Request]
+    ticks: int
+    states: dict[str, int]
+    deaths: int
+    respawns: int
+    migrated: int
+    drains: int
+    backpressured: int
+    audits: int
+
+    @property
+    def all_terminal(self) -> bool:
+        return all(r.state in TERMINAL_STATES for r in self.submitted)
+
+    @property
+    def recovered(self) -> int:
+        """Requests that survived at least one migration to FINISH."""
+        return sum(1 for r in self.submitted
+                   if r.migrations > 0
+                   and r.state is RequestState.FINISHED)
+
+
+def run_fleet_plan(router: FleetRouter,
+                   plan: FleetFaultPlan) -> FleetChaosReport:
+    """Drive the fleet through the plan's workload + faults until it
+    drains (or the tick cap trips — a liveness failure for the caller to
+    assert on).  :meth:`FleetRouter.audit` — residency, MIGRATING
+    completion, per-replica pool invariants — runs after EVERY tick."""
+    cfg = plan.cfg
+    submitted: list[Request] = []
+    pending = list(plan.workload)
+    backpressured = 0
+    audits = 0
+    tick = 0
+    while tick < cfg.max_ticks:
+        while pending and pending[0][0] <= tick:
+            arrive, prompt, gen = pending[0]
+            try:
+                submitted.append(
+                    router.submit(prompt, max_new_tokens=gen))
+                pending.pop(0)
+            except AdmissionError:
+                backpressured += 1
+                pending[0] = (tick + 1, prompt, gen)
+                break
+        for fault in plan.at(tick):
+            live = [r for r in router.replicas if r.alive]
+            healthy = [r for r in router.replicas
+                       if r.state is ReplicaState.HEALTHY]
+            if fault.kind == "kill" and live:
+                router.kill_replica(live[fault.arg % len(live)].idx,
+                                    reason="chaos kill")
+            elif fault.kind == "hang" and live:
+                router.hang_replica(live[fault.arg % len(live)].idx,
+                                    fault.arg2)
+            elif fault.kind == "storm" and healthy:
+                target = healthy[fault.arg % len(healthy)].idx
+                for b in range(1 + fault.arg2 % 3):
+                    try:
+                        submitted.append(router.submit(
+                            [1 + b, 2, 3], max_new_tokens=2,
+                            priority=10, replica=target))
+                    except AdmissionError:
+                        backpressured += 1
+            elif fault.kind == "preempt" and live:
+                rep = live[fault.arg % len(live)]
+                running = _running_slots(rep.sched)
+                if running:
+                    rep.sched.preempt(running[fault.arg2 % len(running)])
+            elif fault.kind == "nan" and live:
+                rep = live[fault.arg % len(live)]
+                running = _running_slots(rep.sched)
+                if running:
+                    taint = np.zeros(rep.sched.slots, bool)
+                    taint[running[fault.arg2 % len(running)]] = True
+                    rep.sched._taint = taint
+            elif fault.kind == "bad_prompt":
+                bad = [] if fault.arg % 2 == 0 else \
+                    [0] * (router.max_len + 1)
+                try:
+                    submitted.append(router.submit(bad, max_new_tokens=2))
+                except AdmissionError:   # whole fleet dead/backpressured
+                    backpressured += 1
+        router.tick()
+        router.audit()                     # ALWAYS on under fleet chaos
+        audits += 1
+        tick += 1
+        if not pending and tick > cfg.steps and router.drained():
+            break
+    return FleetChaosReport(
+        submitted=submitted, ticks=tick,
+        states=dict(Counter(r.state.value for r in submitted)),
+        deaths=router.deaths, respawns=router.respawns,
+        migrated=router.migrated, drains=router.drains,
+        backpressured=backpressured, audits=audits)

@@ -239,3 +239,18 @@ class BatchedServer:
     def finish(self, slot: int) -> list[int]:
         """Release the slot (pages reclaimed, per-slot state cleared)."""
         return self.scheduler.finish(slot)
+
+
+def make_fleet(cfg: ModelConfig, params, *, replicas: int, slots: int,
+               max_len: int, **fleet_kw):
+    """N scheduler replicas behind the health-checked fleet router —
+    the multi-replica counterpart of :class:`BatchedServer`.  Each
+    replica is the full PR 6 hardened runtime (own page pool, own
+    admission queue) over ONE shared params pytree; the router does
+    least-loaded admission, heartbeat/watchdog health tracking, and
+    replay-based failover (serve/fleet.py, DESIGN.md §8.2).  A
+    ``replicas=1`` fleet is exactly one ``BatchedServer.scheduler``
+    behind a router."""
+    from repro.serve.fleet import FleetRouter
+    return FleetRouter(cfg, params, replicas=replicas, slots=slots,
+                       max_len=max_len, **fleet_kw)

@@ -11,12 +11,22 @@ through AROUND that device state:
                                         -> TIMED_OUT
                                         -> FAILED
                                         -> PREEMPTED -> QUEUED (again)
+                                        -> MIGRATING -> QUEUED (elsewhere)
 
-    plus the admission-time edges QUEUED -> {FAILED, TIMED_OUT} for
-    rejected / expired requests.  Illegal transitions raise — the chaos
-    harness (serve/chaos.py) relies on this: "every admitted request
-    terminates in a typed state" is only meaningful if states cannot be
-    corrupted silently.
+    plus the admission-time edges QUEUED -> {FAILED, TIMED_OUT,
+    MIGRATING} for rejected / expired / relocated requests.  Illegal
+    transitions raise — the chaos harness (serve/chaos.py) relies on
+    this: "every admitted request terminates in a typed state" is only
+    meaningful if states cannot be corrupted silently.
+
+    MIGRATING (PR 7) is the fleet failover edge: when a replica dies,
+    the router lifts every resident request off it — running slots AND
+    queued work — through MIGRATING and re-queues them on a surviving
+    replica.  Resume there is the ordinary preemption-and-restore path
+    (re-prefill the ORIGINAL prompt, replay generated tokens through
+    the jit'd decode step), so a migrated request's post-catch-up
+    stream is bit-exact vs an uninterrupted run on pad-safe stacks —
+    migration IS preemption pointed at a different page pool.
 
   * :class:`AdmissionQueue` — a BOUNDED priority queue.  A full queue is
     backpressure, not a crash: ``push`` raises :class:`AdmissionError`
@@ -50,6 +60,7 @@ class RequestState(enum.Enum):
     PREFILLING = "prefilling"
     RUNNING = "running"
     PREEMPTED = "preempted"
+    MIGRATING = "migrating"
     FINISHED = "finished"
     TIMED_OUT = "timed_out"
     FAILED = "failed"
@@ -62,14 +73,21 @@ TERMINAL_STATES = frozenset({RequestState.FINISHED, RequestState.TIMED_OUT,
 _TRANSITIONS: dict[RequestState, frozenset[RequestState]] = {
     RequestState.QUEUED: frozenset({RequestState.PREFILLING,
                                     RequestState.FAILED,
-                                    RequestState.TIMED_OUT}),
+                                    RequestState.TIMED_OUT,
+                                    RequestState.MIGRATING}),
     RequestState.PREFILLING: frozenset({RequestState.RUNNING,
                                         RequestState.FAILED}),
     RequestState.RUNNING: frozenset({RequestState.FINISHED,
                                      RequestState.TIMED_OUT,
                                      RequestState.FAILED,
-                                     RequestState.PREEMPTED}),
+                                     RequestState.PREEMPTED,
+                                     RequestState.MIGRATING}),
     RequestState.PREEMPTED: frozenset({RequestState.QUEUED}),
+    # MIGRATING -> FAILED: the fleet has nowhere left to re-admit
+    # (every replica dead) — still a typed terminal, never a lost request
+    RequestState.MIGRATING: frozenset({RequestState.QUEUED,
+                                       RequestState.FAILED,
+                                       RequestState.TIMED_OUT}),
     RequestState.FINISHED: frozenset(),
     RequestState.TIMED_OUT: frozenset(),
     RequestState.FAILED: frozenset(),
@@ -113,8 +131,10 @@ class Request:
     tokens: list[int] = dataclasses.field(default_factory=list)
     arrival_seq: int = -1               # stamped by AdmissionQueue.push
     preemptions: int = 0
+    migrations: int = 0                 # replica-to-replica relocations
     error: str | None = None
     slot: int | None = None
+    replica: int | None = None          # stamped by the fleet router
 
     def __post_init__(self):
         self.prompt = [int(t) for t in self.prompt]
@@ -132,6 +152,8 @@ class Request:
             self.error = error
         if state is RequestState.PREEMPTED:
             self.preemptions += 1
+        elif state is RequestState.MIGRATING:
+            self.migrations += 1
 
     @property
     def terminal(self) -> bool:
@@ -178,7 +200,7 @@ class AdmissionQueue:
             raise AdmissionError(
                 f"admission queue full ({self.maxsize} waiting)",
                 retry_after=max(self._hint(), 0.0) * (len(self._q) + 1))
-        if req.state is RequestState.PREEMPTED:
+        if req.state in (RequestState.PREEMPTED, RequestState.MIGRATING):
             req.to(RequestState.QUEUED)      # keeps its arrival_seq
         if req.arrival_seq < 0:
             req.arrival_seq = next(self._seq)
@@ -251,4 +273,5 @@ def summarize(requests: Sequence[Request]) -> dict[str, int]:
     for r in requests:
         out[r.state.value] += 1
     out["preemptions"] = sum(r.preemptions for r in requests)
+    out["migrations"] = sum(r.migrations for r in requests)
     return out

@@ -496,6 +496,65 @@ class Scheduler:
         """True when nothing is queued or running."""
         return not any(self.active) and len(self.queue) == 0
 
+    # -- fleet surface (serve/fleet.py) -------------------------------------
+    def load(self) -> int:
+        """Admission-routing load signal: queued + occupying a slot."""
+        return len(self.queue) + sum(self.active)
+
+    def resident_rids(self) -> set[int]:
+        """rids RESIDENT on this replica right now: waiting in the
+        admission queue or occupying a slot.  The fleet audit asserts
+        every live request is resident on EXACTLY one replica."""
+        out = {r.rid for r in self.queue._q}
+        out |= {r.rid for r in self._slot_req if r is not None}
+        return out
+
+    def migrate_queued(self) -> list[Request]:
+        """Lift every QUEUED request off this replica (graceful drain of
+        a DEGRADED replica: stop admitting, let running finish, move the
+        waiting work elsewhere).  Each comes back MIGRATING, carrying
+        whatever tokens it had accumulated before a prior preemption."""
+        out = self.queue.drain()
+        for r in out:
+            r.to(RequestState.MIGRATING)
+            self.requests.pop(r.rid, None)
+        return out
+
+    def adopt(self, req: Request) -> None:
+        """Accept a MIGRATING request from another replica: force-queued
+        (migration must never be dropped by the admission bound — that
+        would turn failover into data loss) and admitted by the next
+        tick through the ordinary preemption-resume path."""
+        self.requests[req.rid] = req
+        self.queue.push(req, force=True)
+
+    def evacuate(self) -> list[Request]:
+        """Lift EVERY resident request off this replica — the failover
+        path when the replica is declared dead.  Running slots carry
+        their accumulated tokens (prompt + generated) into MIGRATING;
+        queued work follows.  HOST bookkeeping only: the device pool is
+        never touched — a dead replica's pool is discarded wholesale at
+        respawn, and resume on the target replica re-prefills the
+        original prompt and replays generated tokens through the
+        ordinary decode step (the PR 6 replay cursor), so no pool copy
+        or KV serialization ever crosses replicas."""
+        out: list[Request] = []
+        for s in range(self.slots):
+            req = self._slot_req[s]
+            if req is not None and not req.terminal:
+                req.tokens = list(self.tokens[s])
+                req.to(RequestState.MIGRATING)
+                req.slot = None
+                out.append(req)
+                self.requests.pop(req.rid, None)
+            self.active[s] = False
+            self.tokens[s] = []
+            self._fed[s] = 0
+            self._pos[s] = 0
+            self._slot_req[s] = None
+        out.extend(self.migrate_queued())
+        return out
+
     def stats(self) -> dict:
         from repro.serve.lifecycle import summarize
         out = summarize(list(self.requests.values()))

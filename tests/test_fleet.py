@@ -1,0 +1,404 @@
+"""Fleet router property suite: least-loaded admission with aggregated
+backpressure, health states (heartbeat death, hard-limit DEGRADED drain
++ rejoin), replay-based failover (kill -> MIGRATING -> resume elsewhere,
+bit-exact vs the uninterrupted oracle on pad-safe stacks), respawn, the
+fleet residency audit, and the seeded fleet chaos gate: under plans that
+kill replicas mid-decode, every admitted request terminates typed, no
+request is lost or double-resident, and per-replica pool invariants
+never trip."""
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.models.transformer import init_params
+from repro.serve.chaos import (FleetChaosConfig, FleetFaultPlan, StepClock,
+                               run_fleet_plan)
+from repro.serve.fleet import (FleetAuditError, FleetRouter, ReplicaState)
+from repro.serve.lifecycle import (AdmissionError, RequestState,
+                                   TERMINAL_STATES)
+
+SEEDS = (0, 1, 2)
+
+
+@functools.lru_cache(maxsize=None)
+def _cfg_params(arch="qwen3-0.6b"):
+    cfg = get_arch(arch).smoke
+    return cfg, init_params(cfg, jax.random.key(0))
+
+
+def _fleet(replicas=3, arch="qwen3-0.6b", **kw):
+    cfg, params = _cfg_params(arch)
+    kw.setdefault("slots", 2)
+    kw.setdefault("max_len", 16)
+    kw.setdefault("page_size", 4)
+    kw.setdefault("clock", StepClock())
+    kw.setdefault("watchdog_hard_limit", 30.0)
+    return FleetRouter(cfg, params, replicas=replicas, **kw)
+
+
+def _drain(fl, reqs, *, cap=256, audit=True):
+    ticks = 0
+    while not all(r.terminal for r in reqs) and ticks < cap:
+        fl.tick()
+        if audit:
+            fl.audit()
+        ticks += 1
+    assert ticks < cap, "fleet failed to drain the requests"
+    return ticks
+
+
+# --------------------------- admission routing -------------------------------
+
+def test_least_loaded_routing_spreads_and_breaks_ties_on_index():
+    fl = _fleet(replicas=3)
+    reqs = [fl.submit([2, 3], max_new_tokens=4) for _ in range(3)]
+    assert sorted(r.replica for r in reqs) == [0, 1, 2]
+    # all equally loaded again: the tie breaks on the lowest index
+    r4 = fl.submit([2, 3], max_new_tokens=4)
+    assert r4.replica == 0
+    _drain(fl, reqs + [r4])
+
+
+def test_backpressure_aggregates_across_replicas():
+    fl = _fleet(replicas=2, slots=1, queue_depth=1)
+    # slots fill on tick, so pre-tick capacity is queue_depth per replica
+    ok = [fl.submit([1, 2], max_new_tokens=4) for _ in range(2)]
+    with pytest.raises(AdmissionError) as ei:
+        fl.submit([1, 2], max_new_tokens=4)
+    msg = str(ei.value)
+    assert "r0" in msg and "r1" in msg       # every replica's refusal
+    assert ei.value.retry_after >= 0.0
+    _drain(fl, ok)
+
+
+def test_pinned_submit_to_unhealthy_replica_is_backpressure():
+    fl = _fleet(replicas=2)
+    fl.kill_replica(1)
+    with pytest.raises(AdmissionError, match="replica 1 is dead"):
+        fl.submit([1, 2], max_new_tokens=2, replica=1)
+    # unpinned routing still works around the dead replica
+    r = fl.submit([1, 2], max_new_tokens=2)
+    assert r.replica == 0
+    _drain(fl, [r])
+
+
+def test_malformed_traffic_comes_back_typed_failed():
+    fl = _fleet(replicas=2)
+    r = fl.submit([], max_new_tokens=2)
+    assert r.state is RequestState.FAILED and r.error
+    fl.audit()                               # terminal, never resident
+
+
+# --------------------------- failover ----------------------------------------
+
+def test_kill_migrates_resident_requests_and_respawns():
+    fl = _fleet(replicas=3)
+    reqs = [fl.submit([3 + i, 5, 7], max_new_tokens=8) for i in range(3)]
+    for _ in range(2):
+        fl.tick()
+        fl.audit()
+    victim = reqs[0].replica
+    gen_before = fl.replicas[victim].generation
+    fl.kill_replica(victim)
+    fl.audit()                               # nothing lost at the boundary
+    assert reqs[0].migrations == 1
+    assert reqs[0].replica != victim
+    _drain(fl, reqs)
+    assert all(r.state is RequestState.FINISHED for r in reqs)
+    respawned = fl.replicas[victim]
+    assert respawned.state is ReplicaState.HEALTHY
+    assert respawned.generation == gen_before + 1
+    assert respawned.sched.cache.pages_in_use() == 0   # empty pool rejoin
+    assert fl.deaths == 1 and fl.respawns == 1
+
+
+def test_queued_work_on_dead_replica_migrates_too():
+    fl = _fleet(replicas=2, slots=1, queue_depth=4)
+    # replica 0: one running + one queued behind it
+    reqs = [fl.submit([5, 6], max_new_tokens=6, replica=0)
+            for _ in range(2)]
+    fl.tick()
+    fl.audit()
+    assert reqs[0].state is RequestState.RUNNING
+    assert reqs[1].state is RequestState.QUEUED
+    fl.kill_replica(0)
+    fl.audit()
+    assert {r.replica for r in reqs} == {1}
+    assert all(r.migrations == 1 for r in reqs)
+    _drain(fl, reqs)
+    assert all(r.state is RequestState.FINISHED for r in reqs)
+
+
+def test_no_live_replica_fails_typed_never_lost():
+    fl = _fleet(replicas=1, respawn=False)
+    r = fl.submit([4, 5, 6], max_new_tokens=8)
+    fl.tick()
+    assert r.state is RequestState.RUNNING
+    fl.kill_replica(0)
+    assert r.state is RequestState.FAILED
+    assert "no live replica" in r.error
+    fl.audit()
+    assert fl.drained()
+
+
+# --------------------------- health: heartbeat + degraded --------------------
+
+def test_hang_past_heartbeat_bound_is_dead_and_work_survives():
+    fl = _fleet(replicas=2, heartbeat_ticks=3)
+    reqs = [fl.submit([7, 8, 9], max_new_tokens=8, replica=i)
+            for i in range(2)]
+    fl.tick()
+    victim = reqs[0].replica
+    fl.hang_replica(victim, ticks=10)        # way past the bound
+    for _ in range(5):
+        fl.tick()
+        fl.audit()
+    assert fl.deaths >= 1
+    assert fl.replicas[victim].generation >= 1      # respawned
+    _drain(fl, reqs)
+    assert all(r.state is RequestState.FINISHED for r in reqs)
+    assert reqs[0].migrations >= 1
+
+
+def test_short_hang_wakes_degrades_and_rejoins_after_drain():
+    fl = _fleet(replicas=2, heartbeat_ticks=6, hard_breach_limit=1)
+    # replica 0: a running request AND queued work to migrate on drain
+    reqs = [fl.submit([9, 8], max_new_tokens=10, replica=0)
+            for _ in range(3)]
+    other = fl.submit([4, 4], max_new_tokens=4, replica=1)
+    fl.tick()
+    fl.audit()
+    fl.hang_replica(0, ticks=2)              # wakes before the bound
+    for _ in range(3):
+        fl.tick()
+        fl.audit()
+    # the stall was observed as one giant step -> hard breach -> DEGRADED
+    assert fl.drains == 1
+    rep0 = fl.replicas[0]
+    assert fl.deaths == 0
+    # queued work migrated off; running finishes in place
+    resident0 = rep0.sched.resident_rids()
+    assert all(r.rid not in resident0 or r.slot is not None
+               for r in reqs)
+    _drain(fl, reqs + [other])
+    assert all(r.state is RequestState.FINISHED for r in reqs + [other])
+    assert fl.rejoins == 1
+    assert fl.replicas[0].state is ReplicaState.HEALTHY
+
+
+def test_degraded_replica_admits_nothing():
+    fl = _fleet(replicas=2, hard_breach_limit=1)
+    r0 = fl.submit([3, 3], max_new_tokens=12, replica=0)
+    fl.tick()
+    fl.replicas[0].sched.watchdog.observe(1e9)      # hard-limit breach
+    fl.tick()
+    assert fl.replicas[0].state is ReplicaState.DEGRADED
+    with pytest.raises(AdmissionError, match="replica 0 is degraded"):
+        fl.submit([1, 2], max_new_tokens=2, replica=0)
+    r = fl.submit([1, 2], max_new_tokens=2)
+    assert r.replica == 1                     # routed around the drain
+    _drain(fl, [r0, r])
+
+
+# --------------------------- determinism oracles -----------------------------
+
+def _trace(n=6, seed=7):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n):
+        plen = int(rng.integers(1, 5))
+        out.append(([int(t) for t in rng.integers(0, 97, plen)],
+                    int(rng.integers(2, 8))))
+    return out
+
+
+def _run_trace_through(fl, trace):
+    reqs = []
+    for prompt, gen in trace:
+        req = None
+        for _ in range(64):                  # backpressure: tick and retry
+            try:
+                req = fl.submit(prompt, max_new_tokens=gen)
+                break
+            except AdmissionError:
+                fl.tick()
+        assert req is not None
+        reqs.append(req)
+    _drain(fl, reqs)
+    return [tuple(r.tokens) for r in reqs]
+
+
+def test_fleet_determinism_one_vs_n_replicas():
+    """Same trace, no faults: 1 replica vs 3 replicas produce IDENTICAL
+    per-request token streams (greedy decode; slot rows are independent
+    of batch composition), and every replica's step stays a single jit
+    trace — the router adds nothing to the device fast path."""
+    trace = _trace()
+    one = _run_trace_through(_fleet(replicas=1), trace)
+    fl3 = _fleet(replicas=3)
+    three = _run_trace_through(fl3, trace)
+    assert one == three
+    for rep in fl3.replicas:
+        assert rep.sched._step._cache_size() == 1
+
+
+def _logits_drive(fl, req, *, kill_at=None, preempt_at=None, cap=64):
+    """Tick the fleet until ``req`` terminates, recording its slot's
+    logits keyed by replay-cursor position; optionally kill its replica
+    (migration) or preempt it in place after N ticks."""
+    logits_by_pos = {}
+    for t in range(cap):
+        if req.terminal:
+            break
+        if kill_at is not None and t == kill_at and \
+                req.state is RequestState.RUNNING:
+            fl.kill_replica(req.replica, reason="oracle kill")
+        if preempt_at is not None and t == preempt_at and \
+                req.state is RequestState.RUNNING:
+            fl.replicas[req.replica].sched.preempt(req.slot)
+        fl.tick()
+        fl.audit()
+        rep = fl.replicas[req.replica] if req.replica is not None else None
+        if rep is not None and rep.alive and req.slot is not None and \
+                rep.sched.active[req.slot] and \
+                rep.sched.last_logits is not None:
+            pos = rep.sched._fed[req.slot]
+            logits_by_pos[pos] = np.asarray(
+                rep.sched.last_logits[req.slot], np.float32)
+    return logits_by_pos
+
+
+def _migration_oracle(arch, *, comparer):
+    cfg_prompt, gen = [3, 5, 7, 9, 2], 8
+    # uninterrupted single-replica oracle
+    fa = _fleet(replicas=1, arch=arch)
+    ra = fa.submit(cfg_prompt, max_new_tokens=gen)
+    la = _logits_drive(fa, ra)
+    assert ra.state is RequestState.FINISHED
+
+    # kill-then-migrate on a 2-replica fleet
+    fb = _fleet(replicas=2, arch=arch)
+    rb = fb.submit(cfg_prompt, max_new_tokens=gen)
+    lb = _logits_drive(fb, rb, kill_at=3)
+    assert rb.state is RequestState.FINISHED
+    assert rb.migrations == 1
+
+    # preempt-then-resume on the SAME replica (the PR 6 path)
+    fc = _fleet(replicas=1, arch=arch)
+    rc = fc.submit(cfg_prompt, max_new_tokens=gen)
+    lc = _logits_drive(fc, rc, preempt_at=3)
+    assert rc.state is RequestState.FINISHED
+    assert rc.preemptions == 1
+
+    # the full stream survives both failure modes
+    assert rb.tokens == ra.tokens
+    assert rc.tokens == ra.tokens
+    shared = sorted(set(la) & set(lb) & set(lc))
+    assert len(shared) >= gen - 1
+    for pos in shared:
+        comparer(la[pos], lb[pos], pos)      # migrate == uninterrupted
+        comparer(lc[pos], lb[pos], pos)      # migrate == preempt-resume
+
+
+def test_migration_equals_preemption_bit_exact_pad_safe():
+    """Kill-then-migrate == preempt-then-resume == uninterrupted, at the
+    LOGITS level, bit-exact: migration is the same replay cursor pointed
+    at a different page pool, and both replicas run the same jit'd
+    computation over the same params."""
+    def bit_exact(x, y, pos):
+        assert np.array_equal(x, y), \
+            f"pos {pos}: maxdiff {np.abs(x - y).max()}"
+    _migration_oracle("qwen3-0.6b", comparer=bit_exact)
+
+
+def test_migration_allclose_windowed():
+    """Windowed stack: prefill runs at true length, so the bar is
+    allclose (same bar as PR 6 preempt-resume)."""
+    def close(x, y, pos):
+        np.testing.assert_allclose(x, y, rtol=2e-4, atol=2e-5,
+                                   err_msg=f"pos {pos}")
+    _migration_oracle("gemma3-12b", comparer=close)
+
+
+# --------------------------- fleet audit negatives ---------------------------
+
+def test_audit_catches_double_residency():
+    fl = _fleet(replicas=2)
+    r = fl.submit([2, 3], max_new_tokens=8)
+    fl.tick()
+    # corrupt the control plane: the same request queued on BOTH replicas
+    fl.replicas[1 - r.replica].sched.queue._q.append(r)
+    with pytest.raises(FleetAuditError, match="double-resident"):
+        fl.audit()
+
+
+def test_audit_catches_lost_request():
+    fl = _fleet(replicas=2, slots=1)
+    a = fl.submit([2, 3], max_new_tokens=8, replica=0)
+    b = fl.submit([2, 3], max_new_tokens=8, replica=0)   # queued behind a
+    fl.tick()
+    assert b.state is RequestState.QUEUED
+    fl.replicas[0].sched.queue.drain()       # drop it on the floor
+    with pytest.raises(FleetAuditError, match="lost"):
+        fl.audit()
+
+
+# --------------------------- the chaos gate ----------------------------------
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_fleet_chaos_terminates_typed_and_invariants_hold(seed):
+    """The PR 7 acceptance gate: under a seeded fault plan over 3
+    replicas, every admitted request reaches a terminal typed state,
+    the fleet audit (no lost / double-resident request, per-replica
+    pool invariants) passes EVERY tick, and the fleet drains."""
+    fl = _fleet(replicas=3, num_pages=6, queue_depth=3, guard_nan=True,
+                hard_breach_limit=1, heartbeat_ticks=4)
+    plan = FleetFaultPlan(FleetChaosConfig(seed=seed, requests=8,
+                                           steps=32, max_ticks=512))
+    report = run_fleet_plan(fl, plan)
+    assert report.ticks < plan.cfg.max_ticks        # liveness
+    assert fl.drained()
+    assert report.all_terminal, report.states
+    assert sum(report.states.values()) == len(report.submitted)
+    for r in report.submitted:
+        assert r.state in TERMINAL_STATES
+        assert r.state is not RequestState.FAILED or r.error
+    assert report.audits == report.ticks            # audited every tick
+
+
+def test_fleet_chaos_exercises_kills_and_migration():
+    """The seeded plans must actually kill replicas mid-decode and
+    migrate work — a fleet chaos suite that never fails over is
+    vacuous."""
+    deaths = migrated = recovered = respawns = 0
+    for seed in SEEDS:
+        fl = _fleet(replicas=3, num_pages=6, queue_depth=3,
+                    guard_nan=True, hard_breach_limit=1,
+                    heartbeat_ticks=4)
+        plan = FleetFaultPlan(FleetChaosConfig(seed=seed, requests=8,
+                                               steps=32, max_ticks=512))
+        rep = run_fleet_plan(fl, plan)
+        deaths += rep.deaths
+        migrated += rep.migrated
+        recovered += rep.recovered
+        respawns += rep.respawns
+    assert deaths > 0
+    assert respawns > 0
+    assert migrated > 0
+    assert recovered > 0          # some migrated request FINISHED
+
+
+def test_fleet_chaos_is_reproducible():
+    outs = []
+    for _ in range(2):
+        fl = _fleet(replicas=3, num_pages=6, queue_depth=3,
+                    guard_nan=True, hard_breach_limit=1)
+        rep = run_fleet_plan(fl, FleetFaultPlan(
+            FleetChaosConfig(seed=1, requests=6, steps=24,
+                             max_ticks=512)))
+        outs.append([(r.state.value, tuple(r.tokens))
+                     for r in rep.submitted])
+    assert outs[0] == outs[1]

@@ -7,8 +7,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.ft.checkpoint import CheckpointManager
-from repro.ft.straggler import StragglerConfig, StragglerPolicy
+from repro.ft.checkpoint import CheckpointError, CheckpointManager
+from repro.ft.straggler import (StepWatchdog, StragglerConfig,
+                                StragglerPolicy)
 
 
 def _tree(key=0):
@@ -132,3 +133,128 @@ def test_crash_mid_save_previous_checkpoint_restores(tmp_path, monkeypatch):
     restored2, _ = mgr.restore(jax.tree.map(jnp.zeros_like, tree))
     np.testing.assert_allclose(np.asarray(restored2["params"]["w"]),
                                np.asarray(newer["params"]["w"]))
+
+
+# --------------------------- torn-checkpoint recovery ------------------------
+
+def _corrupt_manifest(tmp_path, step):
+    path = os.path.join(str(tmp_path), f"step_{step:08d}", "manifest.json")
+    with open(path, "w") as f:
+        f.write('{"step": 2, "paths": [truncated')
+
+
+def _truncate_npz(tmp_path, step):
+    path = os.path.join(str(tmp_path), f"step_{step:08d}", "proc0.npz")
+    with open(path, "r+b") as f:
+        f.truncate(20)          # a few bytes of zip header, nothing else
+
+
+def test_restore_falls_back_to_newest_intact_step(tmp_path):
+    """Corrupt the LATEST step's manifest post-rename (bad disk, partial
+    fsync on a dying node): ``restore(step=None)`` recovers step N-1
+    instead of raising a raw JSONDecodeError."""
+    mgr = CheckpointManager(str(tmp_path))
+    tree = _tree()
+    mgr.save(1, tree, extra={"mark": "good"}, blocking=True)
+    mgr.save(2, jax.tree.map(lambda a: a + 1.0, tree), blocking=True)
+    _corrupt_manifest(tmp_path, 2)
+    restored, extra = mgr.restore(jax.tree.map(jnp.zeros_like, tree))
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b)), tree, restored)
+    assert extra["mark"] == "good"
+    assert mgr.latest_step() == 2                 # listing is unchanged
+    assert mgr.latest_step(intact=True) == 1      # but only 1 loads
+
+
+def test_restore_falls_back_on_truncated_npz(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    tree = _tree()
+    mgr.save(3, tree, blocking=True)
+    mgr.save(4, jax.tree.map(lambda a: a * 2.0, tree), blocking=True)
+    _truncate_npz(tmp_path, 4)
+    restored, _ = mgr.restore(jax.tree.map(jnp.zeros_like, tree))
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b)), tree, restored)
+
+
+def test_restore_explicit_corrupt_step_raises_typed(tmp_path):
+    """An explicitly named step is restored exactly or fails TYPED —
+    never a silent fallback to a different step."""
+    mgr = CheckpointManager(str(tmp_path))
+    tree = _tree()
+    mgr.save(1, tree, blocking=True)
+    mgr.save(2, tree, blocking=True)
+    _corrupt_manifest(tmp_path, 2)
+    with pytest.raises(CheckpointError, match="step 2.*torn or corrupted"):
+        mgr.restore(jax.tree.map(jnp.zeros_like, tree), step=2)
+    with pytest.raises(CheckpointError):
+        mgr.restore(jax.tree.map(jnp.zeros_like, tree), step=99)
+
+
+def test_restore_empty_dir_raises_typed(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    with pytest.raises(CheckpointError, match="no checkpoint found"):
+        mgr.restore(_tree())
+
+
+def test_restore_all_steps_torn_raises_typed(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    tree = _tree()
+    for s in (1, 2):
+        mgr.save(s, tree, blocking=True)
+        _corrupt_manifest(tmp_path, s)
+    with pytest.raises(CheckpointError, match="no intact checkpoint"):
+        mgr.restore(jax.tree.map(jnp.zeros_like, tree))
+    assert mgr.latest_step(intact=True) is None
+
+
+# --------------------------- watchdog re-baseline ----------------------------
+
+def test_watchdog_rebaselines_after_sustained_regime_shift():
+    """A DELIBERATE slowdown (longer context arrives, a bigger batch) is
+    a new normal, not an endless breach storm: after K consecutive
+    median breaches the window re-baselines onto the new durations and
+    stops flagging."""
+    wd = StepWatchdog(StragglerConfig(window=8, factor=2.0,
+                                      min_history=4), rebaseline_after=4)
+    for _ in range(8):
+        assert not wd.observe(1.0)
+    # regime shift: steps now take 5x — first K breach, then re-baseline
+    flagged = [wd.observe(5.0) for _ in range(12)]
+    assert flagged[:4] == [True] * 4        # the shift is loud at first
+    assert wd.regime_shifts == 1
+    assert not any(flagged[6:])             # then 5.0 is the new normal
+    assert wd.deadline() == pytest.approx(10.0)   # 2x the new median
+
+
+def test_watchdog_transient_spikes_do_not_rebaseline():
+    """Breaches must be CONSECUTIVE to re-baseline — isolated spikes
+    keep flagging forever."""
+    wd = StepWatchdog(StragglerConfig(window=8, factor=2.0,
+                                      min_history=4), rebaseline_after=3)
+    for _ in range(8):
+        wd.observe(1.0)
+    for _ in range(6):                      # spike / normal alternating
+        assert wd.observe(9.0)
+        assert not wd.observe(1.0)
+    assert wd.regime_shifts == 0
+    assert wd.breaches == 6
+
+
+def test_watchdog_hard_limit_never_rebaselines():
+    """The hard limit is an absolute SLO: sustained hard breaches keep
+    firing and never become the baseline."""
+    wd = StepWatchdog(StragglerConfig(window=8, factor=2.0,
+                                      min_history=4),
+                      hard_limit=30.0, rebaseline_after=3)
+    for _ in range(8):
+        wd.observe(1.0)
+    for _ in range(10):
+        assert wd.observe(100.0)            # every one flags
+    assert wd.hard_breaches == 10
+    assert wd.deadline() == 30.0            # SLO unchanged
+
+
+def test_watchdog_rebaseline_requires_positive_k():
+    with pytest.raises(ValueError):
+        StepWatchdog(StragglerConfig(), rebaseline_after=0)

@@ -354,11 +354,124 @@ def _bench_fleet_failover() -> None:
          requests=n_req, slots=slots, max_len=max_len, page_size=ps)
 
 
+def _bench_prefix_share() -> None:
+    """``serve/prefix_share`` — a shared-system-prompt trace (every
+    request opens with the same multi-page prefix, arrivals staggered so
+    the first prefill publishes before the rest admit) served with the
+    radix prefix cache ON vs OFF.  Tracked claims: PEAK CACHE BYTES drop
+    (borrowers point their tables at the donor's pages instead of
+    refilling them — ``mem_ratio`` > 1 is the win over PR 5 paged) and
+    the trie hit rate / tokens reused.  Decode over shared pages is
+    bit-exact vs private copies (tests/test_prefix.py gates it), so this
+    row prices memory only."""
+    cfg = _cfg()
+    params = init_params(cfg, jax.random.key(0))
+    slots, max_len, ps = 4, 128, 16
+    n_req = slots                   # all concurrently live at peak
+    sys_len = 4 * ps                # 4 shared full pages per request
+    rng = np.random.default_rng(0)
+    sys_prompt = rng.integers(0, 500, sys_len).tolist()
+    prompts = [sys_prompt + rng.integers(0, 500, 6).tolist()
+               for _ in range(n_req)]
+
+    def drive(prefix: bool):
+        sched = Scheduler(cfg, params, slots=slots, max_len=max_len,
+                          page_size=ps, prefix_cache=prefix)
+        peak = 0
+        reqs = []
+        for p in prompts:           # sequential sync admission: request
+            sched.add_request(p)    # 0 publishes, 1..n-1 adopt
+            peak = max(peak, sched.cache.used_cache_bytes())
+        for _ in range(8):
+            sched.step()
+            peak = max(peak, sched.cache.used_cache_bytes())
+        return peak, sched.stats()
+
+    peak_on, st = drive(True)
+    peak_off, _ = drive(False)
+    px = st["prefix"]
+    emit("serve/prefix_share", float(peak_on) / 1e3,
+         f"peak_shared_bytes={peak_on} peak_private_bytes={peak_off} "
+         f"mem_ratio={peak_off / max(peak_on, 1):.2f}x "
+         f"hit_rate={px['hit_rate']:.2f} "
+         f"tokens_reused={px['tokens_reused']} "
+         f"shared_pages={st['shared_pages']} requests={n_req}",
+         peak_cache_bytes_shared=int(peak_on),
+         peak_cache_bytes_private=int(peak_off),
+         mem_ratio=round(peak_off / max(peak_on, 1), 3),
+         hit_rate=round(px["hit_rate"], 3),
+         tokens_reused=int(px["tokens_reused"]),
+         shared_pages=int(st["shared_pages"]),
+         requests=n_req, slots=slots, max_len=max_len, page_size=ps)
+
+
+def _bench_chunked_admission() -> None:
+    """``serve/chunked_admission`` — inter-token latency of an already-
+    running decode stream when a LONG prompt is admitted mid-flight:
+    BLOCKING admission (the whole prefill runs inside one admission
+    call, the pre-PR 8 schedule) vs CHUNKED (one page-sized chunk per
+    tick interleaved with decode steps).  Tracked claim: the worst-case
+    inter-token gap no longer spikes by the full prefill cost — it is
+    bounded by ONE chunk."""
+    cfg = _cfg()
+    params = init_params(cfg, jax.random.key(0))
+    slots, max_len, ps = 2, 128, 16
+    long_len = 6 * ps               # 96-token prompt = 6 prefill chunks
+    rng = np.random.default_rng(1)
+    long_prompt = rng.integers(0, 500, long_len).tolist()
+    ticks, admit_at = 18, 4
+
+    def drive(chunked: bool):
+        sched = Scheduler(cfg, params, slots=slots, max_len=max_len,
+                          page_size=ps, chunk_pages=1)
+        # warm THIS instance's jits (chunk prefill, step, sample,
+        # release) — the measured gaps must price scheduling, not XLA
+        # compiles; the chunk jit is one fixed-width trace, so one
+        # warmup chunk covers every later chunk
+        w = sched.add_request(long_prompt[:ps + 1])
+        sched.step()
+        sched.finish(w)
+        bg = sched.submit([7], max_new_tokens=ticks + 4)
+        sched.tick()
+        gaps, lr = [], None
+        for i in range(ticks):
+            t0 = time.perf_counter()
+            if i == admit_at:
+                if chunked:
+                    lr = sched.submit(long_prompt, max_new_tokens=2)
+                else:
+                    lr = sched.add_request(long_prompt)   # blocks here
+            sched.tick()
+            gaps.append(time.perf_counter() - t0)
+        del bg, lr
+        return gaps
+
+    g_chunk, g_block = drive(True), drive(False)
+
+    def p99(g):
+        return sorted(g)[min(len(g) - 1, int(0.99 * len(g)))]
+
+    emit("serve/chunked_admission", p99(g_chunk) * 1e6,
+         f"p99_chunked_us={p99(g_chunk) * 1e6:.0f} "
+         f"p99_blocking_us={p99(g_block) * 1e6:.0f} "
+         f"spike_ratio={p99(g_block) / max(p99(g_chunk), 1e-9):.2f}x "
+         f"prompt_pages={long_len // ps} chunk_pages=1 "
+         f"host_noise_bound=true",
+         p99_chunked_us=round(p99(g_chunk) * 1e6, 1),
+         p99_blocking_us=round(p99(g_block) * 1e6, 1),
+         spike_ratio=round(p99(g_block) / max(p99(g_chunk), 1e-9), 3),
+         prompt_pages=long_len // ps, chunk_pages=1,
+         host_noise_bound=True,
+         slots=slots, max_len=max_len, page_size=ps)
+
+
 def run() -> None:
     _bench_step()
     _bench_trace()
     _bench_chaos()
     _bench_fleet_failover()
+    _bench_prefix_share()
+    _bench_chunked_admission()
 
 
 if __name__ == "__main__":

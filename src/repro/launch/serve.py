@@ -112,11 +112,17 @@ def _run_chaos_fleet(router, args) -> int:
 
 def _run_fleet(router, cfg, args) -> int:
     key = jax.random.key(42)
+    sys_prefix = []
+    if args.prefix_cache:   # shared system prompt: see main()
+        sys_prefix = [int(t) for t in jax.random.randint(
+            jax.random.fold_in(key, 999983),
+            (args.prompt_len // 2,), 0, cfg.vocab)]
     reqs = []
     for r in range(args.requests):
+        n = max(args.prompt_len - len(sys_prefix), 1)
         toks = jax.random.randint(jax.random.fold_in(key, r),
-                                  (max(args.prompt_len, 1),), 0, cfg.vocab)
-        reqs.append(router.submit([int(t) for t in toks],
+                                  (n,), 0, cfg.vocab)
+        reqs.append(router.submit(sys_prefix + [int(t) for t in toks],
                                   max_new_tokens=args.gen,
                                   ttl=args.deadline))
     t0 = time.time()
@@ -146,6 +152,12 @@ def _run_fleet(router, cfg, args) -> int:
         print(f"  r{idx}: {rs['state']:>8} gen={rs['generation']} "
               f"load={rs['load']} hard_breaches={rs['hard_breaches']} "
               f"pages_in_use={rs['pages_in_use']}")
+    if "prefix_hit_rate" in stats:
+        print(f"fleet prefix cache: hit_rate={stats['prefix_hit_rate']:.2f} "
+              f"({stats['prefix_hits']}/"
+              f"{stats['prefix_hits'] + stats['prefix_misses']}), "
+              f"{stats['prefix_tokens_reused']} tokens reused, "
+              f"{stats['shared_pages']} shared pages fleet-wide")
     problems = _check_typed(reqs)
     if problems:
         print("FLEET FAIL: " + "; ".join(problems))
@@ -169,6 +181,16 @@ def main() -> None:
                     help="per-request TTL in seconds (TIMED_OUT beyond)")
     ap.add_argument("--queue-depth", type=int, default=None,
                     help="admission queue bound (backpressure beyond)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share prompt-prefix KV pages across requests "
+                         "through the radix prefix cache (attention-only "
+                         "stacks); the clean-serve workload gets a "
+                         "shared system prefix so the hit rate is "
+                         "observable")
+    ap.add_argument("--chunk-pages", type=int, default=1,
+                    help="prefill chunk budget per tick, in pages — "
+                         "long prompts stream in between decode steps "
+                         "instead of monopolizing admission")
     ap.add_argument("--check-invariants", action="store_true",
                     help="audit the page pool after every mutation")
     ap.add_argument("--guard-nan", action="store_true",
@@ -206,7 +228,9 @@ def main() -> None:
         from repro.serve.engine import make_fleet
         fleet_kw = dict(temperature=args.temperature, top_k=args.top_k,
                         queue_depth=args.queue_depth, guard_nan=guard_nan,
-                        debug_invariants=args.check_invariants)
+                        debug_invariants=args.check_invariants,
+                        prefix_cache=args.prefix_cache,
+                        chunk_pages=args.chunk_pages)
         if args.chaos is not None:
             # a quantized clock + a hard limit it dwarfs: determinism
             fleet_kw.update(clock=StepClock(),
@@ -225,6 +249,8 @@ def main() -> None:
                            queue_depth=args.queue_depth,
                            guard_nan=guard_nan,
                            debug_invariants=args.check_invariants,
+                           prefix_cache=args.prefix_cache,
+                           chunk_pages=args.chunk_pages,
                            watchdog=StepWatchdog())
     sched = server.scheduler
 
@@ -232,11 +258,21 @@ def main() -> None:
         raise SystemExit(_run_chaos_single(sched, args) or None)
 
     key = jax.random.key(42)
+    # with --prefix-cache the workload models production traffic: every
+    # prompt opens with the SAME system prefix (half the prompt length),
+    # so the radix cache has something to share and the printed hit
+    # rate / shared-page counts are meaningful
+    sys_prefix = []
+    if args.prefix_cache:
+        sys_prefix = [int(t) for t in jax.random.randint(
+            jax.random.fold_in(key, 999983),
+            (args.prompt_len // 2,), 0, cfg.vocab)]
     reqs = []
     for r in range(args.requests):
+        n = max(args.prompt_len - len(sys_prefix), 1)
         toks = jax.random.randint(jax.random.fold_in(key, r),
-                                  (max(args.prompt_len, 1),), 0, cfg.vocab)
-        reqs.append(server.submit([int(t) for t in toks],
+                                  (n,), 0, cfg.vocab)
+        reqs.append(server.submit(sys_prefix + [int(t) for t in toks],
                                   max_new_tokens=args.gen,
                                   ttl=args.deadline))
 
@@ -257,7 +293,15 @@ def main() -> None:
     print(f"{steps} ticks, {generated} tokens in {dt:.2f}s "
           f"({generated / max(dt, 1e-9):.1f} tok/s on CPU interpret); "
           f"preemptions={stats['preemptions']} "
+          f"prefill_chunks={stats['prefill_chunks']} "
           f"watchdog_breaches={stats.get('watchdog_breaches', 0)}")
+    if "prefix" in stats:
+        px = stats["prefix"]
+        print(f"prefix cache: hit_rate={px['hit_rate']:.2f} "
+              f"({px['hits']}/{px['hits'] + px['misses']}), "
+              f"{px['tokens_reused']} tokens reused, "
+              f"{stats['shared_pages']} shared pages, "
+              f"{px['pages']} trie pages ({px['evicted']} evicted)")
 
 
 if __name__ == "__main__":

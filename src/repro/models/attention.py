@@ -317,6 +317,40 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     return out.reshape(B, H, D).astype(q.dtype)
 
 
+def chunk_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                    q_pos: jax.Array, *,
+                    window: int | None = None) -> jax.Array:
+    """C-query prefill-chunk attention.  q: (B, C, H, D); caches:
+    (B, S, K, D); ``q_pos``: (C,) absolute positions of the queries.
+
+    Query ``i`` attends to cache positions ``j <= q_pos[i]`` (causal
+    over the already-written cache, which includes the chunk's own
+    beats) and, for sliding-window layers, only within
+    ``q_pos[i] - j < window`` — the same attended set
+    :func:`decode_attention` masks one query at a time.  Numerics
+    mirror decode_attention (fp32 scores, NEG_INF mask, max/exp/sum
+    softmax), so a chunked prefill agrees with forced token-by-token
+    decode to float tolerance."""
+    B, C, H, D = q.shape
+    S, K = k_cache.shape[1], k_cache.shape[2]
+    G = H // K
+    qt = q.reshape(B, C, K, G, D)
+    s = jnp.einsum("bckgd,bskd->bkgcs", qt, k_cache.astype(q.dtype),
+                   preferred_element_type=jnp.float32) * D ** -0.5
+    j = jnp.arange(S)
+    mask = j[None, :] <= q_pos[:, None]              # (C, S)
+    if window is not None:
+        mask &= (q_pos[:, None] - j[None, :]) < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bkgcs,bskd->bkgcd", p / jnp.maximum(l, 1e-30),
+                     v_cache.astype(q.dtype),
+                     preferred_element_type=jnp.float32)
+    return jnp.moveaxis(out, 3, 1).reshape(B, C, H, D).astype(q.dtype)
+
+
 def cross_attention(params, x: jax.Array, enc_k: jax.Array, enc_v: jax.Array,
                     n_heads: int, n_kv: int, head_dim: int,
                     ctx=None) -> jax.Array:

@@ -101,6 +101,14 @@ def init_paged_cache(cfg: ModelConfig, slots: int, max_len: int,
     become attention-time masks, not ring buffers — unattended pages of a
     finished window are reclaimable like any other).  Recurrent leaves
     (mamba/xlstm) stay per-slot O(1) state, as in :func:`init_cache`.
+
+    ``ref`` is the device-side per-page REFERENCE COUNT: a physical page
+    may back several slots' table entries at once (prefix sharing) plus
+    external pins (the prefix trie, serve/prefix_cache.py).  Allocation
+    sets ref=1; :func:`paged_adopt_prefix` / :func:`paged_addref` bump
+    it; release/deref push a page back on the free stack only when its
+    count hits zero.  The count lives on device because the decode step
+    allocates inside jit — a host mirror would drift.
     """
     ns = cfg.n_superblocks
     n_seq = pages_per_seq(max_len, page_size)
@@ -130,6 +138,7 @@ def init_paged_cache(cfg: ModelConfig, slots: int, max_len: int,
         # descending so pages allocate in 0, 1, 2, ... order
         "free": jnp.arange(num_pages - 1, -1, -1, dtype=jnp.int32),
         "free_top": jnp.asarray(num_pages, jnp.int32),
+        "ref": jnp.zeros((num_pages,), jnp.int32),
         "blocks": blocks,
     }
 
@@ -142,37 +151,44 @@ def _paged_geometry(cfg: ModelConfig, cache: dict):
     return attn_pos, ps, n_seq
 
 
-def paged_invariants(cfg: ModelConfig, cache: dict) -> list[str]:
+def paged_invariants(cfg: ModelConfig, cache: dict, *,
+                     external_ref=None) -> list[str]:
     """Audit the paged cache's STRUCTURAL invariants on a live pytree.
 
     Returns a list of human-readable violations (empty = healthy):
 
-      * page aliasing — every allocated physical page id appears in the
-        table EXACTLY once (a page shared between slots would silently
-        cross-contaminate attention);
-      * free-stack consistency — ``free[:free_top]`` ids are in range,
-        distinct, and disjoint from the table; allocated ∪ free is ALL
-        pages exactly once (conservation: pages are never leaked or
-        double-owned, even under exhaustion where starved table entries
-        stay -1);
-      * pos-vs-table occupancy — a slot at position ``p`` owns at most
-        ``ceil(p / page_size)`` pages, all at logical indices below that
-        extent (starved slots may own FEWER — local degradation — but
-        never pages beyond their position);
-      * bounds — ``0 <= free_top <= num_pages``, positions within the
-        logical capacity.
+      * refcount conservation — every page's device refcount equals the
+        number of table entries referencing it plus its EXTERNAL pins
+        (``external_ref``: the prefix trie's per-page counts,
+        serve/prefix_cache.py).  More table entries than refs is page
+        ALIASING (a page shared without the books knowing would silently
+        cross-contaminate attention and be reclaimed under a live slot);
+      * free-stack consistency — ``free[:free_top]`` ids are in range and
+        distinct; a page is on the free stack IFF its refcount is zero
+        (an owned page on the stack is "both allocated and free"; a
+        zero-ref page missing from it is leaked);
+      * copy-on-write — a slot whose position ends MID-page must own its
+        tail page exclusively (ref == 1): appends write that page in
+        place, so a shared tail means a shared page is being written;
+      * pos-vs-table occupancy — a slot at position ``p`` references at
+        most ``ceil(p / page_size)`` pages, all at logical indices below
+        that extent (starved slots may hold FEWER — local degradation —
+        but never pages beyond their position);
+      * bounds — ``0 <= free_top <= num_pages``, refcounts non-negative,
+        positions within the logical capacity.
 
-    ONE device fetch (table / free / free_top / pos — the small int
-    state; the pool itself is never pulled), so the check is cheap
+    ONE device fetch (table / free / free_top / pos / ref — the small
+    int state; the pool itself is never pulled), so the check is cheap
     enough to run per-step under the chaos harness.  The serve wrapper
     (serve/paged_cache.py ``check_invariants``) raises on violations.
     """
     import numpy as np
     attn_pos, ps, n_seq = _paged_geometry(cfg, cache)
-    table, free, free_top, pos = jax.device_get(
-        (cache["table"], cache["free"], cache["free_top"], cache["pos"]))
-    table, free, pos = (np.asarray(table), np.asarray(free),
-                        np.asarray(pos))
+    table, free, free_top, pos, ref = jax.device_get(
+        (cache["table"], cache["free"], cache["free_top"], cache["pos"],
+         cache["ref"]))
+    table, free, pos, ref = (np.asarray(table), np.asarray(free),
+                             np.asarray(pos), np.asarray(ref))
     free_top = int(free_top)
     num_pages = free.shape[0]
     out: list[str] = []
@@ -181,28 +197,52 @@ def paged_invariants(cfg: ModelConfig, cache: dict) -> list[str]:
     if not (0 <= free_top <= num_pages):
         out.append(f"free_top={free_top} outside [0, {num_pages}]")
         return out                      # downstream slicing meaningless
+    ext = (np.zeros(num_pages, np.int64) if external_ref is None
+           else np.asarray(external_ref, np.int64))
     owned = table[table >= 0]
     if owned.size and (owned >= num_pages).any():
         out.append(f"table holds out-of-range page ids "
                    f"{sorted(set(owned[owned >= num_pages].tolist()))}")
-    uniq, counts = np.unique(owned, return_counts=True)
-    aliased = uniq[counts > 1]
+        owned = owned[owned < num_pages]
+    tc = np.bincount(owned, minlength=num_pages)     # table references
+    if (ref < 0).any():
+        out.append(f"page(s) {np.nonzero(ref < 0)[0].tolist()} hold "
+                   f"negative refcounts (double release)")
+    aliased = np.nonzero(tc > ref)[0]
     if aliased.size:
         out.append(f"page(s) {aliased.tolist()} aliased between slots "
-                   f"(owned {counts[counts > 1].tolist()} times)")
+                   f"(referenced {tc[aliased].tolist()} times, "
+                   f"refcount {ref[aliased].tolist()})")
+    bad_ref = np.nonzero((tc <= ref) & (ref != tc + ext))[0]
+    if bad_ref.size:
+        out.append(f"refcount conservation broken for page(s) "
+                   f"{bad_ref.tolist()}: refcount "
+                   f"{ref[bad_ref].tolist()} != table refs "
+                   f"{tc[bad_ref].tolist()} + external pins "
+                   f"{ext[bad_ref].tolist()}")
     stack = free[:free_top]
     uniq_f = np.unique(stack)
     if uniq_f.size != stack.size:
         out.append("free stack holds duplicate page ids")
-    both = np.intersect1d(uniq, uniq_f)
+    both = uniq_f[(tc[uniq_f] > 0) | (ref[uniq_f] > 0)] \
+        if uniq_f.size else uniq_f
     if both.size:
         out.append(f"page(s) {both.tolist()} both allocated and free")
-    if uniq.size + uniq_f.size != num_pages or \
-            not np.array_equal(np.union1d(uniq, uniq_f),
-                               np.arange(num_pages)):
-        out.append(f"allocated ∪ free != all pages exactly once "
-                   f"({uniq.size} owned + {stack.size} free of "
-                   f"{num_pages})")
+    live = np.zeros(num_pages, bool)
+    live[uniq_f] = True
+    leaked = np.nonzero(~live & (ref == 0) & (tc == 0))[0]
+    if leaked.size:
+        out.append(f"page(s) {leaked.tolist()} leaked (refcount zero "
+                   f"but not on the free stack)")
+    for s in range(table.shape[0]):
+        p = int(pos[s])
+        if p % ps != 0 and 0 <= p <= n_seq * ps:
+            tail = int(table[s, p // ps])
+            if tail >= 0 and ref[tail] > 1:
+                out.append(f"slot {s}: partial tail page {tail} is "
+                           f"SHARED (ref={int(ref[tail])}) — appends "
+                           f"would write a shared page in place "
+                           f"(missing copy-on-write fork)")
     for s in range(table.shape[0]):
         alloc = np.nonzero(table[s] >= 0)[0]
         p = int(pos[s])
@@ -228,21 +268,36 @@ def _keep_active(new, old, active):
     return jax.tree.map(sel, new, old)
 
 
+def _deref_push(ref, free, free_top, ids):
+    """Drop one reference from each page id in ``ids`` (pad with -1; ids
+    must be distinct) and push pages whose count hits ZERO back on the
+    free stack — shared pages (prefix runs still referenced by other
+    slots or pinned by the trie) survive.  jit-safe."""
+    ids = jnp.asarray(ids, jnp.int32)
+    valid = ids >= 0
+    safe = jnp.where(valid, ids, 0)
+    ref = ref.at[safe].add(-valid.astype(jnp.int32))
+    orphan = valid & (ref[safe] <= 0)
+    rank = jnp.cumsum(orphan.astype(jnp.int32)) - orphan
+    dst = jnp.where(orphan, free_top + rank, free.shape[0])
+    free = free.at[dst].set(ids, mode="drop")
+    free_top = free_top + jnp.sum(orphan.astype(jnp.int32))
+    return ref, free, free_top
+
+
 def paged_release_slot(cfg: ModelConfig, cache: dict, slot) -> dict:
-    """Free a slot: push its pages back on the free stack, clear its page
-    table row and position, and reset its recurrent state to init — a
-    reused slot can never attend to (or carry) the previous occupant's
-    state.  Pool pages are NOT zeroed: a new occupant overwrites position
-    ``p`` before ``p`` ever becomes attendable (``eff_len`` masking), so
-    stale beats are unreachable.  jit-safe (``slot`` may be traced)."""
+    """Free a slot: drop one reference from each of its pages — ORPHANED
+    pages (refcount zero) go back on the free stack, shared prefix pages
+    survive for their other referents — then clear the slot's page table
+    row and position and reset its recurrent state to init: a reused
+    slot can never attend to (or carry) the previous occupant's state.
+    Pool pages are NOT zeroed: a new occupant overwrites position ``p``
+    before ``p`` ever becomes attendable (``eff_len`` masking), so stale
+    beats are unreachable.  jit-safe (``slot`` may be traced)."""
     slot = jnp.asarray(slot, jnp.int32)
     table, free, free_top = cache["table"], cache["free"], cache["free_top"]
     row = jnp.take(table, slot, axis=0)                  # (pages,)
-    used = row >= 0
-    rank = jnp.cumsum(used.astype(jnp.int32)) - used
-    dst = jnp.where(used, free_top + rank, free.shape[0])
-    free = free.at[dst].set(row, mode="drop")
-    free_top = free_top + jnp.sum(used.astype(jnp.int32))
+    ref, free, free_top = _deref_push(cache["ref"], free, free_top, row)
     table = table.at[slot].set(-1)
     pos = cache["pos"].at[slot].set(0)
     blocks = dict(cache["blocks"])
@@ -261,7 +316,7 @@ def paged_release_slot(cfg: ModelConfig, cache: dict, slot) -> dict:
                 jnp.broadcast_to(s[0], c.shape[2:]).astype(c.dtype)),
             leaf, ini)
     return {"pos": pos, "table": table, "free": free, "free_top": free_top,
-            "blocks": blocks}
+            "ref": ref, "blocks": blocks}
 
 
 def paged_insert_prefill(cfg: ModelConfig, cache: dict, slot,
@@ -302,6 +357,7 @@ def paged_insert_prefill(cfg: ModelConfig, cache: dict, slot,
     table = cache["table"].at[slot, :n_pg].set(newp)
     pos = cache["pos"].at[slot].set(length)
     scatter_ids = jnp.where(have, newp, free.shape[0])
+    ref = cache["ref"].at[scatter_ids].add(1, mode="drop")
     blocks = dict(cache["blocks"])
     for i, kind in enumerate(cfg.block_pattern):
         st = cache_states[f"pos{i}"]
@@ -333,7 +389,272 @@ def paged_insert_prefill(cfg: ModelConfig, cache: dict, slot,
                 lambda c, s: c.at[:, slot].set(s[:, 0].astype(c.dtype)),
                 leaf, st)
     return {"pos": pos, "table": table, "free": free, "free_top": free_top,
-            "blocks": blocks}
+            "ref": ref, "blocks": blocks}
+
+
+def paged_adopt_prefix(cfg: ModelConfig, cache: dict, slot,
+                       page_ids) -> dict:
+    """Point a freshly-admitted slot's page table at SHARED prefix pages.
+
+    ``page_ids`` is ``(pages_per_seq,)`` int32 — the physical page run
+    backing the slot's leading logical pages, padded with -1.  Each
+    adopted page gains one reference and NO device data moves: the page
+    gather already reads through the table, so a shared page costs
+    nothing beyond the table row write.  The slot's position is set to
+    ``(#adopted) * page_size`` (whole pages only — a partial tail is
+    forked separately, :func:`paged_fork_page`).  The slot must be empty
+    (released) before adoption.  jit-safe (``slot``/``page_ids`` may be
+    traced)."""
+    attn_pos, ps, n_seq = _paged_geometry(cfg, cache)
+    slot = jnp.asarray(slot, jnp.int32)
+    ids = jnp.asarray(page_ids, jnp.int32)
+    valid = ids >= 0
+    table = cache["table"].at[slot].set(jnp.where(valid, ids, -1))
+    drop = cache["free"].shape[0]
+    ref = cache["ref"].at[jnp.where(valid, ids, drop)].add(1, mode="drop")
+    pos = cache["pos"].at[slot].set(
+        jnp.sum(valid.astype(jnp.int32)) * ps)
+    return {"pos": pos, "table": table, "free": cache["free"],
+            "free_top": cache["free_top"], "ref": ref,
+            "blocks": cache["blocks"]}
+
+
+def paged_addref(cfg: ModelConfig, cache: dict, page_ids) -> dict:
+    """Add one EXTERNAL reference (a prefix-trie pin) to each page id in
+    ``page_ids`` (padded with -1).  Pinned pages survive the release of
+    every slot that references them — the trie keeps published prefixes
+    resident for future borrowers until it evicts them
+    (:func:`paged_deref_pages`).  jit-safe."""
+    ids = jnp.asarray(page_ids, jnp.int32)
+    valid = ids >= 0
+    drop = cache["free"].shape[0]
+    ref = cache["ref"].at[jnp.where(valid, ids, drop)].add(1, mode="drop")
+    out = dict(cache)
+    out["ref"] = ref
+    return out
+
+
+def paged_deref_pages(cfg: ModelConfig, cache: dict, page_ids) -> dict:
+    """Drop one reference from each page id in ``page_ids`` (padded with
+    -1) — the trie-eviction counterpart of :func:`paged_addref`.  Pages
+    whose count hits zero go back on the free stack.  jit-safe."""
+    ref, free, free_top = _deref_push(cache["ref"], cache["free"],
+                                      cache["free_top"], page_ids)
+    out = dict(cache)
+    out.update(ref=ref, free=free, free_top=free_top)
+    return out
+
+
+def paged_fork_page(cfg: ModelConfig, cache: dict, slot, logical_idx,
+                    src, *, deref_src: bool = False, pos_to=None) -> dict:
+    """Copy-on-write fork: pop a fresh page off the free stack, copy the
+    SOURCE page's pool beats into it across every attention layer, and
+    point ``table[slot, logical_idx]`` at the copy (refcount 1).
+
+    Used at admission when a prompt's tail matches only PART of a trie
+    page (the slot adopts the shared whole-page run, then forks the
+    donor's next page to continue writing mid-page), and on any append
+    that would land on a page with refcount > 1.  ``deref_src=True``
+    additionally drops one reference on ``src`` — the append-time case,
+    where the slot previously referenced the shared page; admission-time
+    tail forks (the slot never referenced the donor page) leave the
+    source's count alone.  ``pos_to`` (traced), when given, sets the
+    slot's position (admission forks park it at ``k * page_size + m``).
+    Callers check ``free_pages() >= 1`` host-side; an exhausted stack
+    degrades locally (the entry stays -1, the copy drops).  jit-safe."""
+    attn_pos, ps, n_seq = _paged_geometry(cfg, cache)
+    slot = jnp.asarray(slot, jnp.int32)
+    logical_idx = jnp.asarray(logical_idx, jnp.int32)
+    src = jnp.asarray(src, jnp.int32)
+    free, free_top, ref = cache["free"], cache["free_top"], cache["ref"]
+    drop = free.shape[0]
+    have = free_top > 0
+    newp = jnp.where(have, free[jnp.clip(free_top - 1, 0, drop - 1)],
+                     -1)
+    free_top = free_top - have.astype(jnp.int32)
+    table = cache["table"].at[slot, logical_idx].set(newp)
+    ref = ref.at[jnp.where(have, newp, drop)].add(1, mode="drop")
+    dst = jnp.where(have & (src >= 0), newp, drop)
+    srcc = jnp.clip(src, 0, drop - 1)
+    blocks = dict(cache["blocks"])
+    for i, kind in enumerate(cfg.block_pattern):
+        if kind != "attn":
+            continue
+        leaf = blocks[f"pos{i}"]                  # (NS, P, ps, K, 2D)
+        beat = jax.lax.dynamic_index_in_dim(leaf, srcc, axis=1)
+        blocks[f"pos{i}"] = leaf.at[:, dst].set(beat[:, 0], mode="drop")
+    if deref_src:
+        ref, free, free_top = _deref_push(ref, free, free_top,
+                                          jnp.where(src >= 0, src,
+                                                    -1)[None])
+    pos = cache["pos"]
+    if pos_to is not None:
+        pos = pos.at[slot].set(jnp.asarray(pos_to, jnp.int32))
+    return {"pos": pos, "table": table, "free": free,
+            "free_top": free_top, "ref": ref, "blocks": blocks}
+
+
+def paged_prefill_chunk(params, cache: dict, tokens: jax.Array,
+                        cfg: ModelConfig, ctx, *, slot, count) -> dict:
+    """Prefill up to ``tokens.shape[0]`` prompt tokens into ONE slot,
+    starting at the slot's current position (mid-page starts — e.g.
+    after a copy-on-write tail fork — are fine).
+
+    ``tokens`` has a FIXED width (the scheduler uses one page), so every
+    chunk of a serving process shares ONE jit trace and one set of
+    compiled access plans; ``count`` (traced) is the number of leading
+    tokens that are real.  Pad tokens append nothing (dropped scatter
+    rows), never touch recurrent state, and their garbage activations
+    feed no output.
+
+    This is the CANONICAL prefill path for the serving scheduler: every
+    page's contents become a deterministic function of (the prefix
+    tokens, this one trace), which is what makes prefix pages sharable
+    bit-exactly — a borrower adopting a donor's pages reads exactly the
+    bits it would have computed itself.  Missing pages in the touched
+    range are allocated off the free stack (refcount 1), the chunk's KV
+    beats scatter through the page table, C-query causal attention runs
+    over the slot's gathered pages (sliding windows mask at attention
+    time, as in the paged decode step), and recurrent blocks advance
+    token-by-token under a scan.  No logits are computed: the scheduler
+    feeds the LAST prompt token through the decode step to produce the
+    first sampled token (the PR 6 replay cursor), so chunks cover
+    ``prompt[:-1]`` only.  Returns the updated cache."""
+    from repro.models.transformer import cast_params
+    params = cast_params(params, cfg)
+    if cfg.encoder is not None:
+        raise NotImplementedError("paged serving covers decoder-only "
+                                  "models; use encdec.decode_step")
+    pol = cfg.vx_policy
+    C = tokens.shape[0]
+    slot = jnp.asarray(slot, jnp.int32)
+    count = jnp.asarray(count, jnp.int32)
+    attn_pos, ps, n_seq = _paged_geometry(cfg, cache)
+    table, free, free_top = cache["table"], cache["free"], cache["free_top"]
+    ref, pos = cache["ref"], cache["pos"]
+    start = jnp.take(pos, slot)
+    offs = jnp.arange(C)
+    tpos = start + offs                          # (C,) token positions
+    real = offs < count
+    seq = n_seq * ps if attn_pos else (1 << 30)
+
+    spec = None
+    if attn_pos:
+        # allocate every missing page the chunk touches (same rank-pop as
+        # the decode step; exhaustion degrades locally — entries stay -1
+        # and the touched beats drop, never an aliased page)
+        row = jnp.take(table, slot, axis=0)      # (n_seq,)
+        idx = jnp.arange(n_seq)
+        lastp = (start + jnp.maximum(count, 1) - 1) // ps
+        neednew = (idx >= start // ps) & (idx <= lastp) & (row < 0)
+        rank = jnp.cumsum(neednew.astype(jnp.int32)) - neednew
+        have = neednew & (rank < free_top)
+        newp = free[jnp.clip(free_top - 1 - rank, 0, free.shape[0] - 1)]
+        row = jnp.where(have, newp, row)
+        table = table.at[slot].set(row)
+        free_top = free_top - jnp.sum(have.astype(jnp.int32))
+        ref = ref.at[jnp.where(have, newp, free.shape[0])].add(
+            1, mode="drop")
+        table_c = jnp.broadcast_to(row, (C, n_seq))
+        wpos = jnp.where(real & (tpos < seq), tpos, -1)
+        spec = vx.Paged(page_size=ps, pages=n_seq, trail=2)
+
+    x = layers.embed(tokens, params["embed"]).astype(cfg.cdtype)[None]
+
+    def _tok_scan(step_fn, state0, h, keep_dtype):
+        """Advance per-slot recurrent state over the chunk's tokens; pad
+        tokens are gated out of both the carry and the output."""
+        def tok(st, inp):
+            ht, on = inp                         # ht (1, d), on scalar
+            y, st2 = step_fn(ht, st)
+            st2 = _keep_active(st2, st, on[None])
+            return st2, jnp.where(on, y, 0.0)
+        st, ys = jax.lax.scan(tok, state0,
+                              (jnp.swapaxes(h, 0, 1), real))
+        return st, jnp.swapaxes(ys, 0, 1).astype(keep_dtype)
+
+    def _slot_state(sb_state):
+        return jax.tree.map(
+            lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=0),
+            sb_state)
+
+    def _put_slot(sb_state, new1):
+        return jax.tree.map(
+            lambda full, s1: jax.lax.dynamic_update_slice_in_dim(
+                full, s1.astype(full.dtype), slot, axis=0),
+            sb_state, new1)
+
+    def sb_step(x, inp):
+        sb_p, sb_c = inp
+        new_c = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            p = sb_p[f"pos{i}"]
+            if kind == "attn":
+                h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+                q, k, v, kv = attention.qkv_project(
+                    p["attn"], h, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+                    tpos[None], cfg.rope_theta, policy=pol)
+                pool = sb_c[f"pos{i}"]           # (P, ps, K, 2D)
+                pool = vx.scatter(spec, pool, kv[0], table=table_c,
+                                  pos=wpos, policy=pol)
+                full = vx.gather(spec, pool, table=row[None], policy=pol)
+                k_all, v_all = vx.transpose(
+                    vx.Segment(n=full.shape[-1], fields=2), full,
+                    policy=pol)
+                out = attention.chunk_attention(
+                    q, k_all, v_all, tpos, window=cfg.window_pattern[i])
+                x = x + (out.reshape(1, C, cfg.n_heads * cfg.hd)
+                         @ p["attn"]["wo"]).astype(x.dtype)
+                new_c[f"pos{i}"] = pool
+            elif kind == "mamba":
+                h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+                pm = dict(p["mamba"])
+                pm["in_proj"] = pm["in_proj"].reshape(cfg.d_model,
+                                                      2 * cfg.mamba.ed)
+                st, y = _tok_scan(
+                    lambda ht, st: mamba_decode_step(pm, ht, st,
+                                                     cfg.mamba),
+                    _slot_state(sb_c[f"pos{i}"]), h, x.dtype)
+                x = x + y
+                new_c[f"pos{i}"] = _put_slot(sb_c[f"pos{i}"], st)
+            elif kind == "mlstm":
+                h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+                px = dict(p["xl"])
+                px["up"] = px["up"].reshape(cfg.d_model,
+                                            2 * cfg.xlstm.m_inner)
+                st, y = _tok_scan(
+                    lambda ht, st: mlstm_decode_step(px, ht, st,
+                                                     cfg.xlstm),
+                    _slot_state(sb_c[f"pos{i}"]), h, x.dtype)
+                x = x + y
+                new_c[f"pos{i}"] = _put_slot(sb_c[f"pos{i}"], st)
+            elif kind == "slstm":
+                h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+                st, y = _tok_scan(
+                    lambda ht, st: slstm_decode_step(p["slstm"], ht, st,
+                                                     cfg.xlstm),
+                    _slot_state(sb_c[f"pos{i}"]), h, x.dtype)
+                x = x + y
+                new_c[f"pos{i}"] = _put_slot(sb_c[f"pos{i}"], st)
+            if cfg.pos_has_ffn(i):
+                x, _ = _ffn_apply(p, x, cfg, ctx, i, policy=pol)
+        return x, new_c
+
+    if cfg.scan_layers:
+        _, new_blocks = jax.lax.scan(
+            sb_step, x, (params["blocks"], cache["blocks"]))
+    else:
+        outs = []
+        for sbi in range(cfg.n_superblocks):
+            sb = jax.tree.map(lambda a: a[sbi], params["blocks"])
+            cb = jax.tree.map(lambda a: a[sbi], cache["blocks"])
+            x, nb = sb_step(x, (sb, cb))
+            outs.append(nb)
+        new_blocks = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+
+    new_pos = pos.at[slot].set(jnp.minimum(start + count, seq))
+    return {"pos": new_pos, "table": table, "free": free,
+            "free_top": free_top, "ref": ref, "blocks": new_blocks}
 
 
 def paged_decode_step(params, cache: dict, token: jax.Array,
@@ -375,6 +696,7 @@ def paged_decode_step(params, cache: dict, token: jax.Array,
         active = jnp.asarray(active, bool)
     attn_pos, ps, n_seq = _paged_geometry(cfg, cache)
     table, free, free_top = cache["table"], cache["free"], cache["free_top"]
+    ref = cache["ref"]
     # logical capacity; recurrent-only stacks carry O(1) state, no cap
     seq = n_seq * ps if attn_pos else (1 << 30)
 
@@ -393,6 +715,8 @@ def paged_decode_step(params, cache: dict, token: jax.Array,
                                == (pos // ps)[:, None])
         table = jnp.where(hit, newp[:, None], table)
         free_top = free_top - jnp.sum(need.astype(jnp.int32))
+        ref = ref.at[jnp.where(need, newp, free.shape[0])].add(
+            1, mode="drop")
     # idle slots and full sequences append nothing (dropped scatter rows)
     write_pos = jnp.where(active & (pos < seq), pos, -1)
     spec = (vx.Paged(page_size=ps, pages=n_seq, trail=2)
@@ -493,7 +817,8 @@ def paged_decode_step(params, cache: dict, token: jax.Array,
     logits = layers.unembed(x, head.astype(cfg.cdtype))
     new_pos = pos + (active & (pos < seq)).astype(jnp.int32)
     return logits, {"pos": new_pos, "table": table, "free": free,
-                    "free_top": free_top, "blocks": new_blocks}
+                    "free_top": free_top, "ref": ref,
+                    "blocks": new_blocks}
 
 
 def decode_step(params, cache: dict, token: jax.Array, cfg: ModelConfig,

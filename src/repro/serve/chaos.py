@@ -24,7 +24,15 @@ Fault vocabulary (all host-side — the jit'd step is never retraced):
                     requests slams the admission queue, forcing
                     preemption of lower-priority work;
   * ``bad_prompt``— malformed traffic (empty / oversized prompts) that
-                    must come back typed-FAILED, never crash the engine.
+                    must come back typed-FAILED, never crash the engine;
+  * ``evict``     — force prefix-trie eviction (PR 8, ``p_evict``; no-op
+                    without the trie): pages leave the radix cache while
+                    slots may still share them — refcount conservation
+                    is audited the same tick.
+
+With chunked prefill (PR 8) the ``preempt`` and ``kill`` draws land on
+mid-PREFILL slots too, exercising the ``PREFILLING -> PREEMPTED`` edge
+and chunk-resume under the same audit.
 
 The plan also mixes oversized-vs-pool prompts and zero-TTL requests so
 deadline and backpressure paths run under the same audit.
@@ -92,6 +100,9 @@ class ChaosConfig:
     p_kill: float = 0.05
     p_spike: float = 0.08
     p_bad_prompt: float = 0.08
+    # appended AFTER the original fields so a 0.0 default preserves the
+    # seeded draw sequence of pre-PR 8 plans bit-for-bit
+    p_evict: float = 0.0         # force prefix-trie eviction (PR 8)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -127,6 +138,10 @@ class FaultPlan:
                       + cfg.p_spike + cfg.p_bad_prompt):
                 self.faults.append(Fault(t, "bad_prompt",
                                          int(rng.integers(0, 2))))
+            elif r < (cfg.p_preempt + cfg.p_nan + cfg.p_kill
+                      + cfg.p_spike + cfg.p_bad_prompt + cfg.p_evict):
+                self.faults.append(Fault(t, "evict",
+                                         int(rng.integers(1, 4))))
         # background workload: (arrival tick, prompt, gen budget)
         self.workload: list[tuple[int, list[int], int]] = []
         for i in range(cfg.requests):
@@ -207,6 +222,11 @@ def run_plan(sched: Scheduler, plan: FaultPlan) -> ChaosReport:
                 bad = [] if fault.arg == 0 else \
                     [0] * (sched.max_len + 1)
                 submitted.append(sched.submit(bad, max_new_tokens=2))
+            elif fault.kind == "evict":
+                # force prefix-trie eviction (no-op without the trie):
+                # refcount conservation must survive pages leaving the
+                # trie while slots still share them
+                sched._evict_prefix(fault.arg)
         sched.tick()
         sched.cache.check_invariants()      # ALWAYS on under chaos
         tick += 1

@@ -386,4 +386,19 @@ class FleetRouter:
             deaths=self.deaths, respawns=self.respawns,
             drains=self.drains, rejoins=self.rejoins,
             migrated=self.migrated, ticks=self.tick_no)
+        # prefix-cache observability (PR 8): per-replica tries, rolled
+        # up fleet-wide — hit rate over all admissions, live shared pages
+        live_tries = [rep.sched for rep in self.replicas
+                      if rep.alive and rep.sched.prefix is not None]
+        if live_tries:
+            hits = sum(s.prefix.hits for s in live_tries)
+            misses = sum(s.prefix.misses for s in live_tries)
+            out.update(
+                prefix_hits=hits, prefix_misses=misses,
+                prefix_hit_rate=hits / (hits + misses)
+                if hits + misses else 0.0,
+                prefix_tokens_reused=sum(s.prefix.tokens_reused
+                                         for s in live_tries),
+                shared_pages=sum(s.stats().get("shared_pages", 0)
+                                 for s in live_tries))
         return out

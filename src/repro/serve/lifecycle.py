@@ -14,7 +14,11 @@ through AROUND that device state:
                                         -> MIGRATING -> QUEUED (elsewhere)
 
     plus the admission-time edges QUEUED -> {FAILED, TIMED_OUT,
-    MIGRATING} for rejected / expired / relocated requests.  Illegal
+    MIGRATING} for rejected / expired / relocated requests, and the
+    PR 8 mid-prefill edges PREFILLING -> {PREEMPTED, MIGRATING,
+    TIMED_OUT}: chunked prefill interleaves with decode ticks, so a
+    request can be preempted, migrated, or expire BETWEEN chunks —
+    it no longer has to fail or hold pages to completion.  Illegal
     transitions raise — the chaos harness (serve/chaos.py) relies on
     this: "every admitted request terminates in a typed state" is only
     meaningful if states cannot be corrupted silently.
@@ -75,8 +79,17 @@ _TRANSITIONS: dict[RequestState, frozenset[RequestState]] = {
                                     RequestState.FAILED,
                                     RequestState.TIMED_OUT,
                                     RequestState.MIGRATING}),
+    # PREFILLING -> PREEMPTED / MIGRATING (PR 8): prefill now runs in
+    # page-sized chunks interleaved with decode ticks, so a mid-prefill
+    # request is preemptible under page pressure and migratable off a
+    # dying replica — resume re-runs the chunks (bit-identical: same
+    # fixed-width jit) instead of holding pages through the outage.
+    # TIMED_OUT covers a deadline expiring between chunks.
     RequestState.PREFILLING: frozenset({RequestState.RUNNING,
-                                        RequestState.FAILED}),
+                                        RequestState.FAILED,
+                                        RequestState.PREEMPTED,
+                                        RequestState.MIGRATING,
+                                        RequestState.TIMED_OUT}),
     RequestState.RUNNING: frozenset({RequestState.FINISHED,
                                      RequestState.TIMED_OUT,
                                      RequestState.FAILED,

@@ -20,6 +20,18 @@ decode step degrades locally (the starved slot's appends drop, no page
 is ever aliased between slots) and the condition is observable as
 ``free_pages() == 0``; ``insert_prefill`` refuses outright rather than
 starve a prompt.
+
+PR 8 adds PREFIX SHARING on top of the same pool: pages carry a device
+refcount (``state["ref"]``), a slot can ADOPT another request's pages
+(``adopt_prefix`` points its table row at a shared run — the fused
+gather already reads through the table, so sharing costs zero new
+device work), a partial tail page is FORKED copy-on-write
+(``fork_page``) before the borrower ever writes into it, and the
+radix trie (serve/prefix_cache.py) holds an external +1 pin per
+published page (``addref`` / ``deref_pages``).  ``check_invariants``
+audits refcount conservation — every page's refcount equals the number
+of table entries referencing it plus the trie pin — via the
+``external_ref`` provider hook the scheduler installs.
 """
 from __future__ import annotations
 
@@ -27,6 +39,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels._common import pytree_nbytes
 from repro.models import decode as dec
@@ -73,17 +86,39 @@ class PagedCache:
         # true length rides in as a traced operand, so mixed-length
         # traffic costs at most pages_per_seq distinct traces
         self._insert = {}
+        # prefix-sharing entry points (PR 8): page-run adoption, CoW tail
+        # fork, and the trie's external refcount pin — all donate the
+        # state like release/insert do
+        self._adopt = jax.jit(
+            lambda c, s, ids: dec.paged_adopt_prefix(cfg, c, s, ids),
+            donate_argnums=0)
+        self._fork = jax.jit(
+            lambda c, s, i, src, p: dec.paged_fork_page(
+                cfg, c, s, i, src, pos_to=p),
+            donate_argnums=0)
+        self._addref = jax.jit(
+            lambda c, ids: dec.paged_addref(cfg, c, ids),
+            donate_argnums=0)
+        self._deref = jax.jit(
+            lambda c, ids: dec.paged_deref_pages(cfg, c, ids),
+            donate_argnums=0)
+        # external refcount provider (set by the scheduler to the prefix
+        # trie's page_refs): pages pinned OUTSIDE any slot's table that
+        # the conservation audit must account for
+        self.external_ref = None
         self.debug_invariants = debug_invariants
         self.invariant_checks = 0
 
     # -- invariants ---------------------------------------------------------
     def check_invariants(self) -> None:
-        """Audit page aliasing / free-stack conservation / pos-vs-table
-        occupancy on the LIVE device state (one small fetch — table,
-        free stack, positions; never the pool).  Raises
-        :class:`InvariantViolation` listing every violation found."""
+        """Audit page aliasing / refcount conservation / free-stack
+        conservation / pos-vs-table occupancy on the LIVE device state
+        (one small fetch — table, free stack, refcounts, positions;
+        never the pool).  Raises :class:`InvariantViolation` listing
+        every violation found."""
         self.invariant_checks += 1
-        bad = dec.paged_invariants(self.cfg, self.state)
+        ext = self.external_ref() if self.external_ref is not None else None
+        bad = dec.paged_invariants(self.cfg, self.state, external_ref=ext)
         if bad:
             raise InvariantViolation(
                 "paged pool invariants violated:\n  " + "\n  ".join(bad))
@@ -155,3 +190,60 @@ class PagedCache:
         self.state = fn(self.state, jnp.int32(slot), cache_states,
                         jnp.int32(length))
         self._maybe_check()
+
+    # -- prefix sharing (jit'd, fixed-width operands: no retrace) -----------
+    def _padded_ids(self, page_ids) -> jax.Array:
+        arr = np.full((self.pages_per_seq,), -1, np.int32)
+        arr[:len(page_ids)] = np.asarray(page_ids, np.int32)
+        return jnp.asarray(arr)
+
+    def adopt_prefix(self, slot: int, page_ids) -> None:
+        """Point ``slot``'s table row at a run of SHARED pages (each gets
+        +1 refcount) and set its position past them.  The pages are
+        read-only to this slot until released — the partial tail, if
+        any, must be forked (:meth:`fork_page`) before any write."""
+        if len(page_ids) > self.pages_per_seq:
+            raise ValueError(f"prefix run of {len(page_ids)} pages "
+                             f"exceeds pages_per_seq={self.pages_per_seq}")
+        self.state = self._adopt(self.state, jnp.int32(slot),
+                                 self._padded_ids(page_ids))
+        self._maybe_check()
+
+    def fork_page(self, slot: int, logical_idx: int, src_page: int,
+                  pos_to: int) -> None:
+        """Copy-on-write fork: pop a fresh page, copy ``src_page``'s
+        beats into it across every layer pool, and point ``slot``'s
+        ``logical_idx`` table entry at the COPY (position set to
+        ``pos_to``).  The shared source is never written in place."""
+        if self.free_pages() < 1:
+            raise RuntimeError("page pool exhausted: no free page to "
+                               "fork the shared tail into")
+        self.state = self._fork(self.state, jnp.int32(slot),
+                                jnp.int32(logical_idx),
+                                jnp.int32(src_page), jnp.int32(pos_to))
+        self._maybe_check()
+
+    def addref(self, page_ids) -> None:
+        """External +1 pin per page (the trie publishing pages)."""
+        for i in range(0, len(page_ids), self.pages_per_seq):
+            self.state = self._addref(
+                self.state,
+                self._padded_ids(page_ids[i:i + self.pages_per_seq]))
+        self._maybe_check()
+
+    def deref_pages(self, page_ids) -> None:
+        """Drop one reference per page; orphans (refcount hits zero) go
+        back on the free stack — the trie-eviction release path."""
+        for i in range(0, len(page_ids), self.pages_per_seq):
+            self.state = self._deref(
+                self.state,
+                self._padded_ids(page_ids[i:i + self.pages_per_seq]))
+        self._maybe_check()
+
+    def page_refcounts(self) -> np.ndarray:
+        """Host copy of the device refcounts (tests / stats)."""
+        return np.asarray(self.state["ref"])
+
+    def table_row(self, slot: int) -> np.ndarray:
+        """Host copy of one slot's page-table row (publish path)."""
+        return np.asarray(self.state["table"][slot])

@@ -41,6 +41,33 @@ The hardened REQUEST LIFECYCLE (serve/lifecycle.py) layers on top:
     invariant auditing (``PagedCache.check_invariants``), always-on
     under the chaos harness (serve/chaos.py).
 
+PR 8 — PREFIX SHARING and CHUNKED PREFILL:
+
+  * Prompts now prefill in PAGE-SIZED CHUNKS through ONE fixed-width
+    jit (``models/decode.paged_prefill_chunk`` — token width is the
+    page size, the true count and slot ride in as traced operands, so
+    every chunk of every prompt reuses the same trace and the same
+    access plans).  ``tick`` advances each mid-prefill slot by
+    ``chunk_pages`` chunks BETWEEN decode steps, so a long prompt no
+    longer monopolizes the engine before the first decode token: the
+    active set keeps stepping while admission streams pages in.  A
+    mid-prefill slot is preemptible (``PREFILLING -> PREEMPTED``) and
+    migratable — resume re-runs the chunks, which are bit-identical.
+  * With ``prefix_cache=True`` (attention-only stacks) a radix trie
+    (serve/prefix_cache.py) maps token prefixes to refcounted page
+    runs: admission ADOPTS shared full pages (the slot's table points
+    at them — zero new device work), FORKS a copy-on-write private
+    tail when the match ends mid-page, and completed prefills PUBLISH
+    their prompt pages back to the trie.  Release reclaims only
+    orphaned pages; under page pressure the trie evicts LRU unpinned
+    leaves before any running slot is preempted.  Decode over adopted
+    pages is BIT-EXACT vs a private copy — the gather reads the same
+    bits through the same table mechanism.
+  * ``AdmissionError.retry_after`` now folds in the pending prefill
+    backlog (queued + in-flight chunks, measured in chunk budgets per
+    tick) on top of the decode-step EWMA, so backpressure hints stay
+    honest when long prompts are queued.
+
 Everything device-side is jit'd ONCE: per-step membership changes ride
 in as array operands (token vector, active mask, page table), so steady
 state pays zero retraces and zero plan-cache misses
@@ -62,6 +89,7 @@ from repro.models.transformer import ModelConfig
 from repro.serve.lifecycle import (AdmissionError, AdmissionQueue, Request,
                                    RequestState)
 from repro.serve.paged_cache import PagedCache
+from repro.serve.prefix_cache import PrefixCache
 
 
 def sample_tokens(logits: jax.Array, keys, *, temperature: float = 0.0,
@@ -101,6 +129,14 @@ class Scheduler:
     page pool after every mutation, and ``clock`` is the injectable
     time source deadlines are measured against (chaos tests drive a
     fake clock).
+
+    Prefix / prefill knobs (PR 8): ``prefix_cache=True`` enables the
+    radix prefix cache (attention-only stacks; silently off elsewhere
+    — recurrent state cannot ride in shared pages), ``chunk_pages``
+    is the per-tick prefill budget in pages (``tick`` advances each
+    mid-prefill slot by that many chunks between decode steps; the
+    legacy ``add_request`` still prefills to completion before
+    returning, through the same chunk jit).
     """
 
     def __init__(self, cfg: ModelConfig, params, *, slots: int,
@@ -112,6 +148,7 @@ class Scheduler:
                  guard_nan: bool = False,
                  watchdog: StepWatchdog | None = None,
                  debug_invariants: bool = False,
+                 prefix_cache: bool = False, chunk_pages: int = 1,
                  clock: Callable[[], float] = time.monotonic):
         if cfg.encoder is not None:
             raise NotImplementedError("paged serving covers decoder-only "
@@ -127,6 +164,8 @@ class Scheduler:
         if top_k is not None and top_k <= 0:
             raise ValueError(f"top_k must be a positive int or None, "
                              f"got {top_k}")
+        if chunk_pages < 1:
+            raise ValueError(f"chunk_pages must be >= 1, got {chunk_pages}")
         from repro import vx
         self.cfg, self.params = cfg, params
         self.slots, self.max_len = slots, max_len
@@ -155,9 +194,27 @@ class Scheduler:
             lambda ks: jnp.swapaxes(jax.vmap(
                 lambda k: jax.random.split(k, 2))(ks), 0, 1))
         self._keys = jax.random.split(jax.random.key(seed), slots)
-        from repro.dist.sharding import local_ctx
-        from repro.serve.engine import jit_prefill
-        self._prefill = jit_prefill(cfg, local_ctx(), None, None)
+        # chunked prefill: ONE fixed-width jit (token width = page size;
+        # slot and true count are traced operands) covers every chunk of
+        # every prompt — the same trace and the same vx access plans,
+        # so prefill adds nothing to the steady-state plan-cache
+        # footprint.  State donated like the decode step.
+        self._chunk = jax.jit(
+            lambda p, c, t, s, n: dec.paged_prefill_chunk(
+                p, c, t, cfg, None, slot=s, count=n),
+            donate_argnums=1)
+        self.chunk_pages = int(chunk_pages)
+        self._prefilling: dict[int, int] = {}   # slot -> prefilled tokens
+        self.prefill_chunks = 0
+        # prefix sharing is only sound when every layer's state lives in
+        # the page pool: recurrent blocks fold the prefix into per-slot
+        # state that pages cannot carry, so the trie is gated to
+        # attention-only stacks (windowed included — pages hold full KV)
+        self.prefix: PrefixCache | None = None
+        if prefix_cache and all(k == "attn" for k in cfg.block_pattern):
+            self.prefix = PrefixCache(self.cache.page_size,
+                                      self.cache.num_pages)
+            self.cache.external_ref = self.prefix.page_refs
         self.active = [False] * slots
         self.tokens: list[list[int]] = [[] for _ in range(slots)]
         self.last_logits = None      # (slots, V) of the latest step
@@ -168,7 +225,7 @@ class Scheduler:
         self.watchdog = watchdog
         self.queue = AdmissionQueue(
             queue_depth if queue_depth is not None else 4 * slots,
-            retry_after_hint=lambda: self._step_ewma)
+            retry_after_hint=self._retry_after)
         self.requests: dict[int, Request] = {}     # rid -> Request
         self._slot_req: list[Request | None] = [None] * slots
         # replay cursor: index into tokens[s] of the NEXT input token.
@@ -225,45 +282,176 @@ class Scheduler:
         req.arrival_seq = next(self.queue._seq)
         self.requests[req.rid] = req
         try:
-            return self._admit_into(req)
+            return self._admit_into(req, sync=True)
         except AdmissionError as e:
-            req.to(RequestState.FAILED, error=str(e))
+            if not req.terminal:
+                req.to(RequestState.FAILED, error=str(e))
             raise
 
-    def _admit_into(self, req: Request) -> int:
-        """Place a QUEUED request into a free slot: prefill its ORIGINAL
-        prompt (identical to first admission — bit-exact restart state),
-        arm the replay cursor over any previously generated tokens, and
-        mark it RUNNING.  Raises AdmissionError when capacity is
+    def _admit_into(self, req: Request, *, sync: bool = False) -> int:
+        """Place a QUEUED request into a free slot and start its
+        CHUNKED prefill: the prefix trie serves any shared full pages
+        (adopted, +1 refcount each) and a copy-on-write fork of a
+        partially-matching tail; the rest streams in page-sized chunks
+        — synchronously to completion when ``sync`` (the legacy
+        ``add_request`` surface), otherwise one ``chunk_pages`` budget
+        per ``tick`` interleaved with decode steps.  Resume after
+        preemption re-runs the SAME chunks (one fixed jit — bit-exact
+        restart state) and arms the replay cursor over previously
+        generated tokens.  Raises AdmissionError when capacity is
         missing; the caller (tick) may preempt and retry."""
         toks = req.tokens
         slot = self.free_slot()
         if slot is None:
             raise AdmissionError("no free slot",
-                                 retry_after=self._step_ewma or 0.0)
+                                 retry_after=self._retry_after())
         # pages are allocated lazily (prefill now, decode appends later):
         # admit against RESERVED pages — what live requests will need for
-        # their current tokens — not just the instantaneous free count
+        # their current tokens plus pages locked in the trie — not just
+        # the instantaneous free count.  Trie orphans are evictable, so
+        # under pressure LRU leaves are dropped before refusing.
         need = self._pages_for(toks)
-        if self.cache.num_pages - self._reserved_pages() < need:
+        avail = self.cache.num_pages - self._reserved_pages()
+        if avail < need:
+            avail += self._evict_prefix(need - avail)
+        if avail < need:
             raise AdmissionError(
                 "page pool exhausted; finish a request or grow num_pages",
-                retry_after=self._step_ewma or 0.0)
+                retry_after=self._retry_after())
         req.to(RequestState.PREFILLING)
-        try:
-            if len(req.prompt) > 1:
-                self._prefill_into(slot, req.prompt[:-1])
-        except Exception as e:       # noqa: BLE001 — typed terminal state
-            req.to(RequestState.FAILED, error=f"prefill: {e}")
-            raise
         self.active[slot] = True
         self.tokens[slot] = list(toks)
-        self._fed[slot] = len(req.prompt) - 1
-        self._pos[slot] = len(req.prompt) - 1
+        self._fed[slot] = 0
+        self._pos[slot] = 0
         self._slot_req[slot] = req
         req.slot = slot
-        req.to(RequestState.RUNNING)
+        try:
+            self._begin_prefill(slot, req)
+            if sync:
+                while slot in self._prefilling:
+                    if not self._advance_prefill(slot, self.chunk_pages):
+                        raise AdmissionError(
+                            "page pool exhausted mid-prefill; finish a "
+                            "request or grow num_pages",
+                            retry_after=self._retry_after())
+        except AdmissionError:
+            self._release_slot(slot)
+            raise
+        except Exception as e:       # noqa: BLE001 — typed terminal state
+            req.to(RequestState.FAILED, error=f"prefill: {e}")
+            self._release_slot(slot)
+            raise
         return slot
+
+    # -- chunked prefill ----------------------------------------------------
+    def _begin_prefill(self, slot: int, req: Request) -> None:
+        """Arm the prefill cursor: serve whatever prefix the trie holds
+        (full-page run adopted; partial tail forked CoW when a free
+        page exists — otherwise the tail is simply recomputed), then
+        leave the remainder to ``_advance_prefill``.  Single-token
+        prompts have nothing to prefill and go straight to RUNNING."""
+        prompt = req.prompt
+        pre = prompt[:-1]
+        if not pre:
+            self._finish_prefill(slot)
+            return
+        done = 0
+        if self.prefix is not None:
+            m = self.prefix.acquire(slot, pre)
+            if m.run:
+                self.cache.adopt_prefix(slot, list(m.run))
+                done = len(m.run) * self.cache.page_size
+            if m.fork_src >= 0 and self.cache.free_pages() >= 1:
+                self.cache.fork_page(slot, len(m.run), m.fork_src,
+                                     done + m.fork_len)
+                done += m.fork_len
+        self._prefilling[slot] = done
+        self._pos[slot] = done
+        if done >= len(pre):
+            self._finish_prefill(slot)
+
+    def _advance_prefill(self, slot: int, chunks: int) -> bool:
+        """Run up to ``chunks`` page-sized prefill chunks for ``slot``
+        through the ONE fixed-width chunk jit.  Returns False when the
+        pool cannot back the next chunk even after trie eviction — the
+        caller preempts the slot (PREFILLING -> PREEMPTED) rather than
+        let the device allocator starve the prompt silently."""
+        req = self._slot_req[slot]
+        pre = req.prompt[:-1]
+        ps = self.cache.page_size
+        c = self._prefilling[slot]
+        for _ in range(chunks):
+            if c >= len(pre):
+                break
+            n = min(ps, len(pre) - c)
+            newp = self.cache.pages_needed(c + n) - \
+                (0 if c == 0 else -(-c // ps))
+            if self.cache.free_pages() < newp:
+                self._evict_prefix(newp - self.cache.free_pages())
+            if self.cache.free_pages() < newp:
+                return False
+            tok = jnp.asarray(pre[c:c + n] + [0] * (ps - n), jnp.int32)
+            self.cache.state = self._chunk(self.params, self.cache.state,
+                                           tok, jnp.int32(slot),
+                                           jnp.int32(n))
+            self.cache._maybe_check()
+            c += n
+            self._prefilling[slot] = c
+            self._pos[slot] = c
+            self.prefill_chunks += 1
+        if c >= len(pre):
+            self._finish_prefill(slot)
+        return True
+
+    def _finish_prefill(self, slot: int) -> None:
+        """Prefill complete: publish the prompt's full pages to the trie
+        (newly inserted ones take the trie's +1 device pin), arm the
+        replay cursor, and mark the request RUNNING — the next decode
+        step feeds the last prompt token through the ordinary jit."""
+        req = self._slot_req[slot]
+        self._prefilling.pop(slot, None)
+        pre = req.prompt[:-1]
+        if self.prefix is not None and pre:
+            new = self.prefix.publish(slot, pre,
+                                      self.cache.table_row(slot))
+            if new:
+                self.cache.addref(new)
+        self._fed[slot] = len(req.prompt) - 1
+        self._pos[slot] = len(req.prompt) - 1
+        req.to(RequestState.RUNNING)
+
+    def _evict_prefix(self, n_pages: int) -> int:
+        """Drop up to ``n_pages`` LRU unpinned trie leaves and return
+        how many pages that freed — the page-pressure valve that runs
+        BEFORE any running slot is preempted."""
+        if self.prefix is None or n_pages <= 0:
+            return 0
+        ids = self.prefix.evict(n_pages)
+        if ids:
+            self.cache.deref_pages(ids)
+        return len(ids)
+
+    def _pending_prefill_pages(self) -> int:
+        """Prefill chunks still owed: in-flight cursors plus every
+        queued prompt — what a newly refused client is waiting behind."""
+        ps = self.cache.page_size
+        pend = 0
+        for s, c in self._prefilling.items():
+            req = self._slot_req[s]
+            if req is not None:
+                pend += -(-max(len(req.prompt) - 1 - c, 0) // ps)
+        for r in self.queue._q:
+            pend += -(-max(len(r.prompt) - 1, 0) // ps)
+        return pend
+
+    def _retry_after(self) -> float:
+        """Honest backpressure hint: decode-step EWMA scaled by the
+        pending prefill backlog (in per-tick chunk budgets) — a long
+        queued prompt delays capacity by its chunk count, not by one
+        decode step."""
+        ew = self._step_ewma or 0.0
+        return ew * (1.0 + self._pending_prefill_pages()
+                     / max(self.chunk_pages, 1))
 
     def submit(self, prompt: Sequence[int], *, max_new_tokens: int | None
                = None, priority: int = 0, deadline: float | None = None,
@@ -322,10 +510,12 @@ class Scheduler:
         return best[1] if best else None
 
     def preempt(self, slot: int) -> Request:
-        """Evict a running slot: release its pages back to the free
-        stack and requeue its request carrying prompt + generated so
-        far.  ``tick`` will resume it (prompt re-prefilled bit-exactly,
-        generated tokens replayed through the ordinary decode step)."""
+        """Evict a running OR mid-prefill slot: release its pages back
+        to the free stack (shared prefix pages survive under the trie's
+        refcount pin) and requeue its request carrying prompt +
+        generated so far.  ``tick`` will resume it (prompt re-prefilled
+        bit-exactly through the same chunk jit, generated tokens
+        replayed through the ordinary decode step)."""
         req = self._slot_req[slot]
         if req is None or not self.active[slot]:
             raise ValueError(f"slot {slot} is not running a request")
@@ -352,6 +542,9 @@ class Scheduler:
     def _release_slot(self, slot: int) -> None:
         if self.active[slot]:
             self.cache.release(slot)
+        if self.prefix is not None:
+            self.prefix.release(slot)
+        self._prefilling.pop(slot, None)
         self.active[slot] = False
         self.tokens[slot] = []
         self._fed[slot] = 0
@@ -364,12 +557,16 @@ class Scheduler:
 
         Slots behind their replay cursor (resumed after preemption) feed
         the next REPLAYED token and discard the sampled output until
-        they catch up — same jit'd step, zero retraces."""
+        they catch up — same jit'd step, zero retraces.  Mid-prefill
+        slots are masked out exactly like idle ones (they occupy a slot
+        but decode nothing until their chunks complete)."""
         t0 = time.perf_counter()
+        decoding = [self.active[s] and s not in self._prefilling
+                    for s in range(self.slots)]
         cur = jnp.asarray([self.tokens[s][self._fed[s]]
-                           if self.active[s] else 0
+                           if decoding[s] else 0
                            for s in range(self.slots)], jnp.int32)
-        act = jnp.asarray(self.active)
+        act = jnp.asarray(decoding)
         logits, self.cache.state = self._step(self.params,
                                               self.cache.state, cur, act)
         if self._taint is not None:      # chaos-only NaN injection hook
@@ -393,7 +590,7 @@ class Scheduler:
         seq_cap = self.cache.pages_per_seq * self.cache.page_size
         for s in range(self.slots):
             t = int(nxt[s])
-            if not self.active[s]:
+            if not decoding[s]:
                 out.append(-1)
                 continue
             if fin is not None and not fin[s]:
@@ -421,7 +618,8 @@ class Scheduler:
     def tick(self) -> list[Request]:
         """One engine iteration: expire stale queued work, pump
         admission (preempting a lower-priority victim under page
-        pressure when ``preemption`` is on), step the active set, retire
+        pressure when ``preemption`` is on), advance each mid-prefill
+        slot by ``chunk_pages`` chunks, step the active set, retire
         finished / expired requests.  Returns requests that went
         TERMINAL this tick."""
         now = self.clock()
@@ -448,16 +646,35 @@ class Scheduler:
                             pass       # still starved: requeue, stop
                 self.queue.push(req, force=True)   # retry next tick
                 break
+        # chunked-prefill pump: each mid-prefill slot advances by the
+        # per-tick chunk budget, interleaved with the decode step below
+        # — a long prompt streams in while the active set keeps
+        # generating.  A slot the pool cannot back even after trie
+        # eviction is preempted (PREFILLING -> PREEMPTED) and resumes
+        # when pages free up, rather than silently starving.
+        for s in list(self._prefilling):
+            if not self.active[s]:
+                continue
+            if not self._advance_prefill(s, self.chunk_pages):
+                if self.preemption:
+                    self.preempt(s)
+                else:
+                    self.fail_slot(s, "page pool exhausted mid-prefill")
         # in-step page-pressure guard: if this step's page-boundary
         # crossers outnumber the free stack, the device allocator would
-        # degrade locally (starved appends drop).  Preempt victims to
-        # keep every surviving slot's stream intact instead.
+        # degrade locally (starved appends drop).  Evict trie orphans
+        # first (they free pages without killing work), then preempt
+        # victims to keep every surviving slot's stream intact.
         if self.preemption and any(self.active):
             ps = self.cache.page_size
             n_seq = self.cache.pages_per_seq
             crossers = [s for s in range(self.slots) if self.active[s]
+                        and s not in self._prefilling
                         and self._pos[s] % ps == 0
                         and self._pos[s] // ps < n_seq]
+            short = len(crossers) - self.cache.free_pages()
+            if short > 0:
+                self._evict_prefix(short)
             for _ in range(self.slots):
                 live = [s for s in crossers if self.active[s]]
                 if len(live) <= self.cache.free_pages():
@@ -466,7 +683,8 @@ class Scheduler:
                 if victim is None or (victim in live and len(live) == 1):
                     break              # nothing to gain: degrade locally
                 self.preempt(victim)
-        if any(self.active):
+        if any(self.active[s] and s not in self._prefilling
+               for s in range(self.slots)):
             self.step()
         # retire: generation budget reached, or running past deadline
         for s in range(self.slots):
@@ -543,7 +761,7 @@ class Scheduler:
             req = self._slot_req[s]
             if req is not None and not req.terminal:
                 req.tokens = list(self.tokens[s])
-                req.to(RequestState.MIGRATING)
+                req.to(RequestState.MIGRATING)   # mid-prefill slots too
                 req.slot = None
                 out.append(req)
                 self.requests.pop(req.rid, None)
@@ -552,6 +770,7 @@ class Scheduler:
             self._fed[s] = 0
             self._pos[s] = 0
             self._slot_req[s] = None
+        self._prefilling.clear()   # cursors die with the replica's pool
         out.extend(self.migrate_queued())
         return out
 
@@ -564,33 +783,16 @@ class Scheduler:
                    free_pages=self.cache.free_pages(),
                    nan_failures=self.nan_failures,
                    invariant_checks=self.cache.invariant_checks,
-                   step_ewma_s=self._step_ewma)
+                   step_ewma_s=self._step_ewma,
+                   prefilling=len(self._prefilling),
+                   prefill_chunks=self.prefill_chunks)
+        if self.prefix is not None:
+            out["prefix"] = self.prefix.stats()
+            out["shared_pages"] = int(
+                np.sum(self.cache.page_refcounts() > 1))
         if self.watchdog is not None:
             out["watchdog_breaches"] = self.watchdog.breaches
         return out
-
-    def _prefill_into(self, slot: int, toks: list[int]) -> None:
-        # The ONE jit'd prefill (engine.jit_prefill, mesh-less ctx).
-        # Windowless attention-only stacks pad the prompt to a page
-        # multiple so the prefill retraces at most pages_per_seq shapes
-        # (the padded tail beats are masked by eff_len and overwritten in
-        # place).  Anything else prefills at the TRUE length: a ring
-        # window would be trimmed at the padded length (losing real
-        # in-window beats) and recurrent state would absorb the pad
-        # tokens irreversibly.
-        cfg = self.cfg
-        pad_safe = (all(k == "attn" for k in cfg.block_pattern)
-                    and all(w is None for w in cfg.window_pattern))
-        if pad_safe:
-            ps = self.cache.page_size
-            state_len = -(-len(toks) // ps) * ps
-        else:
-            state_len = len(toks)
-        tokens = jnp.asarray(toks + [0] * (state_len - len(toks)),
-                             jnp.int32)[None]
-        _, states = self._prefill(self.params, {"tokens": tokens})
-        self.cache.insert_prefill(slot, states, len(toks),
-                                  state_len=state_len)
 
     # -- reclamation --------------------------------------------------------
     def finish(self, slot: int) -> list[int]:

@@ -323,6 +323,37 @@ def test_migration_allclose_windowed():
     _migration_oracle("gemma3-12b", comparer=close)
 
 
+def test_midprefill_failover_resumes_bit_exact():
+    """PR 8: kill a replica while its resident request is still
+    PREFILLING (chunked prefill in flight) — the request migrates
+    BETWEEN chunks, re-prefills on the target replica through the same
+    chunk jit, and the final stream is bit-exact vs the uninterrupted
+    single-replica oracle."""
+    prompt = [3, 5, 7, 9, 2, 4, 6, 8, 1, 3, 5, 7, 9]   # pre = 3 chunks
+    gen = 6
+
+    fa = _fleet(replicas=1, max_len=32, chunk_pages=1)
+    ra = fa.submit(prompt, max_new_tokens=gen)
+    _drain(fa, [ra])
+    assert ra.state is RequestState.FINISHED
+
+    fb = _fleet(replicas=2, max_len=32, chunk_pages=1)
+    rb = fb.submit(prompt, max_new_tokens=gen)
+    killed = False
+    for _ in range(64):
+        if rb.terminal:
+            break
+        if not killed and rb.state is RequestState.PREFILLING:
+            fb.kill_replica(rb.replica, reason="mid-prefill kill")
+            killed = True
+        fb.tick()
+        fb.audit()
+    assert killed, "request never observed mid-prefill"
+    assert rb.state is RequestState.FINISHED
+    assert rb.migrations == 1
+    assert rb.tokens == ra.tokens
+
+
 # --------------------------- fleet audit negatives ---------------------------
 
 def test_audit_catches_double_residency():

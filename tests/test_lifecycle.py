@@ -59,6 +59,21 @@ def test_request_state_machine_rejects_illegal_edges():
             r.to(s)
 
 
+def test_prefilling_preempt_edge_legal_but_not_a_shortcut():
+    """PR 8 regression: chunked prefill makes PREFILLING -> PREEMPTED a
+    legal edge (a mid-prefill slot can be evicted between chunks and
+    resumed later), but prefill still cannot short-circuit the machine —
+    FINISHED or a direct hop back to QUEUED stays illegal."""
+    r = Request(prompt=[1, 2, 3])
+    r.to(RequestState.PREFILLING)
+    r.to(RequestState.PREEMPTED)            # evicted between chunks
+    r.to(RequestState.QUEUED)               # requeued for resume
+    r.to(RequestState.PREFILLING)
+    for bad in (RequestState.FINISHED, RequestState.QUEUED):
+        with pytest.raises(LifecycleError, match="illegal transition"):
+            r.to(bad)
+
+
 def test_request_generated_and_expiry():
     r = Request(prompt=[1, 2], deadline=5.0)
     assert r.generated == 0
@@ -288,6 +303,9 @@ def test_preemption_victim_policy_priority_then_pages():
     lo_big = sched.submit([2, 3, 4, 5, 6, 7, 8, 9], max_new_tokens=50,
                           priority=0)
     hi = sched.submit([9, 8], max_new_tokens=50, priority=5)
+    # chunked prefill (PR 8): lo_big's 7 prefill tokens = 2 page-sized
+    # chunks at the default chunk_pages=1 budget -> RUNNING on tick 2
+    sched.tick()
     sched.tick()
     assert all(r.state is RequestState.RUNNING
                for r in (lo_small, lo_big, hi))

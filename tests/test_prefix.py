@@ -1,0 +1,268 @@
+"""Prefix-sharing property suite (PR 8): two requests sharing a K-page
+prompt prefix occupy exactly K shared pages (asserted through the device
+refcount audit: donor + borrower + trie pin), partial-tail overlap forks
+ONE copy-on-write page, decode stays BIT-EXACT vs the non-shared paged
+oracle on pad-safe stacks, mid-prefill preemption resumes bit-exactly,
+the trie evicts LRU orphans under pool pressure, refcount conservation
+holds under seeded chaos plans that preempt/kill/evict during chunked
+prefill, and the steady-state device path is untouched (zero plan-cache
+misses, single decode jit trace)."""
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.models.transformer import init_params
+from repro.serve.chaos import ChaosConfig, FaultPlan, run_plan
+from repro.serve.lifecycle import (AdmissionError, RequestState,
+                                   TERMINAL_STATES)
+from repro.serve.scheduler import Scheduler
+
+SEEDS = (0, 1, 2)
+
+# 12 tokens = exactly 3 pages at page_size=4 — the shared system prompt
+SHARED = [3, 5, 7, 9, 2, 4, 6, 8, 1, 3, 5, 7]
+
+
+@functools.lru_cache(maxsize=None)
+def _cfg_params(arch="qwen3-0.6b"):
+    cfg = get_arch(arch).smoke
+    return cfg, init_params(cfg, jax.random.key(0))
+
+
+def _sched(arch="qwen3-0.6b", **kw):
+    cfg, params = _cfg_params(arch)
+    kw.setdefault("slots", 2)
+    kw.setdefault("max_len", 32)
+    kw.setdefault("page_size", 4)
+    kw.setdefault("num_pages", 16)
+    kw.setdefault("debug_invariants", True)
+    kw.setdefault("prefix_cache", True)
+    return Scheduler(cfg, params, **kw)
+
+
+class _StepClock:
+    def __init__(self, dt=0.01):
+        self.t, self.dt = 0.0, dt
+
+    def __call__(self):
+        self.t += self.dt
+        return self.t
+
+
+# --------------------------- the sharing property ---------------------------
+
+def test_k_page_prefix_occupies_k_shared_pages():
+    """The headline property: after the donor publishes a 3-page prefix
+    and the borrower adopts it, the pool holds the prefix ONCE — each
+    shared page's refcount is exactly donor + borrower + trie pin, and
+    every other allocated page is private (ref == 1)."""
+    sched = _sched()
+    sched.add_request(SHARED + [11, 13])
+    ref = sched.cache.page_refcounts()
+    # donor published: each full prefix page is pinned by donor + trie
+    assert int((ref == 2).sum()) == 3, ref[ref > 0]
+    sb = sched.add_request(SHARED + [12, 10])
+    st = sched.stats()
+    assert st["prefix"]["hits"] >= 1
+    assert st["prefix"]["tokens_reused"] >= 12
+    ref = sched.cache.page_refcounts()
+    assert int((ref == 3).sum()) == 3, ref[ref > 0]   # K shared pages
+    assert int((ref > 3).sum()) == 0                   # and no more
+    assert st["shared_pages"] == 3
+    # the borrower's tail (the token past the shared prefix) is private
+    row = sched.cache.table_row(sb)
+    tail = int(row[3])
+    assert tail >= 0 and int(ref[tail]) == 1
+    sched.cache.check_invariants()
+
+
+def test_shared_pages_survive_donor_release():
+    """Finishing the donor must NOT reclaim the shared pages out from
+    under the borrower: refcounts drop by one, the trie pin keeps the
+    prefix cached, and the borrower keeps decoding on intact KV."""
+    sched = _sched()
+    sa = sched.add_request(SHARED + [11, 13])
+    sb = sched.add_request(SHARED + [12, 10])
+    first = sched.step()[sb]
+    sched.finish(sa)
+    ref = sched.cache.page_refcounts()
+    assert int((ref == 2).sum()) == 3        # borrower + trie remain
+    sched.cache.check_invariants()
+    # the borrower still decodes greedily off the shared KV
+    nxt = sched.step()[sb]
+    assert int(first) >= 0 and int(nxt) >= 0
+
+
+def test_prefix_decode_bit_exact_vs_nonshared_oracle():
+    """Borrowed pages are the SAME physical KV the donor wrote, so the
+    borrower's greedy stream must be bit-exact vs a scheduler that never
+    shares (prefix_cache=False) — on a pad-safe stack."""
+    pa = SHARED + [11, 13]
+    pb = SHARED + [12, 10]
+    shared, oracle = _sched(), _sched(prefix_cache=False)
+    outs = {}
+    for name, s in (("shared", shared), ("oracle", oracle)):
+        a, b = s.add_request(list(pa)), s.add_request(list(pb))
+        outs[name] = [(step[a], step[b]) for step in
+                      (s.step() for _ in range(6))]
+        s.cache.check_invariants()
+    assert shared.stats()["prefix"]["hits"] >= 1
+    assert oracle.prefix is None
+    assert outs["shared"] == outs["oracle"]
+
+
+def test_partial_tail_fork_is_copy_on_write_and_bit_exact():
+    """Share 6 tokens = 1 full page + 2 tokens into the donor's second
+    page: admission adopts page one, FORKS the partially-matching page
+    (copy-on-write — the donor's page is never written through), and the
+    borrower's stream is bit-exact vs the non-shared oracle."""
+    pa = [3, 5, 7, 9, 2, 4, 6, 8, 11]      # pre = 8 tokens -> 2 pages
+    pb = [3, 5, 7, 9, 2, 4, 9, 9, 12]      # diverges 2 tokens into page 2
+    shared, oracle = _sched(), _sched(prefix_cache=False)
+    outs = {}
+    for name, s in (("shared", shared), ("oracle", oracle)):
+        a, b = s.add_request(list(pa)), s.add_request(list(pb))
+        outs[name] = [(step[a], step[b]) for step in
+                      (s.step() for _ in range(6))]
+        s.cache.check_invariants()
+    st = shared.stats()
+    assert st["prefix"]["tokens_reused"] == 6     # 1 page + 2-token fork
+    ref = shared.cache.page_refcounts()
+    assert int((ref == 3).sum()) == 1             # the one fully-shared page
+    assert outs["shared"] == outs["oracle"]
+
+
+# --------------------------- chunked prefill --------------------------------
+
+def test_mid_prefill_preempt_then_resume_bit_exact():
+    """Preempt a slot BETWEEN prefill chunks (the new PREFILLING ->
+    PREEMPTED edge): pages are released, the request requeues carrying
+    its prompt, and resume re-prefills through the same chunk jit —
+    the final stream is bit-exact vs an uninterrupted oracle."""
+    prompt = SHARED + [11]                  # pre = 12 tokens = 3 chunks
+    oracle = _sched(slots=1, chunk_pages=1, clock=_StepClock())
+    ra = oracle.submit(list(prompt), max_new_tokens=4)
+    for _ in range(32):
+        if ra.terminal:
+            break
+        oracle.tick()
+    assert ra.state is RequestState.FINISHED
+
+    sched = _sched(slots=1, chunk_pages=1, clock=_StepClock())
+    rb = sched.submit(list(prompt), max_new_tokens=4)
+    preempted = False
+    for _ in range(64):
+        if rb.terminal:
+            break
+        if not preempted and rb.state is RequestState.PREFILLING:
+            sched.preempt(rb.slot)
+            preempted = True
+            # PREFILLING -> PREEMPTED fired; the queue re-enqueues it
+            assert rb.state is RequestState.QUEUED
+        sched.tick()
+    assert preempted, "request never observed mid-prefill"
+    assert rb.state is RequestState.FINISHED
+    assert rb.preemptions == 1
+    assert rb.tokens == ra.tokens
+    sched.cache.check_invariants()
+
+
+def test_retry_after_accounts_for_pending_prefill_chunks():
+    """Satellite 2: the backpressure hint scales with the queued prefill
+    backlog in per-tick chunk budgets — a long queued prompt pushes the
+    hint out by its chunk count, not by one decode step."""
+    sched = _sched(slots=1, chunk_pages=1, queue_depth=2,
+                   clock=_StepClock())
+    sched.add_request([3, 5, 7])            # occupy the only slot
+    sched._step_ewma = 0.01                 # a known decode-step EWMA
+    h0 = sched._retry_after()
+    assert h0 == pytest.approx(0.01)        # nothing pending: plain EWMA
+    sched.submit(SHARED + [11, 13], max_new_tokens=2)   # 13-token prefill
+    h1 = sched._retry_after()
+    assert h1 > h0
+    sched.submit(SHARED + [12, 10], max_new_tokens=2)
+    h2 = sched._retry_after()
+    assert h2 > h1
+    with pytest.raises(AdmissionError) as ei:           # queue full
+        sched.submit(SHARED + [10, 14], max_new_tokens=2)
+    # the typed error folds the chunk backlog in (scaled further by
+    # queue occupancy) — strictly more honest than the plain EWMA
+    assert ei.value.retry_after >= h2 > 0.01
+
+
+# --------------------------- eviction under pressure -------------------------
+
+def test_trie_evicts_orphans_under_pool_pressure():
+    """Orphaned trie pages (cached prefix, no live user) are EVICTABLE
+    capacity: an admission that would otherwise exhaust the pool evicts
+    LRU leaves instead of refusing, and the refcount audit stays clean."""
+    sched = _sched(slots=2, max_len=16, num_pages=8)
+    sa = sched.add_request(SHARED + [11])   # publishes 3 trie pages
+    sched.finish(sa)                        # orphans them (trie-only pins)
+    ref = sched.cache.page_refcounts()
+    assert int((ref == 1).sum()) == 3       # cached, no user
+    # fresh prompts prefill 3 + 3 pages; only 5 are free -> the last
+    # chunk runs the free list dry and must evict an orphan to proceed
+    sched.add_request([21, 22, 23, 24, 25, 26, 27, 28, 29, 21, 22, 23, 24])
+    sched.add_request([31, 32, 33, 34, 35, 36, 37, 38, 31, 32])
+    st = sched.stats()
+    assert st["prefix"]["evicted"] >= 1
+    sched.cache.check_invariants()
+
+
+# --------------------------- chaos: refcount conservation --------------------
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_chaos_refcount_conservation_with_prefix_and_chunks(seed):
+    """Seeded chaos over the prefix-sharing pool with chunked prefill:
+    preempt / kill / evict faults land mid-prefill, yet every request
+    terminates typed and the refcount conservation audit (table counts +
+    trie pins == device refcounts) passes EVERY tick — run_plan raises
+    InvariantViolation otherwise."""
+    cfg, params = _cfg_params()
+    sched = Scheduler(cfg, params, slots=2, max_len=16, page_size=4,
+                      num_pages=8, guard_nan=True, queue_depth=3,
+                      prefix_cache=True, chunk_pages=1,
+                      debug_invariants=True, clock=_StepClock())
+    plan = FaultPlan(ChaosConfig(seed=seed, requests=6, steps=32,
+                                 max_ticks=256, p_evict=0.15))
+    report = run_plan(sched, plan)
+    assert report.ticks < plan.cfg.max_ticks
+    assert sched.drained()
+    assert report.all_terminal, report.states
+    for r in report.submitted:
+        assert r.state in TERMINAL_STATES
+    assert report.invariant_checks >= report.ticks
+
+
+def test_chaos_plans_actually_evict():
+    """The evict fault must fire somewhere across the seed set — a chaos
+    suite that never exercises trie eviction is vacuous."""
+    kinds = set()
+    for seed in SEEDS:
+        kinds |= {f.kind for f in FaultPlan(
+            ChaosConfig(seed=seed, p_evict=0.15)).faults}
+    assert "evict" in kinds
+
+
+# --------------------------- device fast path unchanged ----------------------
+
+def test_zero_steady_state_misses_single_trace_with_prefix_on():
+    """Prefix sharing and chunked prefill are ADMISSION-time machinery:
+    once slots are decoding, repeated steps must never miss the plan
+    cache, and the decode step stays ONE jit trace."""
+    from repro import vx
+    sched = _sched()
+    sched.add_request(SHARED + [11, 13])
+    sched.add_request(SHARED + [12, 10])
+    sched.step()                            # warmup
+    warm = vx.PLANS.stats()
+    for _ in range(4):
+        sched.step()
+    steady = vx.PLANS.stats()
+    assert steady["misses"] == warm["misses"], (warm, steady)
+    assert steady["evictions"] == warm["evictions"], (warm, steady)
+    assert sched._step._cache_size() == 1

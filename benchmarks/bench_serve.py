@@ -465,6 +465,75 @@ def _bench_chunked_admission() -> None:
          slots=slots, max_len=max_len, page_size=ps)
 
 
+def _bench_quantized_pool() -> None:
+    """``serve/quantized_pool`` — the PR 9 memory claim: the int8 page
+    pool (per-page scales, dequant fused into the one page-gather
+    program) serving the SAME mixed trace as the float32 paged runtime.
+    Tracked claims: PEAK CACHE BYTES vs the dense float32 allocation
+    (>= ~4x — the scale side tensor is the only overhead) and vs the
+    float32 paged peak (~4x at equal pages in use), tokens/s parity
+    (the dequant adds zero gather equations and zero launches —
+    tests/test_quant_pool.py gates it), and the bounded-error sweep:
+    worst |quant - float| logit gap over page_size x slots forced-
+    teacher decodes, reported relative to the float logit scale."""
+    cfg = _cfg()
+    params = init_params(cfg, jax.random.key(0))
+    slots = 4
+    max_len = 64 if common.QUICK else 128
+    n_req = 8 if common.QUICK else 24
+    ps = 16
+    trace = _trace(slots, n_req, max_len)
+
+    def replay(kv_quant):
+        sched = Scheduler(cfg, params, slots=slots, max_len=max_len,
+                          page_size=ps, kv_quant=kv_quant)
+        _run_trace(sched, trace, sched.cache.used_cache_bytes)   # warm
+        return _run_trace(sched, trace, sched.cache.used_cache_bytes)
+
+    wall_q, gen_q, peak_q = replay("int8")
+    wall_f, gen_f, peak_f = replay(None)
+    dense_bytes = pytree_nbytes(dec.init_cache(cfg, slots, max_len,
+                                               jnp.float32))
+    tps_q = gen_q / max(wall_q, 1e-9)
+    tps_f = gen_f / max(wall_f, 1e-9)
+
+    # bounded-error sweep: forced-teacher (both pools fed the FLOAT
+    # stream's argmax) so the gap measures quantization, not divergence
+    worst_rel = 0.0
+    for sps, sslots in ((8, 2), (16, 4)):
+        cf = dec.init_paged_cache(cfg, sslots, 64, sps, jnp.float32)
+        cq = dec.init_paged_cache(cfg, sslots, 64, sps, jnp.float32,
+                                  quantize="int8")
+        step = jax.jit(lambda p, c, t: dec.paged_decode_step(
+            p, c, t, cfg, None, fuse=True))
+        tok = jnp.arange(sslots, dtype=jnp.int32) + 3
+        for _ in range(8):
+            lf, cf = step(params, cf, tok)
+            lq, cq = step(params, cq, tok)
+            gap = float(jnp.max(jnp.abs(lf - lq)))
+            scale = max(float(jnp.max(jnp.abs(lf))), 1e-9)
+            worst_rel = max(worst_rel, gap / scale)
+            tok = jnp.argmax(lf, axis=-1).astype(jnp.int32)
+
+    emit("serve/quantized_pool", wall_q * 1e6 / max(gen_q, 1),
+         f"int8_tok_s={tps_q:.1f} f32_tok_s={tps_f:.1f} "
+         f"peak_int8_bytes={peak_q} peak_f32_bytes={peak_f} "
+         f"dense_f32_bytes={dense_bytes} "
+         f"mem_ratio={dense_bytes / max(peak_q, 1):.2f}x "
+         f"vs_paged_f32={peak_f / max(peak_q, 1):.2f}x "
+         f"max_rel_logit_err={worst_rel:.4f} host_noise_bound=true",
+         int8_tok_s=round(tps_q, 2), f32_tok_s=round(tps_f, 2),
+         tok_s_ratio=round(tps_q / max(tps_f, 1e-9), 3),
+         peak_cache_bytes_int8=int(peak_q),
+         peak_cache_bytes_f32=int(peak_f),
+         cache_bytes_dense_f32=int(dense_bytes),
+         mem_ratio=round(dense_bytes / max(peak_q, 1), 3),
+         mem_ratio_vs_paged_f32=round(peak_f / max(peak_q, 1), 3),
+         max_rel_logit_err=round(worst_rel, 5),
+         host_noise_bound=True,
+         requests=n_req, slots=slots, max_len=max_len, page_size=ps)
+
+
 def run() -> None:
     _bench_step()
     _bench_trace()
@@ -472,6 +541,7 @@ def run() -> None:
     _bench_fleet_failover()
     _bench_prefix_share()
     _bench_chunked_admission()
+    _bench_quantized_pool()
 
 
 if __name__ == "__main__":

@@ -49,7 +49,7 @@ def split_kv_step(kvs: list[jax.Array], *, policy=None, shard=None
 
 def gather_paged_kv(pools: list[jax.Array], table: jax.Array,
                     page_size: int, *, policy=None, shard=None,
-                    fused: bool = True) -> list[jax.Array]:
+                    fused: bool = True, scales=None) -> list[jax.Array]:
     """Whole-step paged KV read: every layer's page pool gathered through
     ONE shared page table.
 
@@ -66,29 +66,41 @@ def gather_paged_kv(pools: list[jax.Array], table: jax.Array,
     Returns the gathered interleaved ``(NS, B, pages*page_size, K, 2d)``
     sequences, one per pool; split K/V with :func:`split_kv_step` (still
     one fused FIELD=2 launch for the whole step).
+
+    QUANTIZED pools (int8/fp8) pass their per-page ``(NS, P, K)`` scale
+    tensors as ``scales=`` (one per pool, stacked like the pools) — the
+    dequant rides the same single gather program and the returned
+    sequences are float.
     """
     spec = vx.Paged(page_size=page_size, pages=table.shape[-1], trail=2)
     if fused:
-        return vx.gather_many(spec, pools, table=table, policy=policy,
-                              shard=shard)
-    return [vx.gather(spec, p, table=table, policy=policy, shard=shard)
-            for p in pools]
+        return vx.gather_many(spec, pools, table=table, scales=scales,
+                              policy=policy, shard=shard)
+    if scales is None:
+        scales = [None] * len(pools)
+    return [vx.gather(spec, p, table=table, scales=s, policy=policy,
+                      shard=shard)
+            for p, s in zip(pools, scales)]
 
 
 def append_paged_token(pool: jax.Array, k: jax.Array, v: jax.Array,
-                       table: jax.Array, pos, *, policy=None) -> jax.Array:
+                       table: jax.Array, pos, *, policy=None, scales=None):
     """Write one token's interleaved KV beat through the page table.
 
     pool: (..., P, page_size, H, 2d); k, v: (B, H, d); pos: (B,) int32
     per-slot positions (rows with ``pos < 0`` or an unallocated page are
     dropped — an idle serving slot appends nothing).  One page-routed
     scatter per layer, same coalescing as :func:`append_token`.
+
+    A QUANTIZED pool passes its per-page scales and gets back
+    ``(pool, scales)`` — the beat quantizes on write, the page scale
+    widens monotonically (vx/lower.py).
     """
     beat = interleave_kv(k, v, policy=policy)             # (B, H, 2d)
     spec = vx.Paged(page_size=pool.shape[-3], pages=table.shape[-1],
                     trail=2)
     return vx.scatter(spec, pool, beat, table=table, pos=pos,
-                      policy=policy)
+                      scales=scales, policy=policy)
 
 
 def append_token(cache: jax.Array, k: jax.Array, v: jax.Array, pos,

@@ -85,7 +85,8 @@ def pages_per_seq(max_len: int, page_size: int) -> int:
 
 def init_paged_cache(cfg: ModelConfig, slots: int, max_len: int,
                      page_size: int, dtype, *,
-                     num_pages: int | None = None) -> dict:
+                     num_pages: int | None = None,
+                     quantize: str | None = None) -> dict:
     """Paged cache pytree.
 
     Attention layers store a shared page POOL ``(NS, num_pages,
@@ -109,17 +110,32 @@ def init_paged_cache(cfg: ModelConfig, slots: int, max_len: int,
     it; release/deref push a page back on the free stack only when its
     count hits zero.  The count lives on device because the decode step
     allocates inside jit — a host mirror would drift.
+
+    ``quantize`` ("int8" / "fp8") switches the pool to the QUANTIZED
+    layout: attention pool leaves store int8/fp8 and each gains a
+    per-page-per-head float32 scale side tensor ``scl{i}`` of shape
+    ``(NS, num_pages, K)`` living alongside ``pos{i}`` in ``blocks`` —
+    scales ride the same scan/stack/fork plumbing as the pools, and the
+    scale of physical page ``p`` travels with ``p`` through prefix
+    adoption and CoW forks for free.  Recurrent leaves stay ``dtype``.
     """
     ns = cfg.n_superblocks
     n_seq = pages_per_seq(max_len, page_size)
     if num_pages is None:
         num_pages = slots * n_seq
+    qdt = None
+    if quantize is not None:
+        from repro.core import quant
+        qdt = quant.pool_dtype(quantize)
     blocks: dict[str, Any] = {}
     for i, kind in enumerate(cfg.block_pattern):
         if kind == "attn":
             blocks[f"pos{i}"] = jnp.zeros(
                 (ns, num_pages, page_size, cfg.n_kv_heads, 2 * cfg.hd),
-                dtype)
+                qdt if qdt is not None else dtype)
+            if qdt is not None:
+                blocks[f"scl{i}"] = jnp.zeros(
+                    (ns, num_pages, cfg.n_kv_heads), jnp.float32)
         elif kind == "mamba":
             c = init_mamba_cache(slots, cfg.mamba, dtype)
             blocks[f"pos{i}"] = jax.tree.map(
@@ -151,6 +167,13 @@ def _paged_geometry(cfg: ModelConfig, cache: dict):
     return attn_pos, ps, n_seq
 
 
+def _pool_quantized(cache: dict, attn_pos) -> bool:
+    """Quantized pool detection from the cache pytree itself (the scale
+    side tensors are present) — every paged op switches on this, so a
+    quantized cache flows through the scheduler unannotated."""
+    return bool(attn_pos) and f"scl{attn_pos[0]}" in cache["blocks"]
+
+
 def paged_invariants(cfg: ModelConfig, cache: dict, *,
                      external_ref=None) -> list[str]:
     """Audit the paged cache's STRUCTURAL invariants on a live pytree.
@@ -175,11 +198,19 @@ def paged_invariants(cfg: ModelConfig, cache: dict, *,
         that extent (starved slots may hold FEWER — local degradation —
         but never pages beyond their position);
       * bounds — ``0 <= free_top <= num_pages``, refcounts non-negative,
-        positions within the logical capacity.
+        positions within the logical capacity;
+      * scale liveness (QUANTIZED pools) — every attention layer carries
+        its ``scl{i}`` side tensor (all-or-none: a layer missing scales
+        would gather garbage), scale geometry matches the pool, and
+        every scale is finite and non-negative (the quantize safe-divide
+        never writes NaN; a negative or non-finite scale means a page's
+        beats can no longer be dequantized — the scale-tensor
+        counterpart of refcount conservation).
 
     ONE device fetch (table / free / free_top / pos / ref — the small
-    int state; the pool itself is never pulled), so the check is cheap
-    enough to run per-step under the chaos harness.  The serve wrapper
+    int state — plus the per-page scale tensors when quantized; the pool
+    itself is never pulled), so the check is cheap enough to run
+    per-step under the chaos harness.  The serve wrapper
     (serve/paged_cache.py ``check_invariants``) raises on violations.
     """
     import numpy as np
@@ -257,6 +288,32 @@ def paged_invariants(cfg: ModelConfig, cache: dict, *,
             out.append(f"slot {s}: page at logical index "
                        f"{int(alloc.max())} beyond pos={p} extent "
                        f"{extent}")
+    scl_layers = [i for i in attn_pos if f"scl{i}" in cache["blocks"]]
+    if scl_layers:
+        if len(scl_layers) != len(attn_pos):
+            missing = sorted(set(attn_pos) - set(scl_layers))
+            out.append(f"quantized pool missing scale tensor(s) for "
+                       f"attention layer(s) {missing}")
+        scls = jax.device_get([cache["blocks"][f"scl{i}"]
+                               for i in scl_layers])
+        for i, s in zip(scl_layers, scls):
+            s = np.asarray(s)
+            pool = cache["blocks"][f"pos{i}"]
+            if s.shape[1] != num_pages or s.shape[0] != pool.shape[0] \
+                    or s.shape[2] != pool.shape[3]:
+                out.append(f"layer {i}: scale tensor shape {s.shape} "
+                           f"does not match pool "
+                           f"(NS={pool.shape[0]}, P={num_pages}, "
+                           f"K={pool.shape[3]})")
+                continue
+            if not np.isfinite(s).all():
+                bad = sorted(set(np.nonzero(~np.isfinite(s))[1].tolist()))
+                out.append(f"layer {i}: non-finite scale on page(s) "
+                           f"{bad} — beats there can never be "
+                           f"dequantized")
+            elif (s < 0).any():
+                bad = sorted(set(np.nonzero(s < 0)[1].tolist()))
+                out.append(f"layer {i}: negative scale on page(s) {bad}")
     return out
 
 
@@ -358,12 +415,16 @@ def paged_insert_prefill(cfg: ModelConfig, cache: dict, slot,
     pos = cache["pos"].at[slot].set(length)
     scatter_ids = jnp.where(have, newp, free.shape[0])
     ref = cache["ref"].at[scatter_ids].add(1, mode="drop")
+    quantized = _pool_quantized(cache, attn_pos)
     blocks = dict(cache["blocks"])
     for i, kind in enumerate(cfg.block_pattern):
         st = cache_states[f"pos{i}"]
         leaf = blocks[f"pos{i}"]
         if kind == "attn":
-            kv = st.astype(leaf.dtype)                 # (NS, 1, S|W, K, 2D)
+            # quantized pools keep the prefill states float here and
+            # quantize per page below (casting to the int leaf dtype
+            # would truncate)
+            kv = st.astype(jnp.float32 if quantized else leaf.dtype)
             w = cfg.window_pattern[i]
             if w is not None and kv.shape[2] < state_len:
                 # prefill ring-trimmed the window at state_len: un-roll
@@ -372,7 +433,7 @@ def paged_insert_prefill(cfg: ModelConfig, cache: dict, slot,
                 W = kv.shape[2]
                 nat = jnp.roll(kv, -(state_len % W), axis=2)
                 full = jnp.zeros(kv.shape[:2] + (sp,) + kv.shape[3:],
-                                 leaf.dtype)
+                                 kv.dtype)
                 kv = full.at[:, :, state_len - W:state_len].set(nat)
             elif kv.shape[2] != state_len:
                 raise ValueError(
@@ -382,6 +443,15 @@ def paged_insert_prefill(cfg: ModelConfig, cache: dict, slot,
                 kv = jnp.pad(kv, ((0, 0), (0, 0), (0, sp - kv.shape[2]),
                                   (0, 0), (0, 0)))
             beats = kv[:, 0].reshape(kv.shape[0], n_pg, ps, *kv.shape[3:])
+            if quantized:
+                # per-(superblock, page, head) max-abs scale over the
+                # in-page and feature axes, then quantize the beats
+                from repro.core import quant
+                s = quant.scale_for(beats, leaf.dtype, axis=(2, 4))
+                beats = quant.quantize(beats, s[:, :, None, :, None],
+                                       leaf.dtype)
+                blocks[f"scl{i}"] = blocks[f"scl{i}"].at[
+                    :, scatter_ids].set(s, mode="drop")
             blocks[f"pos{i}"] = leaf.at[:, scatter_ids].set(beats,
                                                             mode="drop")
         else:
@@ -475,6 +545,7 @@ def paged_fork_page(cfg: ModelConfig, cache: dict, slot, logical_idx,
     table = cache["table"].at[slot, logical_idx].set(newp)
     ref = ref.at[jnp.where(have, newp, drop)].add(1, mode="drop")
     dst = jnp.where(have & (src >= 0), newp, drop)
+    rst = jnp.where(have, newp, drop)
     srcc = jnp.clip(src, 0, drop - 1)
     blocks = dict(cache["blocks"])
     for i, kind in enumerate(cfg.block_pattern):
@@ -483,6 +554,19 @@ def paged_fork_page(cfg: ModelConfig, cache: dict, slot, logical_idx,
         leaf = blocks[f"pos{i}"]                  # (NS, P, ps, K, 2D)
         beat = jax.lax.dynamic_index_in_dim(leaf, srcc, axis=1)
         blocks[f"pos{i}"] = leaf.at[:, dst].set(beat[:, 0], mode="drop")
+        if f"scl{i}" in blocks:
+            # the scale forks WITH the page, BEFORE any write lands on
+            # the copy (the monotone-widen rule then evolves the fork's
+            # scale independently of the immutable shared source).  A
+            # sourceless fork (src < 0: fresh empty page) resets the
+            # scale instead — stale garbage would poison the first
+            # widen's s_old.  Reset-then-copy: dst drops when src < 0,
+            # so the reset survives exactly then.
+            scl = blocks[f"scl{i}"]               # (NS, P, K)
+            scl = scl.at[:, rst].set(0.0, mode="drop")
+            srow = jax.lax.dynamic_index_in_dim(scl, srcc, axis=1)
+            blocks[f"scl{i}"] = scl.at[:, dst].set(srow[:, 0],
+                                                   mode="drop")
     if deref_src:
         ref, free, free_top = _deref_push(ref, free, free_top,
                                           jnp.where(src >= 0, src,
@@ -539,6 +623,8 @@ def paged_prefill_chunk(params, cache: dict, tokens: jax.Array,
     seq = n_seq * ps if attn_pos else (1 << 30)
 
     spec = None
+    quantized = _pool_quantized(cache, attn_pos)
+    blocks_in = cache["blocks"]
     if attn_pos:
         # allocate every missing page the chunk touches (same rank-pop as
         # the decode step; exhaustion degrades locally — entries stay -1
@@ -555,6 +641,15 @@ def paged_prefill_chunk(params, cache: dict, tokens: jax.Array,
         free_top = free_top - jnp.sum(have.astype(jnp.int32))
         ref = ref.at[jnp.where(have, newp, free.shape[0])].add(
             1, mode="drop")
+        if quantized:
+            # fresh pages start at scale 0: stale garbage scales would
+            # poison the monotone widen's s_old (and the rescale would
+            # never zero the resident garbage ints)
+            rst = jnp.where(have, newp, free.shape[0])
+            blocks_in = dict(blocks_in)
+            for i in attn_pos:
+                blocks_in[f"scl{i}"] = blocks_in[f"scl{i}"].at[
+                    :, rst].set(0.0, mode="drop")
         table_c = jnp.broadcast_to(row, (C, n_seq))
         wpos = jnp.where(real & (tpos < seq), tpos, -1)
         spec = vx.Paged(page_size=ps, pages=n_seq, trail=2)
@@ -595,9 +690,23 @@ def paged_prefill_chunk(params, cache: dict, tokens: jax.Array,
                     p["attn"], h, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
                     tpos[None], cfg.rope_theta, policy=pol)
                 pool = sb_c[f"pos{i}"]           # (P, ps, K, 2D)
-                pool = vx.scatter(spec, pool, kv[0], table=table_c,
-                                  pos=wpos, policy=pol)
-                full = vx.gather(spec, pool, table=row[None], policy=pol)
+                if quantized:
+                    # quantize-on-write (scale widens monotonically),
+                    # then the attention read dequantizes the slot's
+                    # whole prefix — including the beats just written —
+                    # in the same one-program gather
+                    pool, scl = vx.scatter(spec, pool, kv[0],
+                                           table=table_c, pos=wpos,
+                                           scales=sb_c[f"scl{i}"],
+                                           policy=pol)
+                    full = vx.gather(spec, pool, table=row[None],
+                                     scales=scl, policy=pol)
+                    new_c[f"scl{i}"] = scl
+                else:
+                    pool = vx.scatter(spec, pool, kv[0], table=table_c,
+                                      pos=wpos, policy=pol)
+                    full = vx.gather(spec, pool, table=row[None],
+                                     policy=pol)
                 k_all, v_all = vx.transpose(
                     vx.Segment(n=full.shape[-1], fields=2), full,
                     policy=pol)
@@ -642,12 +751,12 @@ def paged_prefill_chunk(params, cache: dict, tokens: jax.Array,
 
     if cfg.scan_layers:
         _, new_blocks = jax.lax.scan(
-            sb_step, x, (params["blocks"], cache["blocks"]))
+            sb_step, x, (params["blocks"], blocks_in))
     else:
         outs = []
         for sbi in range(cfg.n_superblocks):
             sb = jax.tree.map(lambda a: a[sbi], params["blocks"])
-            cb = jax.tree.map(lambda a: a[sbi], cache["blocks"])
+            cb = jax.tree.map(lambda a: a[sbi], blocks_in)
             x, nb = sb_step(x, (sb, cb))
             outs.append(nb)
         new_blocks = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
@@ -680,6 +789,14 @@ def paged_decode_step(params, cache: dict, token: jax.Array,
     lowers every page gather shard-locally — the pool, sharded over the
     mesh on its page axis, is never sliced globally (the PR 4 invariant
     applied to the serving pool).
+
+    QUANTIZED pools (``scl{i}`` side tensors present, see
+    :func:`init_paged_cache`) dequantize inside the same fused gather
+    program, quantize the appended beat on write (page scale widens
+    monotonically), and attention always reads the pre-append pages
+    plus the fresh FLOAT beat — fused and per-access paths stay
+    bit-identical, and the beat is only quantized for the NEXT step's
+    read.
     """
     from repro.models.transformer import cast_params
     params = cast_params(params, cfg)
@@ -697,6 +814,8 @@ def paged_decode_step(params, cache: dict, token: jax.Array,
     attn_pos, ps, n_seq = _paged_geometry(cfg, cache)
     table, free, free_top = cache["table"], cache["free"], cache["free_top"]
     ref = cache["ref"]
+    quantized = _pool_quantized(cache, attn_pos)
+    blocks_in = cache["blocks"]
     # logical capacity; recurrent-only stacks carry O(1) state, no cap
     seq = n_seq * ps if attn_pos else (1 << 30)
 
@@ -717,6 +836,15 @@ def paged_decode_step(params, cache: dict, token: jax.Array,
         free_top = free_top - jnp.sum(need.astype(jnp.int32))
         ref = ref.at[jnp.where(need, newp, free.shape[0])].add(
             1, mode="drop")
+        if quantized:
+            # freshly allocated pages start at scale 0 (see the chunk
+            # allocator): the widen-on-append then zeroes resident
+            # garbage and the first beat sets the true scale
+            rst = jnp.where(need, newp, free.shape[0])
+            blocks_in = dict(blocks_in)
+            for i in attn_pos:
+                blocks_in[f"scl{i}"] = blocks_in[f"scl{i}"].at[
+                    :, rst].set(0.0, mode="drop")
     # idle slots and full sequences append nothing (dropped scatter rows)
     write_pos = jnp.where(active & (pos < seq), pos, -1)
     spec = (vx.Paged(page_size=ps, pages=n_seq, trail=2)
@@ -728,9 +856,13 @@ def paged_decode_step(params, cache: dict, token: jax.Array,
     if fuse and attn_pos:
         # ONE fused page gather for all layers' pools (stacked over
         # superblocks AND over layers), then ONE fused FIELD=2 split.
+        # Quantized pools stack their scale tensors the same way — the
+        # dequant rides the same single program (zero extra launches).
         gathered = kv_interleaved.gather_paged_kv(
-            [cache["blocks"][f"pos{i}"] for i in attn_pos], table, ps,
-            policy=pol, shard=pool_shard)
+            [blocks_in[f"pos{i}"] for i in attn_pos], table, ps,
+            policy=pol, shard=pool_shard,
+            scales=([blocks_in[f"scl{i}"] for i in attn_pos]
+                    if quantized else None))
         splits = kv_interleaved.split_kv_step(gathered, policy=pol)
         pre_split = {f"pos{i}": splits[a] for a, i in enumerate(attn_pos)}
     beat_pol = (pol.for_elems(B * cfg.n_kv_heads * 2 * cfg.hd)
@@ -749,10 +881,30 @@ def paged_decode_step(params, cache: dict, token: jax.Array,
                     p["attn"], h[:, None], cfg.n_heads, cfg.n_kv_heads,
                     cfg.hd, pos[:, None], cfg.rope_theta, policy=beat_pol)
                 pool = sb_c[f"pos{i}"]                 # (P, ps, K, 2D)
-                pool = vx.scatter(spec, pool, kv[:, 0], table=table,
-                                  pos=write_pos, policy=pol)
-                if fuse:
-                    k_pre, v_pre = sb_pre[f"pos{i}"]   # (B, S, K, D)
+                if quantized and not fuse:
+                    # per-access quantized arm reads PRE-append (like
+                    # the fused pre-gather) and inserts the fresh FLOAT
+                    # beat below — attention then sees bit-identical
+                    # inputs on both paths (the appended beat is only
+                    # quantized for the NEXT step's read, exactly as in
+                    # the fused arm)
+                    full = vx.gather(spec, pool, table=table,
+                                     scales=sb_c[f"scl{i}"], policy=pol,
+                                     shard=pool_shard)  # (B, S, K, 2D)
+                    pre = vx.transpose(
+                        vx.Segment(n=full.shape[-1], fields=2), full,
+                        policy=pol)
+                if quantized:
+                    pool, scl = vx.scatter(spec, pool, kv[:, 0],
+                                           table=table, pos=write_pos,
+                                           scales=sb_c[f"scl{i}"],
+                                           policy=pol)
+                    new_c[f"scl{i}"] = scl
+                else:
+                    pool = vx.scatter(spec, pool, kv[:, 0], table=table,
+                                      pos=write_pos, policy=pol)
+                if fuse or quantized:
+                    k_pre, v_pre = (sb_pre[f"pos{i}"] if fuse else pre)
                     ins = (active[:, None]
                            & (jnp.arange(seq)[None, :] == pos[:, None]))
                     ins = ins[:, :, None, None]
@@ -801,12 +953,12 @@ def paged_decode_step(params, cache: dict, token: jax.Array,
 
     if cfg.scan_layers:
         x, new_blocks = jax.lax.scan(
-            sb_step, x, (params["blocks"], cache["blocks"], pre_split))
+            sb_step, x, (params["blocks"], blocks_in, pre_split))
     else:
         outs = []
         for sbi in range(cfg.n_superblocks):
             sb = jax.tree.map(lambda a: a[sbi], params["blocks"])
-            cb = jax.tree.map(lambda a: a[sbi], cache["blocks"])
+            cb = jax.tree.map(lambda a: a[sbi], blocks_in)
             pb = jax.tree.map(lambda a: a[sbi], pre_split)
             x, nb = sb_step(x, (sb, cb, pb))
             outs.append(nb)

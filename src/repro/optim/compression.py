@@ -20,6 +20,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.core import quant
+
 
 @dataclasses.dataclass(frozen=True)
 class CompressionConfig:
@@ -32,9 +34,9 @@ def init_error_state(params: Any) -> Any:
 
 
 def _int8_roundtrip(g: jax.Array) -> jax.Array:
-    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
-    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
-    return q.astype(jnp.float32) * scale
+    # per-tensor symmetric int8 wire format (shared with the quantized
+    # paged KV pool — repro/core/quant.py)
+    return quant.roundtrip(g, jnp.int8, eps=1e-12)
 
 
 def _topk_roundtrip(g: jax.Array, frac: float) -> jax.Array:

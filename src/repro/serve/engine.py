@@ -196,8 +196,9 @@ class BatchedServer:
         self.slots, self.max_len, self.ctx = slots, max_len, ctx
         # lifecycle_kw passes the hardened-runtime knobs through
         # unchanged (queue_depth / preemption / guard_nan / watchdog /
-        # debug_invariants / clock, plus the PR 8 prefix_cache /
-        # chunk_pages prefill knobs — see serve/scheduler.py)
+        # debug_invariants / clock, the PR 8 prefix_cache / chunk_pages
+        # prefill knobs, and the PR 9 kv_quant quantized-pool selector —
+        # see serve/scheduler.py)
         self.scheduler = Scheduler(
             cfg, params, slots=slots, max_len=max_len, page_size=page_size,
             num_pages=num_pages, cache_dtype=cache_dtype,

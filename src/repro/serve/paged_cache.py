@@ -65,17 +65,20 @@ class PagedCache:
     def __init__(self, cfg: ModelConfig, slots: int, max_len: int,
                  page_size: int, *, cache_dtype=jnp.float32,
                  num_pages: int | None = None,
+                 kv_quant: str | None = None,
                  debug_invariants: bool = False):
         self.cfg = cfg
         self.slots = slots
         self.max_len = max_len
         self.page_size = page_size
+        self.kv_quant = kv_quant
         self.pages_per_seq = dec.pages_per_seq(max_len, page_size)
         self.num_pages = (slots * self.pages_per_seq
                           if num_pages is None else num_pages)
         self.state = dec.init_paged_cache(cfg, slots, max_len, page_size,
                                           cache_dtype,
-                                          num_pages=self.num_pages)
+                                          num_pages=self.num_pages,
+                                          quantize=kv_quant)
         # state donated on every mutation: release/insert return a full
         # new pytree, and the pool is the big buffer — without donation
         # each finish()/admission would pay a pool copy
@@ -141,24 +144,36 @@ class PagedCache:
     def active_tokens(self) -> int:
         return int(jnp.sum(self.state["pos"]))
 
+    @staticmethod
+    def _is_page_leaf(name: str, leaf) -> bool:
+        """Pool leaves (rank-5 page pools) and their per-page scale side
+        tensors (``scl*``) — everything whose axis 1 is the physical page
+        axis and whose bytes scale with pages in use."""
+        return hasattr(leaf, "ndim") and (
+            leaf.ndim == 5 or name.startswith("scl"))
+
     def page_bytes(self) -> int:
-        """Bytes of ONE page across every attention layer's pool."""
+        """Bytes of ONE page across every attention layer's pool — the
+        quantized element type AND the per-page scale side tensor both
+        count (dtype-aware: an int8 pool page is ~1/4 of a float32 one
+        plus its float32 scale row)."""
         total = 0
-        for leaf in self.state["blocks"].values():
-            if hasattr(leaf, "ndim") and leaf.ndim == 5:   # pool leaf
+        for name, leaf in self.state["blocks"].items():
+            if self._is_page_leaf(name, leaf):
                 total += (leaf.size // leaf.shape[1]) * leaf.dtype.itemsize
         return total
 
     def used_cache_bytes(self) -> int:
         """Bytes of cache state actually BACKING live requests: pages in
-        use across all layer pools, the page table, and the recurrent
+        use across all layer pools (including the per-page scale side
+        tensors of a quantized pool), the page table, and the recurrent
         state — the number that scales with active tokens (the pool
         allocation itself is ``num_pages`` pages; size it to the traffic
         peak)."""
         recurrent = sum(
             pytree_nbytes(leaf)
-            for leaf in self.state["blocks"].values()
-            if not (hasattr(leaf, "ndim") and leaf.ndim == 5))
+            for name, leaf in self.state["blocks"].items()
+            if not self._is_page_leaf(name, leaf))
         return (self.pages_in_use() * self.page_bytes()
                 + self.state["table"].size
                 * self.state["table"].dtype.itemsize + recurrent)

@@ -47,6 +47,14 @@ auditor can check refcount CONSERVATION on the live device state:
 Everything here is pure host Python — device mutation goes through the
 ``PagedCache`` wrappers the scheduler calls with what this module
 returns.
+
+QUANTIZED pools (PR 9) need no trie changes: the trie names PHYSICAL
+page ids, and a quantized page's scale row travels with its id — the
+fused gather looks the scale up through the same table the pool is
+read through, ``fork_page`` copies the source page's scale into the
+CoW copy, and ``adopt_prefix`` shares scales implicitly by sharing the
+page.  Sharing stays bit-exact at the INT level (same page, same scale,
+same dequant); only the producer's quantize-on-write was lossy.
 """
 from __future__ import annotations
 

@@ -114,7 +114,11 @@ class Scheduler:
     """Fixed-slot continuous batching over a shared page pool.
 
     ``page_size`` / ``num_pages`` size the pool (``num_pages=None`` fully
-    provisions ``slots * pages_per_seq``); ``temperature`` / ``top_k`` /
+    provisions ``slots * pages_per_seq``); ``kv_quant`` ("int8" / "fp8")
+    selects the QUANTIZED page pool — pages store narrow KV with
+    per-page scales, dequant fused into the one page-gather program
+    (models/decode.py), ~4x cache memory at bounded logit error;
+    ``temperature`` / ``top_k`` /
     ``seed`` configure sampling (greedy by default, deterministic);
     ``prefill_pad`` pads prompts before prefill to bound jit retraces
     (defaults to the page size, so prompt caches always land on whole
@@ -142,6 +146,7 @@ class Scheduler:
     def __init__(self, cfg: ModelConfig, params, *, slots: int,
                  max_len: int, page_size: int | None = None,
                  num_pages: int | None = None, cache_dtype=jnp.float32,
+                 kv_quant: str | None = None,
                  fuse_step: bool = True, temperature: float = 0.0,
                  top_k: int | None = None, seed: int = 0,
                  queue_depth: int | None = None, preemption: bool = True,
@@ -172,7 +177,7 @@ class Scheduler:
         page_size = min(page_size or 16, max_len)
         self.cache = PagedCache(cfg, slots, max_len, page_size,
                                 cache_dtype=cache_dtype,
-                                num_pages=num_pages,
+                                num_pages=num_pages, kv_quant=kv_quant,
                                 debug_invariants=debug_invariants)
         self.temperature, self.top_k = float(temperature), top_k
         vx.warm(2 * cfg.hd, strided=False, fields=(2,),

@@ -78,8 +78,23 @@ def _static_strided(spec: Strided, stride) -> Strided | None:
     return None
 
 
+def _bind_scales(spec: Paged, scales):
+    """Fold the runtime ``scales`` operand into a quantized spec: its
+    dtype becomes ``spec.scale_dtype``, so the quantized program is a
+    DISTINCT plan-cache entry from the float one (spec fields are the
+    cache key).  Validates presence both ways."""
+    if scales is None:
+        if spec.quantized:
+            raise ValueError(f"{spec} is quantized: pass scales=")
+        return spec
+    if spec.scale_dtype is None:
+        return dataclasses.replace(spec, scale_dtype=str(scales.dtype))
+    return spec
+
+
 def gather(spec: AccessSpec, buf: jax.Array, *, stride=None, shift=None,
-           valid=None, table=None, policy: Policy | str | None = None,
+           valid=None, table=None, scales=None,
+           policy: Policy | str | None = None,
            shard: Shard | None = None) -> jax.Array:
     """Dense read through the access described by ``spec``.
 
@@ -97,7 +112,9 @@ def gather(spec: AccessSpec, buf: jax.Array, *, stride=None, shift=None,
       ``(*lead, *batch, pages*ps, *trail)`` sequences.  ``shard=`` (on
       the pool's page axis, ``Shard.axis == -(trail+2)``) gathers
       shard-locally from the owned page block and psum-merges — the
-      sharded pool is never sliced globally.
+      sharded pool is never sliced globally.  A QUANTIZED pool passes
+      its per-page scale tensor as ``scales=`` and returns dequantized
+      float sequences from the same one-program gather.
 
     For the other specs ``shard=`` marks ``buf``'s lane axis as sharded:
     the access lowers to shard-local offset-rebased plans under
@@ -116,7 +133,11 @@ def gather(spec: AccessSpec, buf: jax.Array, *, stride=None, shift=None,
     if isinstance(spec, Paged):
         if table is None:
             raise ValueError("Paged gather needs the page table as table=")
-        return _lower.run("paged.gather", spec.bind(buf.dtype), pol.impl,
+        spec = _bind_scales(spec.bind(buf.dtype), scales)
+        if spec.quantized:
+            return _lower.run("paged.gather", spec, pol.impl,
+                              buf, scales, table, shard=shard)
+        return _lower.run("paged.gather", spec, pol.impl,
                           buf, table, shard=shard)
     if isinstance(spec, Indexed):
         spec = spec.bind(buf.dtype)
@@ -134,7 +155,7 @@ def gather(spec: AccessSpec, buf: jax.Array, *, stride=None, shift=None,
 
 def scatter(spec: AccessSpec, buf: jax.Array, values: jax.Array, *,
             stride=None, shift=None, valid=None, table=None, pos=None,
-            policy: Policy | str | None = None,
+            scales=None, policy: Policy | str | None = None,
             shard: Shard | None = None):
     """Write/merge through the access described by ``spec``.
 
@@ -146,6 +167,9 @@ def scatter(spec: AccessSpec, buf: jax.Array, values: jax.Array, *,
       beat per table row into pool ``buf`` at per-row position ``pos=``
       through the page table ``table=`` (rows with ``pos < 0`` or an
       unallocated page entry are dropped); returns the updated pool.
+      A QUANTIZED pool passes ``scales=`` and gets ``(pool, scales)``
+      back — the beat quantizes on write and the page scale widens
+      monotonically (see vx/lower.py).
     * :class:`Indexed` — raw DROM scatter of ``values`` (``buf`` is unused;
       pass None); returns ``(payload, occupancy)``.
     * :class:`Compact` — expansion (the compaction inverse): ``buf`` is the
@@ -156,7 +180,11 @@ def scatter(spec: AccessSpec, buf: jax.Array, values: jax.Array, *,
     if isinstance(spec, Paged):
         if table is None or pos is None:
             raise ValueError("Paged scatter needs table= and pos=")
-        return _lower.run("paged.scatter", spec.bind(buf.dtype), pol.impl,
+        spec = _bind_scales(spec.bind(buf.dtype), scales)
+        if spec.quantized:
+            return _lower.run("paged.scatter", spec, pol.impl,
+                              buf, scales, values, table, pos, shard=shard)
+        return _lower.run("paged.scatter", spec, pol.impl,
                           buf, values, table, pos, shard=shard)
     if isinstance(spec, Strided):
         spec = spec.bind(buf.dtype)
@@ -239,7 +267,7 @@ def compact(spec: Compact, mask: jax.Array, rows: jax.Array | None = None,
 # batched forms: one launch for a whole step's same-shape accesses
 # ---------------------------------------------------------------------------
 
-def gather_many(specs, bufs, *, table=None,
+def gather_many(specs, bufs, *, table=None, scales=None,
                 policy: Policy | str | None = None,
                 shard: Shard | None = None):
     """Whole-step batched gather — ONE kernel launch, one mask operand.
@@ -256,20 +284,28 @@ def gather_many(specs, bufs, *, table=None,
       pools sharing one runtime ``table=``: the whole-step paged read —
       all pools stack and the heterogeneous per-request lengths (encoded
       in the table rows) fuse into ONE page-granular gather program
-      (``shard=`` supported on the page axis).  Returns one gathered
-      array per pool.
+      (``shard=`` supported on the page axis).  Quantized pools pass
+      their per-page scale tensors as ``scales=`` (stacked the same
+      way); the dequant rides the SAME single program.  Returns one
+      gathered array per pool.
     """
     pol = resolve(policy)
     if isinstance(specs, Paged):
         if table is None:
             raise ValueError("Paged gather_many needs table=")
         pools = list(bufs)
-        spec = specs.bind(pools[0].dtype)
+        scl = None if scales is None else list(scales)
+        spec = _bind_scales(specs.bind(pools[0].dtype),
+                            None if scl is None else scl[0])
         prog = _program.fuse([_lower.lower("paged.gather", spec, pol.impl,
                                            shard)] * len(pools))
         stacked = pools[0] if len(pools) == 1 else jnp.stack(pools)
-        out = _lower.executor(prog, (spec,) * len(pools), shard)(stacked,
-                                                                 table)
+        exe = _lower.executor(prog, (spec,) * len(pools), shard)
+        if scl is not None:
+            sstk = scl[0] if len(scl) == 1 else jnp.stack(scl)
+            out = exe(stacked, sstk, table)
+        else:
+            out = exe(stacked, table)
         return [out] if len(pools) == 1 else [out[a]
                                               for a in range(len(pools))]
     if isinstance(specs, Segment):

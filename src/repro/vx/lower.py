@@ -302,9 +302,58 @@ def _paged_gather(txn: prg.Txn, specs: tuple):
     ``< 0`` read as zeros.  Width-N fused transactions run on a stacked
     pool with ONE shared table — still a single gather (rank-agnostic:
     the page axis is found from the end).
+
+    QUANTIZED specs (``scale_dtype`` set) take the per-page scale side
+    tensor ``(*lead, P, *trail[:-1])`` as an extra operand and dequantize
+    in the SAME program: the scale lookup is a one-hot contraction
+    (iota + eq + dot — zero extra gather eqns, zero extra launches, and a
+    ``-1`` table row one-hots to the zero vector), multiplied into the
+    int page beats before the validity mask.  Masking AFTER the multiply
+    matters for fp8: garbage on never-written pages can be NaN and
+    ``0 * NaN`` would leak through a pre-mask.
     """
     spec = specs[0]
     ps, pages, trail = spec.page_size, spec.pages, spec.trail
+
+    if spec.quantized:
+        def qfn(pool, scales, table):
+            pa = spec.pool_axis(pool.ndim)
+            if pool.shape[pa + 1] != ps:
+                raise ValueError(
+                    f"pool axis {pa + 1} has {pool.shape[pa + 1]} lanes, "
+                    f"spec.page_size is {ps}")
+            if table.shape[-1] != pages:
+                raise ValueError(
+                    f"table has {table.shape[-1]} pages, "
+                    f"spec.pages is {pages}")
+            P = pool.shape[pa]
+            want = pool.shape[:pa] + (P,) + pool.shape[pa + 2:-1]
+            if tuple(scales.shape) != want:
+                raise ValueError(
+                    f"scales shape {scales.shape} != {want} (per page, "
+                    f"per trail dim except the last) for pool "
+                    f"{pool.shape}")
+            valid = table >= 0
+            ints = jnp.take(pool, jnp.maximum(table, 0), axis=pa)
+            # one-hot scale lookup: (*batch, pages, P) @ (P, *lead, *th)
+            oh = (table[..., None] == jnp.arange(P)).astype(scales.dtype)
+            s = jnp.tensordot(oh, jnp.moveaxis(scales, pa, 0), axes=1)
+            bt = table.ndim
+            if pa:   # lead dims back to the front
+                s = jnp.moveaxis(s, tuple(range(bt, bt + pa)),
+                                 tuple(range(pa)))
+            s = jnp.expand_dims(s, pa + bt)     # the in-page axis
+            if trail:
+                s = s[..., None]                # shared last trail dim
+            out = ints.astype(s.dtype) * s
+            vshape = ((1,) * pa + table.shape + (1,) + (1,) * trail)
+            out = jnp.where(valid.reshape(vshape), out,
+                            jnp.zeros_like(out))
+            shape = (out.shape[:pa + bt - 1] + (pages * ps,)
+                     + out.shape[pa + bt + 1:])
+            return out.reshape(shape)
+
+        return qfn
 
     def fn(pool, table):
         pa = spec.pool_axis(pool.ndim)
@@ -332,9 +381,75 @@ def _paged_scatter(txn: prg.Txn, specs: tuple):
     table at per-row position ``pos`` (``pos // ps`` picks the logical
     page, ``pos % ps`` the in-page offset).  Rows with ``pos < 0`` or an
     unallocated table entry are DROPPED (out-of-bounds scatter), so an
-    inactive serving slot appends nothing."""
+    inactive serving slot appends nothing.
+
+    QUANTIZED specs append in three phases with a MONOTONE per-page
+    scale (a page's scale only ever widens — shared CoW prefix pages are
+    immutable, so a reader never races a rescale):
+
+    1. scatter-max the beat's max-abs scale into the page's scale row,
+    2. rescale the page's RESIDENT ints to the widened scale
+       (``ratio = s_old / s_new <= 1``; a fresh page — ``s_old == 0`` —
+       zeroes whatever garbage was resident).  Duplicate rows hitting
+       the same physical page (chunked prefill writes up to ``ps`` beats
+       into one page in a single scatter) write IDENTICAL content here:
+       every read (s_old, s_new, the resident page) predates every
+       write, so last-writer-wins is safe,
+    3. quantize each beat at the final page scale and write it at its
+       distinct ``(page, offset)`` — exactly the float arm's pattern.
+
+    Returns ``(pool, scales)``."""
     spec = specs[0]
     ps, trail = spec.page_size, spec.trail
+
+    if spec.quantized:
+        from repro.core import quant
+
+        def qfn(pool, scales, values, table, pos):
+            pa = spec.pool_axis(pool.ndim)
+            if pa != 0:
+                raise NotImplementedError(
+                    "quantized paged scatter wants the page axis leading "
+                    "(no lead dims): per-lead beat scales have no "
+                    "broadcast rule here")
+            if trail < 1:
+                raise NotImplementedError(
+                    "quantized paged scatter needs >= 1 trailing dim "
+                    "(the max-abs scale reduces over the last)")
+            P = pool.shape[0]
+            qm = quant.qmax(pool.dtype)
+            pos = jnp.asarray(pos, jnp.int32)
+            oob = (pos < 0) | (pos >= spec.pages * ps)
+            page = jnp.where(oob, 0, pos // ps)
+            phys = jnp.take_along_axis(table, page[..., None],
+                                       axis=-1)[..., 0]
+            drop = oob | (phys < 0)
+            physd = jnp.where(drop, P, phys)     # out of bounds -> dropped
+            off = jnp.where(drop, ps, pos % ps)
+            safe = jnp.clip(phys, 0, P - 1)      # reads for dropped rows
+            # 1. widen: beat scale per (*batch, *trail[:-1])
+            s_beat = jnp.max(jnp.abs(values), axis=-1) / qm
+            s_old = jnp.take(scales, safe, axis=0)
+            scales = scales.at[physd].max(jnp.maximum(s_old, s_beat),
+                                          mode="drop")
+            s_fin = jnp.take(scales, safe, axis=0)
+            # 2. rescale resident ints to the widened scale
+            ratio = jnp.where(s_fin > 0,
+                              s_old / jnp.where(s_fin > 0, s_fin, 1.0),
+                              1.0)
+            rb = jnp.expand_dims(ratio, pos.ndim)[..., None]
+            pgs = jnp.take(pool, safe, axis=0)
+            pool = pool.at[physd].set(
+                quant.requantize(pgs.astype(rb.dtype) * rb, pool.dtype),
+                mode="drop")
+            # 3. quantize the beat at the final page scale (safe divide:
+            # an all-zero beat on a fresh page keeps scale 0 and writes
+            # 0 — never NaN, fp8 has NaN encodings)
+            qb = quant.quantize(values, s_fin[..., None], pool.dtype)
+            pool = pool.at[(physd, off)].set(qb, mode="drop")
+            return pool, scales
+
+        return qfn
 
     def fn(pool, values, table, pos):
         pa = spec.pool_axis(pool.ndim)
@@ -557,11 +672,16 @@ def _sharded_paged_gather(txn: prg.Txn, specs: tuple, shard: prg.Shard):
     owned elsewhere become ``-1`` (the replicated builder zeroes them),
     and ONE ``psum`` merges the disjoint per-shard contributions — every
     physical page has exactly one owner, so the psum is a select.  The
-    sharded pool leaf is never sliced globally (the PR 4 invariant)."""
+    sharded pool leaf is never sliced globally (the PR 4 invariant).
+
+    Quantized pools shard the scale side tensor on the SAME page axis
+    (scales are per physical page), so the inner quantized gather runs
+    unchanged on the local page block with its local scales."""
     spec = specs[0]
     inner = _paged_gather(txn, specs)
 
-    def fn(pool, table):
+    def fn(pool, *rest):
+        scales, table = rest if spec.quantized else (None, rest[0])
         pa = spec.pool_axis(pool.ndim)
         P, R = pool.shape[pa], shard.nshards
         if P % R:
@@ -576,9 +696,21 @@ def _sharded_paged_gather(txn: prg.Txn, specs: tuple, shard: prg.Shard):
             out = inner(lp, jnp.where(owned, local, -1))
             return jax.lax.psum(out, shard.axes)
 
+        def qbody(lp, ls, tb):
+            local = tb - _shard_index(shard) * nl
+            owned = (tb >= 0) & (local >= 0) & (local < nl)
+            out = inner(lp, ls, jnp.where(owned, local, -1))
+            return jax.lax.psum(out, shard.axes)
+
+        pool_spec = _axis_spec(pool.ndim, pa, shard)
+        if spec.quantized:
+            g = _shard_map(qbody, shard,
+                           (pool_spec, _axis_spec(scales.ndim, pa, shard),
+                            _replicated_spec(table.ndim)),
+                           _replicated_spec(out_ndim))
+            return g(pool, scales, table)
         g = _shard_map(body, shard,
-                       (_axis_spec(pool.ndim, pa, shard),
-                        _replicated_spec(table.ndim)),
+                       (pool_spec, _replicated_spec(table.ndim)),
                        _replicated_spec(out_ndim))
         return g(pool, table)
 

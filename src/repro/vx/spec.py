@@ -210,17 +210,34 @@ class Paged(AccessSpec):
     rank, dtype — so the compiled program is keyed by page size (one plan
     per geometry, shared by every request and every decode step), never by
     the runtime table.
+
+    ``scale_dtype`` selects the QUANTIZED pool variant: the pool stores
+    int8/fp8 values and a per-page side tensor of symmetric max-abs
+    scales (``(*lead, P, *trail[:-1])`` — per page, per head, shared
+    over the last trail dim) rides every gather/scatter as an extra
+    operand.  Gather dequantizes in the same program (the scale gather
+    is a one-hot contraction — no extra launch); scatter quantizes the
+    beat on write and monotonically WIDENS the page scale (rescaling
+    resident ints), so shared CoW prefix pages never need rewriting.
+    ``scale_dtype`` is a spec field, so the quantized program is a
+    distinct plan-cache entry from the float one automatically.
     """
 
     page_size: int
     pages: int                     # static table width (pages per sequence)
     trail: int = 0                 # trailing dims after the in-page axis
     dtype: str | None = None
+    scale_dtype: str | None = None  # set => quantized pool (+scales operand)
 
     def __post_init__(self):
         object.__setattr__(self, "dtype", _dtype_str(self.dtype))
+        object.__setattr__(self, "scale_dtype", _dtype_str(self.scale_dtype))
         if self.page_size < 1 or self.pages < 1 or self.trail < 0:
             raise ValueError(f"bad paged geometry: {self}")
+
+    @property
+    def quantized(self) -> bool:
+        return self.scale_dtype is not None
 
     @property
     def seq_len(self) -> int:

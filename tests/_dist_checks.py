@@ -385,6 +385,37 @@ def check_paged_pool_shard():
     print("CHECK_OK")
 
 
+def check_quantized_pool_shard():
+    """Sharded QUANTIZED paged gather (PR 9): int8 pool + per-page
+    scales sharded on the page axis, dequant fused shard-locally — the
+    scale one-hot contraction runs against the rebased local table, so
+    the sharded lowering must be bit-exact vs the replicated one across
+    mesh layouts, for full / partial / unallocated tables."""
+    from repro import vx
+    from repro.dist.sharding import make_mesh
+
+    rng = np.random.default_rng(0)
+    ps, pages, P, K, D2 = 4, 6, 16, 2, 8
+    pool = jnp.asarray(rng.integers(-127, 128, (2, P, ps, K, D2)),
+                       jnp.int8)
+    scales = jnp.asarray(rng.uniform(0.01, 2.0, (2, P, K)), jnp.float32)
+    spec = vx.Paged(page_size=ps, pages=pages, trail=2)
+    tables = np.full((3, pages), -1, np.int32)
+    tables[0, :pages] = rng.permutation(P)[:pages]
+    tables[1, :3] = [15, 0, 7]
+    table = jnp.asarray(tables)
+    want = vx.gather(spec, pool, table=table, scales=scales, policy="ref")
+    for shape, axes in [((8,), ("s",)), ((2, 4), ("a", "b")),
+                        ((4, 2), ("a", "b"))]:
+        mesh = make_mesh(shape, axes)
+        shard = vx.Shard(axes=axes, axis=-4, mesh=mesh)
+        got = jax.jit(lambda pl, sc, tb: vx.gather(
+            spec, pl, table=tb, scales=sc, policy="ref",
+            shard=shard))(pool, scales, table)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    print("CHECK_OK")
+
+
 CHECKS = {
     "moe_ep_equivalence": check_moe_ep_equivalence,
     "sharded_train_step": check_sharded_train_step,
@@ -395,6 +426,7 @@ CHECKS = {
     "longctx_launch_gate": check_longctx_launch_gate,
     "sharded_vx_property": check_sharded_vx_property,
     "paged_pool_shard": check_paged_pool_shard,
+    "quantized_pool_shard": check_quantized_pool_shard,
 }
 
 if __name__ == "__main__":

@@ -9,7 +9,8 @@ import pytest
 CHECKS = ["moe_ep_equivalence", "sharded_train_step",
           "pipeline_equivalence", "elastic_reshard", "seq_parallel_decode",
           "longctx_fused_decode", "longctx_launch_gate",
-          "sharded_vx_property", "paged_pool_shard"]
+          "sharded_vx_property", "paged_pool_shard",
+          "quantized_pool_shard"]
 
 
 @pytest.mark.parametrize("check", CHECKS)

@@ -9,6 +9,7 @@ from __future__ import annotations
 import time
 
 import jax
+import numpy as np
 
 # Reduced sweep for CI smoke runs (set by run.py --quick).
 QUICK = False
@@ -35,6 +36,48 @@ def time_jit(fn, *args, iters: int = 20, warmup: int = 3) -> float:
     return times[len(times) // 2]
 
 
-def emit(name: str, us: float, derived: str, **fields) -> None:
+def median_iqr(samples) -> tuple[float, float]:
+    """(median, interquartile range) of a list of repeated measurements.
+
+    The IQR is the spread the row must quote next to any wall-clock
+    number: on a shared runner a wall median whose IQR overlaps the
+    comparator's is NOISE, not a regression signal.
+    """
+    xs = sorted(float(x) for x in samples)
+    if not xs:
+        return 0.0, 0.0
+    return (float(np.percentile(xs, 50)),
+            float(np.percentile(xs, 75) - np.percentile(xs, 25)))
+
+
+def measure(fn, repeats: int = 5) -> tuple[float, float, list[float]]:
+    """Run ``fn() -> float`` (one full measurement, e.g. a trace replay's
+    wall seconds) ``repeats`` times and return (median, iqr, samples).
+    Callers warm their jits BEFORE calling this."""
+    if QUICK:
+        repeats = max(2, repeats // 2)
+    xs = [float(fn()) for _ in range(repeats)]
+    med, iqr = median_iqr(xs)
+    return med, iqr, xs
+
+
+def emit(name: str, us: float, derived: str, *, tracked: str | None = None,
+         noise_bound: tuple | list = (), **fields) -> None:
+    """Print one CSV row and append the structured record.
+
+    ``tracked`` names the field that IS the row's claim (the number the
+    perf trajectory gates on); ``noise_bound`` lists fields reported for
+    context only because they are host-wall measurements whose run-to-run
+    spread (IQR) can swallow the effect.  Every serve row states both
+    explicitly — a ratio that rides under a bare "noise" flag reads like
+    a regression when it is weather.
+    """
+    rec = {"name": name, "us_per_call": round(us, 2), **fields}
+    if tracked is not None:
+        rec["tracked"] = tracked
+        derived = f"{derived} tracked={tracked}"
+    if noise_bound:
+        rec["noise_bound"] = list(noise_bound)
+        derived = f"{derived} noise_bound={','.join(noise_bound)}"
     print(f"{name},{us:.1f},{derived}")
-    RECORDS.append({"name": name, "us_per_call": round(us, 2), **fields})
+    RECORDS.append(rec)

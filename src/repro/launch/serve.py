@@ -50,6 +50,23 @@ def _check_typed(requests) -> list[str]:
     return problems
 
 
+def _print_stats(stats: dict) -> None:
+    """--stats: latency percentiles + speculation acceptance."""
+    lat = stats.get("latency") or {}
+    if lat:
+        print(f"latency: ttft p50={lat.get('ttft_p50_s', 0.0):.4f}s "
+              f"p99={lat.get('ttft_p99_s', 0.0):.4f}s; "
+              f"inter-token p50={lat.get('itl_p50_s', 0.0):.5f}s "
+              f"p99={lat.get('itl_p99_s', 0.0):.5f}s")
+    else:
+        print("latency: no samples recorded")
+    sp = stats.get("speculative")
+    if sp:
+        print(f"speculative: K={sp.get('k', '?')} "
+              f"acceptance={sp['acceptance']:.2f} "
+              f"({sp['accepted']}/{sp['proposed']} drafts accepted)")
+
+
 def _run_chaos_single(sched, args) -> int:
     from repro.serve.chaos import ChaosConfig, FaultPlan, run_plan
     plan = FaultPlan(ChaosConfig(seed=args.chaos, requests=args.requests,
@@ -74,6 +91,8 @@ def _run_chaos_single(sched, args) -> int:
         return EXIT_CHAOS
     print("every request reached a terminal typed state; "
           "invariants never tripped")
+    if args.stats:
+        _print_stats(sched.stats())
     return 0
 
 
@@ -107,6 +126,8 @@ def _run_chaos_fleet(router, args) -> int:
         return EXIT_CHAOS
     print("every request reached a terminal typed state; the fleet "
           "audit held every tick")
+    if args.stats:
+        _print_stats(router.stats())
     return 0
 
 
@@ -158,6 +179,8 @@ def _run_fleet(router, cfg, args) -> int:
               f"{stats['prefix_hits'] + stats['prefix_misses']}), "
               f"{stats['prefix_tokens_reused']} tokens reused, "
               f"{stats['shared_pages']} shared pages fleet-wide")
+    if args.stats:
+        _print_stats(stats)
     problems = _check_typed(reqs)
     if problems:
         print("FLEET FAIL: " + "; ".join(problems))
@@ -180,6 +203,18 @@ def main() -> None:
                          "quantized pages with per-page scales, dequant "
                          "fused into the page-gather program (~4x cache "
                          "memory at bounded logit error)")
+    ap.add_argument("--speculate", type=int, default=1, metavar="K",
+                    help="speculative decode width: a draft model "
+                         "proposes K-1 tokens and the target verifies "
+                         "all K in ONE fused page-gather/verify launch "
+                         "per step (requires greedy sampling)")
+    ap.add_argument("--draft", default=None, metavar="ARCH",
+                    help="draft model arch for --speculate (defaults to "
+                         "--arch; must be attention-only)")
+    ap.add_argument("--stats", action="store_true",
+                    help="print per-request latency percentiles (TTFT / "
+                         "inter-token p50/p99) and speculation "
+                         "acceptance after the run")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy (default)")
     ap.add_argument("--top-k", type=int, default=None)
@@ -229,6 +264,16 @@ def main() -> None:
     params = init_params(cfg, jax.random.key(0))
     guard_nan = args.guard_nan or args.chaos is not None
     kv_quant = None if args.kv_dtype == "float32" else args.kv_dtype
+    spec_kw = {}
+    if args.speculate > 1:
+        if args.temperature > 0.0:
+            raise SystemExit("--speculate requires greedy sampling "
+                             "(drop --temperature)")
+        draft_arch = get_arch(args.draft or args.arch)
+        draft_cfg = draft_arch.smoke if args.smoke else draft_arch.model
+        draft_params = init_params(draft_cfg, jax.random.key(1))
+        spec_kw = dict(speculate=args.speculate, draft_cfg=draft_cfg,
+                       draft_params=draft_params)
 
     if args.replicas > 1:
         from repro.serve.chaos import StepClock
@@ -237,7 +282,8 @@ def main() -> None:
                         queue_depth=args.queue_depth, guard_nan=guard_nan,
                         debug_invariants=args.check_invariants,
                         prefix_cache=args.prefix_cache,
-                        chunk_pages=args.chunk_pages, kv_quant=kv_quant)
+                        chunk_pages=args.chunk_pages, kv_quant=kv_quant,
+                        **spec_kw)
         if args.chaos is not None:
             # a quantized clock + a hard limit it dwarfs: determinism
             fleet_kw.update(clock=StepClock(),
@@ -259,7 +305,7 @@ def main() -> None:
                            prefix_cache=args.prefix_cache,
                            chunk_pages=args.chunk_pages,
                            kv_quant=kv_quant,
-                           watchdog=StepWatchdog())
+                           watchdog=StepWatchdog(), **spec_kw)
     sched = server.scheduler
 
     if args.chaos is not None:
@@ -310,6 +356,8 @@ def main() -> None:
               f"{px['tokens_reused']} tokens reused, "
               f"{stats['shared_pages']} shared pages, "
               f"{px['pages']} trie pages ({px['evicted']} evicted)")
+    if args.stats:
+        _print_stats(stats)
 
 
 if __name__ == "__main__":

@@ -321,7 +321,11 @@ def chunk_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                     q_pos: jax.Array, *,
                     window: int | None = None) -> jax.Array:
     """C-query prefill-chunk attention.  q: (B, C, H, D); caches:
-    (B, S, K, D); ``q_pos``: (C,) absolute positions of the queries.
+    (B, S, K, D); ``q_pos``: (C,) absolute positions of the queries,
+    or (B, C) when each batch row sits at its own offset (the
+    speculative K-token verify step; negative entries mark pad queries
+    that attend to nothing real — their outputs are garbage and must
+    be gated by the caller).
 
     Query ``i`` attends to cache positions ``j <= q_pos[i]`` (causal
     over the already-written cache, which includes the chunk's own
@@ -338,10 +342,16 @@ def chunk_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     s = jnp.einsum("bckgd,bskd->bkgcs", qt, k_cache.astype(q.dtype),
                    preferred_element_type=jnp.float32) * D ** -0.5
     j = jnp.arange(S)
-    mask = j[None, :] <= q_pos[:, None]              # (C, S)
-    if window is not None:
-        mask &= (q_pos[:, None] - j[None, :]) < window
-    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    if q_pos.ndim == 2:                              # (B, C) per-row offsets
+        mask = j[None, None, :] <= q_pos[:, :, None]  # (B, C, S)
+        if window is not None:
+            mask &= (q_pos[:, :, None] - j[None, None, :]) < window
+        s = jnp.where(mask[:, None, None], s, NEG_INF)
+    else:
+        mask = j[None, :] <= q_pos[:, None]          # (C, S)
+        if window is not None:
+            mask &= (q_pos[:, None] - j[None, :]) < window
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
     m = jnp.max(s, axis=-1, keepdims=True)
     p = jnp.exp(s - m)
     l = jnp.sum(p, axis=-1, keepdims=True)

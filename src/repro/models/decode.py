@@ -766,6 +766,317 @@ def paged_prefill_chunk(params, cache: dict, tokens: jax.Array,
             "free_top": free_top, "ref": ref, "blocks": new_blocks}
 
 
+def paged_truncate(cfg: ModelConfig, cache: dict, new_pos) -> dict:
+    """Truncate every slot's position DOWN to ``new_pos`` (B,) and free
+    the pages past the new extent — the draft-cache sync of speculative
+    decoding (the draft ran ahead on tokens the target then rejected).
+
+    Pages at logical indices >= ceil(new_pos / page_size) lose one
+    reference and return to the free stack when their count hits zero.
+    The truncated range must not be prefix-shared ACROSS slots (ids fed
+    to the free-stack push must be distinct) — the serving scheduler
+    only truncates the draft pool, which never runs the prefix trie.
+    Beats left in the surviving tail page beyond ``new_pos`` are
+    unreachable (``eff_len`` masking) and overwritten in place by the
+    next append.  Recurrent leaves are untouched (the draft stack is
+    validated attention-only by the scheduler).  jit-safe."""
+    attn_pos, ps, n_seq = _paged_geometry(cfg, cache)
+    table, free, free_top = cache["table"], cache["free"], cache["free_top"]
+    pos = cache["pos"]
+    new_pos = jnp.minimum(jnp.clip(jnp.asarray(new_pos, jnp.int32),
+                                   0, n_seq * ps), pos)
+    ext = (new_pos + ps - 1) // ps                   # surviving extent
+    idx = jnp.arange(n_seq)[None, :]
+    roll = (table >= 0) & (idx >= ext[:, None])
+    ids = jnp.where(roll, table, -1).reshape(-1)
+    ref, free, free_top = _deref_push(cache["ref"], free, free_top, ids)
+    table = jnp.where(roll, -1, table)
+    return {"pos": new_pos, "table": table, "free": free,
+            "free_top": free_top, "ref": ref, "blocks": cache["blocks"]}
+
+
+def paged_verify_step(params, cache: dict, tokens: jax.Array,
+                      cfg: ModelConfig, ctx, *, n_draft, active=None,
+                      fuse: bool | None = None, pool_shard=None):
+    """Speculative K-token verify over the paged cache.
+
+    ``tokens`` is ``(B, K)`` int32 — column 0 is each slot's CURRENT
+    token (the last committed sample), columns 1..K-1 the draft model's
+    proposals.  ``n_draft`` (B,) in [1, K] is the number of REAL columns
+    per slot (traced: one jit trace serves every mixture of per-request
+    speculation widths, so `vx.PLANS` sees one spec).  Returns
+    ``(logits (B, K, V), out_tok (B, K), commit (B,), new_cache)``:
+    ``out_tok[:, j] = argmax(logits[:, j])`` and ``commit`` is the
+    greedy accept count — 1 (the token column 0 would have produced
+    anyway) plus the number of LEADING drafts that match the argmax of
+    the previous column.  The committed stream ``out_tok[b, :commit]``
+    is exactly the token stream the non-speculative greedy oracle
+    produces (K=1 degenerates to :func:`paged_decode_step` plus argmax).
+
+    Access shape: the K draft positions stack along the BEAT axis of the
+    existing ``vx.Paged`` programs — the append flattens ``(B, K)`` rows
+    into ``(B*K,)`` scatter rows through the SAME paged-scatter arm the
+    chunked prefill uses (table rows repeated K times), and the read is
+    the SAME one fused page-gather + one fused FIELD=2 split as the
+    single-token step: one spec, one gather eqn, one pinned launch,
+    regardless of K.  Attention gathers PRE-append pages and the K fresh
+    beats are inserted as floats (a scatter, not a gather), so fused /
+    per-access / quantized arms all see bit-identical attention inputs,
+    and float pools match the single-token oracle bitwise.
+
+    Rejection rolls back through the page table ONLY: pages allocated
+    this step at logical indices past the accept extent are guaranteed
+    refcount-1 (a slot's pre-step pages never extend past its position
+    — the invariant audit's occupancy rule), so the rollback clears
+    their table entries and pushes them straight back on the free stack
+    — no pool copy, no CoW trigger, and the refcount-conservation audit
+    holds at every step boundary.  Beats written past the accept point
+    (including the surviving tail page's rejected beats) become
+    unreachable stale storage, overwritten before they are ever
+    attendable.  QUANTIZED pools: rejected beats may have widened a
+    surviving tail page's scale (the widen is monotone and never
+    narrows), so speculation on int8/fp8 pools is bounded-error rather
+    than bit-exact — same bound class as the quantized pool itself.
+
+    Recurrent blocks (mamba/xlstm) advance token-by-token under a scan
+    with every intermediate state collected; the state at the accept
+    point is selected post-hoc (a K-way where, no gather), so rejected
+    tokens never contaminate the carry.
+    """
+    from repro.models.transformer import cast_params
+    params = cast_params(params, cfg)
+    if cfg.encoder is not None:
+        raise NotImplementedError("paged serving covers decoder-only "
+                                  "models; use encdec.decode_step")
+    fuse = cfg.step_fusion if fuse is None else fuse
+    pol = cfg.vx_policy
+    B, K = tokens.shape
+    pos = cache["pos"]
+    if active is None:
+        active = jnp.ones((B,), bool)
+    else:
+        active = jnp.asarray(active, bool)
+    n_draft = jnp.clip(jnp.asarray(n_draft, jnp.int32), 1, K)
+    attn_pos, ps, n_seq = _paged_geometry(cfg, cache)
+    table, free, free_top = cache["table"], cache["free"], cache["free_top"]
+    ref = cache["ref"]
+    quantized = _pool_quantized(cache, attn_pos)
+    blocks_in = cache["blocks"]
+    seq = n_seq * ps if attn_pos else (1 << 30)
+    num_pages = free.shape[0] if attn_pos else 0
+
+    offs = jnp.arange(K)[None, :]
+    tpos = pos[:, None] + offs                       # (B, K) positions
+    valid = active[:, None] & (offs < n_draft[:, None])
+    have = newp_grid = None
+    spec = None
+    if attn_pos:
+        # batched multi-page allocation: exactly the pages the oracle
+        # would allocate crossing boundaries in [pos, pos + n_draft - 1]
+        # (fresh pages start at a boundary >= pos, so a degraded missing
+        # mid-page tail is never re-allocated — oracle behavior).
+        # Exhaustion degrades locally, as in the single-token step.
+        idx = jnp.arange(n_seq)[None, :]
+        startp = (pos + ps - 1) // ps
+        lastp = (pos + n_draft - 1) // ps
+        need = (active[:, None] & (idx >= startp[:, None])
+                & (idx <= lastp[:, None]) & (table < 0))
+        flat = need.reshape(-1)
+        rank = jnp.cumsum(flat.astype(jnp.int32)) - flat
+        have_f = flat & (rank < free_top)
+        newp_f = free[jnp.clip(free_top - 1 - rank, 0, num_pages - 1)]
+        have = have_f.reshape(B, n_seq)
+        newp_grid = jnp.where(have, newp_f.reshape(B, n_seq), -1)
+        table = jnp.where(have, newp_grid, table)
+        free_top = free_top - jnp.sum(have_f.astype(jnp.int32))
+        ref = ref.at[jnp.where(have_f, newp_f, num_pages)].add(
+            1, mode="drop")
+        if quantized:
+            rst = jnp.where(have_f, newp_f, num_pages)
+            blocks_in = dict(blocks_in)
+            for i in attn_pos:
+                blocks_in[f"scl{i}"] = blocks_in[f"scl{i}"].at[
+                    :, rst].set(0.0, mode="drop")
+        spec = vx.Paged(page_size=ps, pages=n_seq, trail=2)
+    # K-beat append plumbing: (B*K,) scatter rows through the table rows
+    # repeated K times — the chunked-prefill shape, one program per layer
+    wpos = jnp.where(valid & (tpos < seq), tpos, -1)       # (B, K)
+    wpos_flat = wpos.reshape(-1)
+    table_flat = jnp.repeat(table, K, axis=0) if attn_pos else None
+    qpos = jnp.where(valid, tpos, -1)                      # pad queries
+    b_idx = jnp.arange(B)[:, None]
+    wp_ins = jnp.where(valid & (tpos < seq), tpos, seq)    # drop pads
+
+    x = layers.embed(tokens, params["embed"]).astype(cfg.cdtype)  # (B,K,d)
+
+    pre_split: dict[str, Any] = {}
+    if fuse and attn_pos:
+        gathered = kv_interleaved.gather_paged_kv(
+            [blocks_in[f"pos{i}"] for i in attn_pos], table, ps,
+            policy=pol, shard=pool_shard,
+            scales=([blocks_in[f"scl{i}"] for i in attn_pos]
+                    if quantized else None))
+        splits = kv_interleaved.split_kv_step(gathered, policy=pol)
+        pre_split = {f"pos{i}": splits[a] for a, i in enumerate(attn_pos)}
+    beat_pol = (pol.for_elems(B * K * cfg.n_kv_heads * 2 * cfg.hd)
+                if fuse else pol)
+    ffn_pol = pol.for_elems(B * K * 2 * cfg.d_ff) if fuse else pol
+
+    def _tok_scan_b(step_fn, state0, h, keep_dtype):
+        """Advance B slots' recurrent state over the K tokens, collecting
+        every intermediate state for the post-hoc accept-point select."""
+        def tok(st, inp):
+            ht, on = inp                             # ht (B, d), on (B,)
+            y, st2 = step_fn(ht, st)
+            st2 = _keep_active(st2, st, on)
+            return st2, (st2, jnp.where(on[:, None], y, 0.0))
+        _, (sts, ys) = jax.lax.scan(
+            tok, state0, (jnp.swapaxes(h, 0, 1), jnp.swapaxes(valid, 0, 1)))
+        return sts, jnp.swapaxes(ys, 0, 1).astype(keep_dtype)
+
+    def sb_step(x, inp):
+        sb_p, sb_c, sb_pre = inp
+        new_c = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            p = sb_p[f"pos{i}"]
+            if kind == "attn":
+                h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+                q, k, v, kv = attention.qkv_project(
+                    p["attn"], h, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+                    tpos, cfg.rope_theta, policy=beat_pol)
+                pool = sb_c[f"pos{i}"]               # (P, ps, Kh, 2D)
+                if not fuse:
+                    # per-access oracle reads PRE-append too (then the
+                    # fresh-beat insert below), so every arm sees
+                    # bit-identical attention inputs
+                    full = vx.gather(
+                        spec, pool, table=table,
+                        scales=(sb_c[f"scl{i}"] if quantized else None),
+                        policy=pol, shard=pool_shard)  # (B, S, Kh, 2D)
+                    pre = vx.transpose(
+                        vx.Segment(n=full.shape[-1], fields=2), full,
+                        policy=pol)
+                kv_flat = kv.reshape(B * K, cfg.n_kv_heads, 2 * cfg.hd)
+                if quantized:
+                    pool, scl = vx.scatter(spec, pool, kv_flat,
+                                           table=table_flat,
+                                           pos=wpos_flat,
+                                           scales=sb_c[f"scl{i}"],
+                                           policy=pol)
+                    new_c[f"scl{i}"] = scl
+                else:
+                    pool = vx.scatter(spec, pool, kv_flat,
+                                      table=table_flat, pos=wpos_flat,
+                                      policy=pol)
+                k_pre, v_pre = (sb_pre[f"pos{i}"] if fuse else pre)
+                # insert ALL K fresh beats as floats (a scatter eqn —
+                # the gather gate stays at one); rows past n_draft drop
+                k_all = k_pre.at[b_idx, wp_ins].set(
+                    k.astype(k_pre.dtype), mode="drop")
+                v_all = v_pre.at[b_idx, wp_ins].set(
+                    v.astype(v_pre.dtype), mode="drop")
+                out = attention.chunk_attention(
+                    q, k_all, v_all, qpos, window=cfg.window_pattern[i])
+                x = x + (out.reshape(B, K, cfg.n_heads * cfg.hd)
+                         @ p["attn"]["wo"]).astype(x.dtype)
+                new_c[f"pos{i}"] = pool
+            elif kind == "mamba":
+                h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+                pm = dict(p["mamba"])
+                pm["in_proj"] = pm["in_proj"].reshape(cfg.d_model,
+                                                      2 * cfg.mamba.ed)
+                sts, y = _tok_scan_b(
+                    lambda ht, st: mamba_decode_step(pm, ht, st,
+                                                     cfg.mamba),
+                    sb_c[f"pos{i}"], h, x.dtype)
+                x = x + y
+                new_c[f"pos{i}"] = sts
+            elif kind == "mlstm":
+                h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+                px = dict(p["xl"])
+                px["up"] = px["up"].reshape(cfg.d_model,
+                                            2 * cfg.xlstm.m_inner)
+                sts, y = _tok_scan_b(
+                    lambda ht, st: mlstm_decode_step(px, ht, st,
+                                                     cfg.xlstm),
+                    sb_c[f"pos{i}"], h, x.dtype)
+                x = x + y
+                new_c[f"pos{i}"] = sts
+            elif kind == "slstm":
+                h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+                sts, y = _tok_scan_b(
+                    lambda ht, st: slstm_decode_step(p["slstm"], ht, st,
+                                                     cfg.xlstm),
+                    sb_c[f"pos{i}"], h, x.dtype)
+                x = x + y
+                new_c[f"pos{i}"] = sts
+            if cfg.pos_has_ffn(i):
+                x, _ = _ffn_apply(p, x, cfg, ctx, i, policy=ffn_pol)
+        return x, new_c
+
+    if cfg.scan_layers:
+        x, new_blocks = jax.lax.scan(
+            sb_step, x, (params["blocks"], blocks_in, pre_split))
+    else:
+        outs = []
+        for sbi in range(cfg.n_superblocks):
+            sb = jax.tree.map(lambda a: a[sbi], params["blocks"])
+            cb = jax.tree.map(lambda a: a[sbi], blocks_in)
+            pb = jax.tree.map(lambda a: a[sbi], pre_split)
+            x, nb = sb_step(x, (sb, cb, pb))
+            outs.append(nb)
+        new_blocks = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = layers.unembed(x, head.astype(cfg.cdtype))    # (B, K, V)
+
+    # greedy accept recurrence: column j's argmax is the oracle token at
+    # position pos + j given columns 0..j were fed correctly; commit =
+    # 1 + (# leading drafts matching the previous column's argmax)
+    out_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if K > 1:
+        match = ((tokens[:, 1:] == out_tok[:, :-1])
+                 & (jnp.arange(1, K)[None, :] < n_draft[:, None]))
+        m = jnp.sum(jnp.cumprod(match.astype(jnp.int32), axis=1), axis=1)
+    else:
+        m = jnp.zeros((B,), jnp.int32)
+    commit = jnp.where(active, 1 + m, 0)
+    new_pos = jnp.where(active, jnp.minimum(pos + commit, seq), pos)
+
+    # accept-point select for recurrent leaves: state after `commit`
+    # tokens is stacked index commit-1 (inactive slots carried their old
+    # state through the gated scan, so any index reads it back)
+    ci = jnp.clip(commit, 1, K) - 1
+
+    def _sel(a):                                     # (NS, K, B, ...)
+        out = a[:, 0]
+        for kk in range(1, K):
+            mkk = (ci == kk).reshape((1, -1) + (1,) * (out.ndim - 2))
+            out = jnp.where(mkk, a[:, kk], out)
+        return out
+
+    fixed = dict(new_blocks)
+    for i, kind in enumerate(cfg.block_pattern):
+        if kind != "attn":
+            fixed[f"pos{i}"] = jax.tree.map(_sel, new_blocks[f"pos{i}"])
+    new_blocks = fixed
+
+    if attn_pos:
+        # rollback via the page table only: pages allocated THIS step at
+        # logical indices past the accept extent are refcount-1 by
+        # construction — clear the entries and push them back
+        ext = (new_pos + ps - 1) // ps
+        roll = have & (jnp.arange(n_seq)[None, :] >= ext[:, None])
+        ids = jnp.where(roll, newp_grid, -1).reshape(-1)
+        ref, free, free_top = _deref_push(ref, free, free_top, ids)
+        table = jnp.where(roll, -1, table)
+
+    return logits, out_tok, commit, {
+        "pos": new_pos, "table": table, "free": free,
+        "free_top": free_top, "ref": ref, "blocks": new_blocks}
+
+
 def paged_decode_step(params, cache: dict, token: jax.Array,
                       cfg: ModelConfig, ctx, *, active=None,
                       fuse: bool | None = None,

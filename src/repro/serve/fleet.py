@@ -56,6 +56,8 @@ import enum
 import time
 from typing import Callable, Sequence
 
+import numpy as np
+
 from repro.ft.straggler import StepWatchdog, StragglerConfig
 from repro.models.transformer import ModelConfig
 from repro.serve.lifecycle import AdmissionError, Request, RequestState
@@ -401,4 +403,33 @@ class FleetRouter:
                                          for s in live_tries),
                 shared_pages=sum(s.stats().get("shared_pages", 0)
                                  for s in live_tries))
+        # fleet-wide latency percentiles (PR 10): RAW samples concatenate
+        # across live replicas before taking percentiles — percentiles of
+        # per-replica percentiles are not percentiles
+        ttft: list[float] = []
+        itl: list[float] = []
+        for rep in self.replicas:
+            if rep.alive:
+                samp = rep.sched.latency_samples()
+                ttft.extend(samp["ttft"])
+                itl.extend(samp["itl"])
+        lat: dict[str, float] = {}
+        for name, xs in (("ttft", ttft), ("itl", itl)):
+            if xs:
+                lat[f"{name}_p50_s"] = float(np.percentile(xs, 50))
+                lat[f"{name}_p99_s"] = float(np.percentile(xs, 99))
+        out["latency"] = lat
+        # speculative rollup: acceptance over every verify step fleet-wide
+        proposed = sum(rep.sched.spec_proposed for rep in self.replicas
+                       if rep.alive)
+        accepted = sum(rep.sched.spec_accepted for rep in self.replicas
+                       if rep.alive)
+        if any(rep.sched.speculate > 1 for rep in self.replicas
+               if rep.alive):
+            out["speculative"] = {
+                "k": max(rep.sched.speculate for rep in self.replicas
+                         if rep.alive),
+                "proposed": proposed, "accepted": accepted,
+                "acceptance": accepted / proposed if proposed else 0.0,
+            }
         return out

@@ -139,6 +139,7 @@ class Request:
     max_new_tokens: int | None = None
     priority: int = 0                   # higher = more important
     deadline: float | None = None       # absolute, scheduler clock
+    speculate: int = 1                  # verify width K (1 = no drafts)
     rid: int = dataclasses.field(default_factory=lambda: next(_rid_counter))
     state: RequestState = RequestState.QUEUED
     tokens: list[int] = dataclasses.field(default_factory=list)

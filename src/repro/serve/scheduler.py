@@ -141,6 +141,17 @@ class Scheduler:
     mid-prefill slot by that many chunks between decode steps; the
     legacy ``add_request`` still prefills to completion before
     returning, through the same chunk jit).
+
+    Speculative decode knobs (PR 10): ``speculate=K`` with a
+    ``draft_cfg`` / ``draft_params`` small model turns decode into a
+    K-token verify — the draft proposes K-1 tokens and the target
+    checks all K through ONE fused page-gather/verify program per step
+    (models/decode.paged_verify_step), with rejected tokens rolled
+    back via page table + pos only.  Requires greedy sampling and an
+    attention-only draft.  ``submit(..., speculate=k)`` sets a
+    per-request width (clamped to the scheduler K; ``speculate=1``
+    opts a request out), so speculative and normal slots mix in the
+    same verify launch.
     """
 
     def __init__(self, cfg: ModelConfig, params, *, slots: int,
@@ -154,10 +165,34 @@ class Scheduler:
                  watchdog: StepWatchdog | None = None,
                  debug_invariants: bool = False,
                  prefix_cache: bool = False, chunk_pages: int = 1,
+                 speculate: int = 1,
+                 draft_cfg: ModelConfig | None = None, draft_params=None,
                  clock: Callable[[], float] = time.monotonic):
         if cfg.encoder is not None:
             raise NotImplementedError("paged serving covers decoder-only "
                                       "models")
+        # speculation knobs are validated at construction like sampling:
+        # a bad combination must fail loudly here, not at the first
+        # verify step deep inside a serving loop
+        if speculate < 1:
+            raise ValueError(f"speculate must be >= 1, got {speculate}")
+        if speculate > 1:
+            if draft_cfg is None or draft_params is None:
+                raise ValueError("speculate > 1 requires draft_cfg and "
+                                 "draft_params (the small draft model)")
+            if temperature > 0.0:
+                raise ValueError(
+                    "speculative decode requires greedy sampling "
+                    "(temperature=0): verify accepts a draft iff it equals "
+                    "the target argmax — a sampled target has no single "
+                    "token to match against")
+            if draft_cfg.encoder is not None or \
+                    any(k != "attn" for k in draft_cfg.block_pattern):
+                raise ValueError(
+                    "draft model must be an attention-only decoder: the "
+                    "draft cache rolls back rejected tokens via "
+                    "paged_truncate (page table + pos only) and recurrent "
+                    "draft state cannot be truncated that way")
         # sampling knobs are validated HERE, not inside the jit'd sampler
         # — a bad value must fail loudly at construction, not propagate
         # silently through sample_tokens (top_k <= 0 made the top-k mask
@@ -211,6 +246,48 @@ class Scheduler:
         self.chunk_pages = int(chunk_pages)
         self._prefilling: dict[int, int] = {}   # slot -> prefilled tokens
         self.prefill_chunks = 0
+        # -- speculative decode (PR 10) --------------------------------------
+        # The verify width is STATIC (= ``speculate``): the toks operand is
+        # always (slots, K) and per-slot effective widths ride in as the
+        # traced ``n_draft`` vector, so mixed speculative/normal slots and
+        # replay catch-up all reuse ONE verify trace and ONE set of access
+        # plans (tests assert zero PLANS misses across mixed K).  The
+        # draft model runs in its OWN page pool (fully provisioned — the
+        # draft is small) through the same chunk/step jits as the target.
+        self.speculate = int(speculate)
+        self.draft_cfg, self.draft_params = draft_cfg, draft_params
+        self.draft_cache: PagedCache | None = None
+        if self.speculate > 1:
+            self.draft_cache = PagedCache(
+                draft_cfg, slots, max_len, self.cache.page_size,
+                cache_dtype=cache_dtype,
+                debug_invariants=debug_invariants)
+            vx.warm(2 * draft_cfg.hd, strided=False, fields=(2,),
+                    policy=draft_cfg.vx_policy)
+            self._verify = jax.jit(
+                lambda p, c, t, n, a: dec.paged_verify_step(
+                    p, c, t, cfg, None, n_draft=n, active=a,
+                    fuse=fuse_step),
+                donate_argnums=1)
+            self._verify_finite = jax.jit(
+                lambda lg: jnp.all(jnp.isfinite(lg.astype(jnp.float32)),
+                                   axis=-1))
+            self._dstep = jax.jit(
+                lambda p, c, t, a: dec.paged_decode_step(
+                    p, c, t, draft_cfg, None, active=a, fuse=fuse_step),
+                donate_argnums=1)
+            self._dchunk = jax.jit(
+                lambda p, c, t, s, n: dec.paged_prefill_chunk(
+                    p, c, t, draft_cfg, None, slot=s, count=n),
+                donate_argnums=1)
+            self._dtrunc = jax.jit(
+                lambda c, np_: dec.paged_truncate(draft_cfg, c, np_),
+                donate_argnums=0)
+        self._spec_k = [1] * slots   # per-slot verify width (request K)
+        self._dpos = [0] * slots     # draft tokens consumed (host mirror)
+        self.spec_steps = 0          # verify steps taken
+        self.spec_proposed = 0       # draft tokens proposed to verify
+        self.spec_accepted = 0       # draft tokens accepted by verify
         # prefix sharing is only sound when every layer's state lives in
         # the page pool: recurrent blocks fold the prefix into per-slot
         # state that pages cannot carry, so the trie is gated to
@@ -244,6 +321,15 @@ class Scheduler:
         self._step_ewma = 0.0
         self.nan_failures = 0
         self.preemptions = 0
+        # per-request latency accounting (host clock, zero device work):
+        # TTFT = first decoded token minus submit; inter-token latency is
+        # the per-token gap between appends (a K-token speculative commit
+        # records gap/K for each — that is exactly the latency win the
+        # bench row has to show).  Samples aggregate to p50/p99 in stats().
+        self._submit_t: dict[int, float] = {}     # rid -> submit time
+        self._last_tok_t: dict[int, float] = {}   # rid -> last append time
+        self._ttft: list[float] = []
+        self._itl: list[float] = []
 
     @staticmethod
     def _sample_and_check(logits, keys, *, temperature, top_k):
@@ -260,12 +346,22 @@ class Scheduler:
         return None
 
     def _reserved_pages(self) -> int:
-        """Pages live requests will need for their CURRENT tokens."""
-        return sum(self.cache.pages_needed(len(self.tokens[s]))
+        """Pages live requests will need for their CURRENT tokens — plus
+        the K-token worst case for speculative slots: a verify step may
+        append up to ``_spec_k[s]`` tokens before any rollback, so those
+        pages must be admissible even if every draft is accepted."""
+        return sum(self.cache.pages_needed(len(self.tokens[s])
+                                           + self._spec_k[s] - 1)
                    for s in range(self.slots) if self.active[s])
 
-    def _pages_for(self, toks: Sequence[int]) -> int:
-        return self.cache.pages_needed(max(len(toks) - 1, 1)) + 1
+    def _pages_for(self, toks: Sequence[int], k: int = 1) -> int:
+        return self.cache.pages_needed(max(len(toks) - 1, 1) + k - 1) + 1
+
+    def _req_k(self, req: Request) -> int:
+        """Effective verify width for a request: its own ``speculate``
+        clamped into [1, scheduler K]."""
+        return max(1, min(int(getattr(req, "speculate", 1)),
+                          self.speculate))
 
     def add_request(self, prompt: int | Sequence[int]) -> int:
         """Admit a request immediately (the legacy surface).  ``prompt``
@@ -283,9 +379,10 @@ class Scheduler:
         if len(toks) > self.max_len:
             raise ValueError(f"prompt of {len(toks)} tokens exceeds "
                              f"max_len={self.max_len}")
-        req = Request(prompt=toks)
+        req = Request(prompt=toks, speculate=self.speculate)
         req.arrival_seq = next(self.queue._seq)
         self.requests[req.rid] = req
+        self._submit_t[req.rid] = self.clock()
         try:
             return self._admit_into(req, sync=True)
         except AdmissionError as e:
@@ -315,7 +412,7 @@ class Scheduler:
         # their current tokens plus pages locked in the trie — not just
         # the instantaneous free count.  Trie orphans are evictable, so
         # under pressure LRU leaves are dropped before refusing.
-        need = self._pages_for(toks)
+        need = self._pages_for(toks, self._req_k(req))
         avail = self.cache.num_pages - self._reserved_pages()
         if avail < need:
             avail += self._evict_prefix(need - avail)
@@ -328,6 +425,8 @@ class Scheduler:
         self.tokens[slot] = list(toks)
         self._fed[slot] = 0
         self._pos[slot] = 0
+        self._spec_k[slot] = self._req_k(req)
+        self._dpos[slot] = 0     # draft catches up lazily via the pump
         self._slot_req[slot] = req
         req.slot = slot
         try:
@@ -460,7 +559,8 @@ class Scheduler:
 
     def submit(self, prompt: Sequence[int], *, max_new_tokens: int | None
                = None, priority: int = 0, deadline: float | None = None,
-               ttl: float | None = None) -> Request:
+               ttl: float | None = None,
+               speculate: int | None = None) -> Request:
         """Queue a typed request for admission by ``tick``.
 
         Malformed requests (empty / oversized prompt, non-positive
@@ -473,8 +573,15 @@ class Scheduler:
             deadline = self.clock() + ttl if deadline is None else \
                 min(deadline, self.clock() + ttl)
         req = Request(prompt=list(prompt), max_new_tokens=max_new_tokens,
-                      priority=priority, deadline=deadline)
+                      priority=priority, deadline=deadline,
+                      speculate=self.speculate if speculate is None
+                      else int(speculate))
         self.requests[req.rid] = req
+        self._submit_t[req.rid] = self.clock()
+        if req.speculate < 1:
+            req.to(RequestState.FAILED,
+                   error=f"speculate must be >= 1, got {req.speculate}")
+            return req
         if not req.prompt:
             req.to(RequestState.FAILED, error="empty prompt")
             return req
@@ -547,6 +654,8 @@ class Scheduler:
     def _release_slot(self, slot: int) -> None:
         if self.active[slot]:
             self.cache.release(slot)
+            if self.draft_cache is not None:
+                self.draft_cache.release(slot)
         if self.prefix is not None:
             self.prefix.release(slot)
         self._prefilling.pop(slot, None)
@@ -554,20 +663,42 @@ class Scheduler:
         self.tokens[slot] = []
         self._fed[slot] = 0
         self._pos[slot] = 0
+        self._spec_k[slot] = 1
+        self._dpos[slot] = 0
         self._slot_req[slot] = None
 
     # -- decode -------------------------------------------------------------
     def step(self) -> list[int]:
-        """Advance every ACTIVE slot one token; idle slots report -1.
+        """Advance every ACTIVE slot; idle slots report -1.
 
         Slots behind their replay cursor (resumed after preemption) feed
         the next REPLAYED token and discard the sampled output until
         they catch up — same jit'd step, zero retraces.  Mid-prefill
         slots are masked out exactly like idle ones (they occupy a slot
-        but decode nothing until their chunks complete)."""
+        but decode nothing until their chunks complete).  When any slot
+        speculates this step the whole active set goes through the ONE
+        fused K-wide verify program instead (``_step_speculative``):
+        normal slots ride along at width 1, so mixed speculative/normal
+        batches still pay one launch per step."""
         t0 = time.perf_counter()
         decoding = [self.active[s] and s not in self._prefilling
                     for s in range(self.slots)]
+        if self.speculate > 1 and any(
+                decoding[s] and self._spec_k[s] > 1
+                for s in range(self.slots)):
+            out = self._step_speculative(decoding)
+        else:
+            out = self._step_plain(decoding)
+        self.cache._maybe_check()
+        dt = time.perf_counter() - t0
+        self._step_ewma = dt if self._step_ewma == 0.0 else \
+            0.8 * self._step_ewma + 0.2 * dt
+        if self.watchdog is not None:
+            self.watchdog.observe(dt)
+        return out
+
+    def _step_plain(self, decoding: list[bool]) -> list[int]:
+        """The single-token decode step (pre-PR 10 semantics, verbatim)."""
         cur = jnp.asarray([self.tokens[s][self._fed[s]]
                            if decoding[s] else 0
                            for s in range(self.slots)], jnp.int32)
@@ -592,6 +723,7 @@ class Scheduler:
             nxt = np.asarray(self._sample(logits, sub))
             fin = None                 # ONE host sync for all slots
         out = []
+        t_now = self.clock()
         seq_cap = self.cache.pages_per_seq * self.cache.page_size
         for s in range(self.slots):
             t = int(nxt[s])
@@ -610,14 +742,177 @@ class Scheduler:
             else:
                 self.tokens[s].append(t)
                 self._fed[s] += 1
+                self._note_tokens(s, t_now, 1)
             out.append(t)
-        self.cache._maybe_check()
-        dt = time.perf_counter() - t0
-        self._step_ewma = dt if self._step_ewma == 0.0 else \
-            0.8 * self._step_ewma + 0.2 * dt
-        if self.watchdog is not None:
-            self.watchdog.observe(dt)
         return out
+
+    def _step_speculative(self, decoding: list[bool]) -> list[int]:
+        """One K-wide verify step over the whole active set.
+
+        Per slot the verify batch is: up to ``_spec_k`` recorded tokens
+        when the slot is behind its replay cursor (recorded tokens are
+        perfect drafts under greedy decode — replay catches up K tokens
+        per launch), otherwise the head token plus ``_spec_k - 1``
+        draft-model tokens from :meth:`_draft_pump`.  Commit ``c``
+        advances the cursor / appends exactly the tokens the
+        non-speculative oracle would produce; rejected pages were
+        already rolled back inside the verify jit (page table + pos
+        only).  The draft cache is then truncated to the committed
+        position the same page-table way."""
+        K = self.speculate
+        toks = np.zeros((self.slots, K), np.int32)
+        nd = np.ones((self.slots,), np.int32)
+        recorded = [0] * self.slots
+        need = [0] * self.slots
+        for s in range(self.slots):
+            if not decoding[s]:
+                continue
+            k = self._spec_k[s]
+            req = self._slot_req[s]
+            if req is not None and req.max_new_tokens is not None:
+                # a commit may append at most the request's remaining
+                # budget: K columns past it would overshoot max_new_tokens
+                # by up to K-1 tokens vs the non-speculative oracle
+                behind = len(self.tokens[s]) - 1 - self._fed[s]
+                done = len(self.tokens[s]) - len(req.prompt)
+                rem = max(req.max_new_tokens - done, 0)
+                k = max(1, min(k, behind + rem))
+            avail = len(self.tokens[s]) - self._fed[s]
+            r = min(avail, k)
+            toks[s, :r] = self.tokens[s][self._fed[s]:self._fed[s] + r]
+            recorded[s] = r
+            nd[s] = r
+            if r == avail and k > r:
+                need[s] = k - r          # top up with draft-model tokens
+        if any(need):
+            drafts = self._draft_pump(need)
+            for s in range(self.slots):
+                if need[s]:
+                    got = drafts[s]
+                    toks[s, recorded[s]:recorded[s] + len(got)] = got
+                    nd[s] = recorded[s] + len(got)
+        act = jnp.asarray(decoding)
+        logits, o, commit, self.cache.state = self._verify(
+            self.params, self.cache.state, jnp.asarray(toks),
+            jnp.asarray(nd), act)
+        if self._taint is not None:      # chaos-only NaN injection hook
+            mask = jnp.asarray(self._taint)[:, None, None]
+            logits = jnp.where(mask, jnp.float32(jnp.nan),
+                               logits.astype(jnp.float32)).astype(
+                                   logits.dtype)
+            self._taint = None
+        self.last_logits = logits[:, 0, :]
+        if self.guard_nan:
+            fin = np.asarray(self._verify_finite(logits))   # (B, K)
+        else:
+            fin = None
+        o_np, cm = np.asarray(o), np.asarray(commit)
+        out = []
+        t_now = self.clock()
+        seq_cap = self.cache.pages_per_seq * self.cache.page_size
+        drafted = False
+        for s in range(self.slots):
+            if not decoding[s]:
+                out.append(-1)
+                continue
+            c = max(int(cm[s]), 1)
+            if fin is not None and not np.all(fin[s, :c]):
+                self.nan_failures += 1
+                self.fail_slot(s, "non-finite logits")
+                out.append(-1)
+                continue
+            fresh = 0
+            for j in range(c):
+                if self._fed[s] < len(self.tokens[s]) - 1:
+                    self._fed[s] += 1    # replay: record already has it
+                else:
+                    self.tokens[s].append(int(o_np[s, j]))
+                    self._fed[s] += 1
+                    fresh += 1
+            self._pos[s] = min(self._pos[s] + c, seq_cap)
+            if need[s]:
+                drafted = True
+                self.spec_proposed += need[s]
+                self.spec_accepted += max(0, c - recorded[s])
+            if fresh:
+                self._note_tokens(s, t_now, fresh)
+            out.append(int(o_np[s, c - 1]))
+        self.spec_steps += 1
+        if drafted:
+            # rejected draft-cache tail rolls back via page table + pos;
+            # a fully-accepted step leaves the draft one token behind,
+            # which the next pump's catch-up singles cover
+            self.draft_cache.state = self._dtrunc(
+                self.draft_cache.state, jnp.asarray(self._pos, jnp.int32))
+            self.draft_cache._maybe_check()
+            for s in range(self.slots):
+                self._dpos[s] = min(self._dpos[s], self._pos[s])
+        return out
+
+    def _draft_pump(self, need: list[int]) -> list[list[int]]:
+        """Produce ``need[s]`` draft tokens per slot from the draft model.
+
+        First catch the draft cache up to the slot's recorded tokens —
+        bulk full pages through the ONE draft chunk jit (a freshly
+        admitted or migrated slot replays its whole prompt here), then
+        per-token singles — then autoregress the drafts by feeding the
+        head token and the draft's own argmaxes.  Singles are batched
+        across slots through one draft step jit with an active mask, so
+        the steady state (deficit <= 1) costs ``need`` draft launches
+        regardless of slot count."""
+        dc = self.draft_cache
+        ps = dc.page_size
+        for s in range(self.slots):
+            if need[s] <= 0:
+                continue
+            target = len(self.tokens[s]) - 1     # tokens before the head
+            while self._dpos[s] % ps == 0 and \
+                    target - self._dpos[s] >= ps:
+                tok = jnp.asarray(
+                    self.tokens[s][self._dpos[s]:self._dpos[s] + ps],
+                    jnp.int32)
+                dc.state = self._dchunk(self.draft_params, dc.state, tok,
+                                        jnp.int32(s), jnp.int32(ps))
+                self._dpos[s] += ps
+        drafts: list[list[int]] = [[] for _ in range(self.slots)]
+        pend = {s for s in range(self.slots) if need[s] > 0}
+        while pend:
+            feed = np.zeros((self.slots,), np.int32)
+            act = np.zeros((self.slots,), bool)
+            for s in pend:
+                i = self._dpos[s]
+                feed[s] = self.tokens[s][i] if i < len(self.tokens[s]) \
+                    else drafts[s][i - len(self.tokens[s])]
+                act[s] = True
+            lg, dc.state = self._dstep(self.draft_params, dc.state,
+                                       jnp.asarray(feed), jnp.asarray(act))
+            nxt = np.asarray(jnp.argmax(lg, axis=-1))
+            for s in list(pend):
+                keep = self._dpos[s] >= len(self.tokens[s]) - 1
+                self._dpos[s] += 1
+                if keep:
+                    drafts[s].append(int(nxt[s]))
+                    if len(drafts[s]) >= need[s]:
+                        pend.discard(s)
+        dc._maybe_check()
+        return drafts
+
+    def _note_tokens(self, slot: int, t_now: float, n: int) -> None:
+        """Record latency samples for ``n`` tokens appended to ``slot``:
+        TTFT on the first decoded token, per-token gaps after (a K-token
+        speculative commit records gap/K per token)."""
+        req = self._slot_req[slot]
+        if req is None:
+            return
+        rid = req.rid
+        last = self._last_tok_t.get(rid)
+        if last is None:
+            t0 = self._submit_t.get(rid)
+            if t0 is not None:
+                self._ttft.append(max(t_now - t0, 0.0))
+        else:
+            self._itl.append(max(t_now - last, 0.0) / n)
+        self._last_tok_t[rid] = t_now
 
     # -- lifecycle pump ------------------------------------------------------
     def tick(self) -> list[Request]:
@@ -673,16 +968,26 @@ class Scheduler:
         if self.preemption and any(self.active):
             ps = self.cache.page_size
             n_seq = self.cache.pages_per_seq
-            crossers = [s for s in range(self.slots) if self.active[s]
-                        and s not in self._prefilling
-                        and self._pos[s] % ps == 0
-                        and self._pos[s] // ps < n_seq]
-            short = len(crossers) - self.cache.free_pages()
+
+            def _step_new_pages(s: int) -> int:
+                # pages this step may allocate for slot s: a plain slot
+                # crosses at most one boundary, a speculative slot may
+                # append up to _spec_k tokens before rollback
+                p = self._pos[s]
+                first = -(-p // ps)
+                last = min((p + self._spec_k[s] - 1) // ps, n_seq - 1)
+                return max(0, last - first + 1)
+
+            crossers = {s: _step_new_pages(s) for s in range(self.slots)
+                        if self.active[s] and s not in self._prefilling
+                        and _step_new_pages(s) > 0}
+            short = sum(crossers.values()) - self.cache.free_pages()
             if short > 0:
                 self._evict_prefix(short)
             for _ in range(self.slots):
-                live = [s for s in crossers if self.active[s]]
-                if len(live) <= self.cache.free_pages():
+                live = {s: n for s, n in crossers.items()
+                        if self.active[s]}
+                if sum(live.values()) <= self.cache.free_pages():
                     break
                 victim = self._victim()
                 if victim is None or (victim in live and len(live) == 1):
@@ -774,6 +1079,8 @@ class Scheduler:
             self.tokens[s] = []
             self._fed[s] = 0
             self._pos[s] = 0
+            self._spec_k[s] = 1
+            self._dpos[s] = 0
             self._slot_req[s] = None
         self._prefilling.clear()   # cursors die with the replica's pool
         out.extend(self.migrate_queued())
@@ -797,6 +1104,32 @@ class Scheduler:
                 np.sum(self.cache.page_refcounts() > 1))
         if self.watchdog is not None:
             out["watchdog_breaches"] = self.watchdog.breaches
+        out["latency"] = self.latency_stats()
+        if self.speculate > 1:
+            out["speculative"] = {
+                "k": self.speculate,
+                "verify_steps": self.spec_steps,
+                "proposed": self.spec_proposed,
+                "accepted": self.spec_accepted,
+                "acceptance": (self.spec_accepted / self.spec_proposed
+                               if self.spec_proposed else 0.0),
+            }
+        return out
+
+    def latency_samples(self) -> dict[str, list[float]]:
+        """Raw per-request latency samples (seconds) — the fleet router
+        concatenates these across replicas before taking percentiles
+        (percentiles of percentiles are not percentiles)."""
+        return {"ttft": list(self._ttft), "itl": list(self._itl)}
+
+    def latency_stats(self) -> dict[str, float]:
+        """TTFT and inter-token latency p50/p99 over every token this
+        scheduler has decoded (seconds, host clock)."""
+        out: dict[str, float] = {}
+        for name, xs in (("ttft", self._ttft), ("itl", self._itl)):
+            if xs:
+                out[f"{name}_p50_s"] = float(np.percentile(xs, 50))
+                out[f"{name}_p99_s"] = float(np.percentile(xs, 99))
         return out
 
     # -- reclamation --------------------------------------------------------
